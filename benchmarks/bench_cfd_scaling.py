@@ -1,0 +1,47 @@
+"""Paper Fig. 7 — CFD intra-instance scaling.
+
+Measured: single-device solver step cost on this host (real).
+Modeled: speedup/efficiency vs N_ranks from the calibrated cost model
+(one physical core here, so multi-rank wall time cannot be *measured*; the
+model is calibrated to the paper's own curve and to the measured t_step_1 —
+DESIGN.md §2 'assumptions that changed').
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.cfd import solver
+from repro.cfd.grid import GridConfig, build_geometry
+from repro.core.plan import CostModel
+from repro.core.scaling_model import calibrate_to_paper, fig7_rows
+
+
+def run() -> None:
+    cfg = GridConfig(res=12, dt=0.006, poisson_iters=60)
+    geom = build_geometry(cfg)
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(cfg, geom)
+    jet = jnp.float32(0.0)
+
+    t_step = time_fn(lambda s: solver.step(cfg, ga, s, jet)[0], st, iters=10)
+    emit("cfd_step_single_device", t_step * 1e6,
+         f"grid={cfg.nx}x{cfg.ny};poisson_iters={cfg.poisson_iters}")
+
+    t_poisson = time_fn(
+        lambda s: __import__("repro.cfd.poisson", fromlist=["solve"]).solve(
+            solver.divergence(s.u, s.v, cfg) / cfg.dt, cfg.dx, cfg.dy,
+            iters=cfg.poisson_iters), st, iters=10)
+    emit("cfd_poisson_solve", t_poisson * 1e6,
+         f"share_of_step={t_poisson / t_step:.2f}")
+
+    # paper-calibrated scaling curve, re-anchored at the measured t_step_1
+    m = dataclasses.replace(calibrate_to_paper(), t_step_1=t_step)
+    for r in fig7_rows(m, ranks=(1, 2, 4, 8, 16)):
+        emit(f"cfd_scaling_nranks{r['n_ranks']}",
+             m.t_step(r["n_ranks"]) * 1e6,
+             f"speedup={r['speedup']:.2f};efficiency={r['efficiency']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

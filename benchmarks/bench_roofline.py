@@ -1,0 +1,36 @@
+"""Roofline summary from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+One CSV row per (arch x shape) on the single-pod mesh: the three terms,
+dominant bottleneck, and the useful-compute ratio.
+"""
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run() -> None:
+    files = sorted(glob.glob(str(ART / "*__pod16x16.json")))
+    if not files:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        r = json.loads(Path(f).read_text())
+        if r.get("status") != "ok":
+            emit(f"roofline_{Path(f).stem}", 0.0, "status=fail")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]["peak_per_device_bytes"] / 2 ** 30
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             rl["bound_s"] * 1e6 if "bound_s" in rl else
+             max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6,
+             f"dom={rl['dominant']};C_s={rl['compute_s']:.3f};"
+             f"M_s={rl['memory_s']:.3f};X_s={rl['collective_s']:.3f};"
+             f"useful={rl['useful_ratio']:.2f};mem_GiB={mem:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV output."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw):
+    """Median wall time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

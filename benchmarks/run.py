@@ -1,0 +1,31 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cfd_scaling, bench_hybrid, bench_io,
+                            bench_kernels, bench_roofline, bench_rollout)
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig7_cfd_scaling", bench_cfd_scaling.run),
+        ("table1_hybrid", bench_hybrid.run),
+        ("table2_io", bench_io.run),
+        ("fig10_components", bench_rollout.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

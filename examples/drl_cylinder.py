@@ -1,0 +1,62 @@
+"""End-to-end driver: PPO learns active flow control on the cylinder
+(the paper's Fig. 5 experiment at reduced scale).
+
+Defaults fit a single CPU core in ~20-40 min: coarse grid, short episodes.
+Increase --res/--episodes to approach the paper's setup.
+
+    PYTHONPATH=src python examples/drl_cylinder.py --episodes 60
+"""
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.cfd.env import EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl.ppo import PPOConfig
+from repro.drl.train import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=60)
+    ap.add_argument("--n-envs", type=int, default=4)
+    ap.add_argument("--res", type=int, default=8)
+    ap.add_argument("--actions", type=int, default=40)
+    ap.add_argument("--steps-per-action", type=int, default=25)
+    ap.add_argument("--warmup", type=float, default=20.0)
+    ap.add_argument("--out", default="artifacts/drl_cylinder.json")
+    args = ap.parse_args()
+
+    cfg = TrainConfig(
+        env=EnvConfig(
+            grid=GridConfig(res=args.res, dt=0.01, poisson_iters=50),
+            steps_per_action=args.steps_per_action,
+            actions_per_episode=args.actions,
+            warmup_time=args.warmup,
+        ),
+        ppo=PPOConfig(lr=3e-4, epochs=6, minibatches=4,
+                      entropy_coef=0.005),
+        n_envs=args.n_envs,
+        episodes=args.episodes,
+    )
+    hist, params = train(cfg)
+    cd0 = None
+    # report drag reduction: mean CD of last episodes vs uncontrolled CD0
+    first5 = float(np.mean(hist["cd"][:5]))
+    last5 = float(np.mean(hist["cd"][-5:]))
+    r_first = float(np.mean(hist["reward"][:5]))
+    r_last = float(np.mean(hist["reward"][-5:]))
+    print(f"\nreturn: {r_first:+.2f} -> {r_last:+.2f}")
+    print(f"tail CD: {first5:.3f} -> {last5:.3f} "
+          f"({100*(last5-first5)/first5:+.1f}% change; paper: -8%)")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({k: np.asarray(v).tolist()
+                               for k, v in hist.items()}, indent=1))
+    print(f"history -> {out}")
+
+
+if __name__ == "__main__":
+    main()

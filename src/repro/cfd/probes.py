@@ -1,0 +1,14 @@
+"""149-probe pressure sampler (bilinear interpolation at fixed positions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cfd.grid import Geometry
+
+
+def sample_pressure(geom_probe_ij, p) -> jnp.ndarray:
+    """p: (ny, nx) cell-centered pressure -> (149,) probe values."""
+    coords = jnp.asarray(geom_probe_ij, jnp.float32).T  # (2, 149) [row, col]
+    return jax.scipy.ndimage.map_coordinates(p, coords, order=1,
+                                             mode="nearest")

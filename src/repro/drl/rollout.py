@@ -1,0 +1,45 @@
+"""Episode rollout: lax.scan over actuation periods, vmapped over N_envs."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.drl import networks
+
+
+class Trajectory(NamedTuple):
+    obs: jnp.ndarray      # (T, obs_dim)
+    act: jnp.ndarray      # (T, act_dim)
+    logp: jnp.ndarray     # (T,)
+    reward: jnp.ndarray   # (T,)
+    cd: jnp.ndarray       # (T,)
+    cl: jnp.ndarray       # (T,)
+    last_obs: jnp.ndarray  # (obs_dim,)
+
+
+def rollout_episode(env_step_fn, params, st0, obs0, key, length: int
+                    ) -> Tuple[object, Trajectory]:
+    """env_step_fn: (state, action_scalar) -> (state, EnvOutput)."""
+
+    def step(carry, k):
+        st, obs = carry
+        act, logp = networks.sample_action(params, obs, k)
+        st, out = env_step_fn(st, act[0])
+        return (st, out.obs), (obs, act, logp, out.reward, out.cd, out.cl)
+
+    keys = jax.random.split(key, length)
+    (st, last_obs), (obs, act, logp, rew, cd, cl) = jax.lax.scan(
+        step, (st0, obs0), keys)
+    return st, Trajectory(obs=obs, act=act, logp=logp, reward=rew,
+                          cd=cd, cl=cl, last_obs=last_obs)
+
+
+def rollout_batch(env_step_fn, params, st0_b, obs0_b, key, length: int,
+                  n_envs: int):
+    """vmapped over the environment axis (the paper's N_envs parallelism)."""
+    keys = jax.random.split(key, n_envs)
+    return jax.vmap(
+        lambda st, obs, k: rollout_episode(env_step_fn, params, st, obs, k,
+                                           length))(st0_b, obs0_b, keys)

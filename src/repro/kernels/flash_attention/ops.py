@@ -1,0 +1,44 @@
+"""jit'd wrapper: GQA-aware flash attention entry point for models/attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    """q: (B, S, H, dh); k, v: (B, S, Hkv, dh) -> (B, S, H, dh).
+
+    GQA is handled by broadcasting KV heads to the query head count before the
+    kernel (the kernel itself is MHA-shaped; a GQA-native kernel that keeps KV
+    virtual is a known further optimization, noted in EXPERIMENTS.md §Perf).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal,
+                               sliding_window=sliding_window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

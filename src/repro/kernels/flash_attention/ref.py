@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (naive softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sliding_window: int = 0):
+    """q, k, v: (BH, S, dh).  fp32 softmax, same masking as the kernel."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * dh ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if sliding_window:
+        mask = mask & (kpos > qpos - sliding_window)
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

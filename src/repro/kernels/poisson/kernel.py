@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: VMEM-resident red-black SOR slab smoother.
+
+TPU-native design (DESIGN.md §5): the pressure grid is split into x-slabs;
+each program instance loads its slab (plus one halo column from each
+neighbour) into VMEM, runs ``inner_iters`` red-black SOR sweeps entirely
+in VMEM (no HBM round-trips between sweeps), and writes the slab back.
+Across slabs this is a block-Jacobi outer iteration — the outer loop (and
+halo refresh) lives in ops.py.
+
+Neighbour slabs are delivered with the 3-index-map trick: the same array is
+passed three times with index maps i, i-1, i+1 (clamped), so every block
+stays block-aligned (no unblocked indexing needed).  Boundary conditions
+(Neumann inlet/walls, Dirichlet-0 outlet) are applied inside the kernel
+based on program_id.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sweep(p, rhs, red_mask, inv_diag, omega, dx2, dy2, left, right):
+    """One colored Gauss-Seidel half-sweep on the slab (with halo columns)."""
+    pp = jnp.concatenate([left, p, right], axis=1)       # (ny, bx+2)
+    top = pp[:1, :]
+    bot = pp[-1:, :]
+    pp = jnp.concatenate([top, pp, bot], axis=0)         # (ny+2, bx+2) Neumann walls
+    nb = ((pp[1:-1, :-2] + pp[1:-1, 2:]) / dx2
+          + (pp[:-2, 1:-1] + pp[2:, 1:-1]) / dy2)
+    p_gs = (nb - rhs) * inv_diag
+    return jnp.where(red_mask, (1 - omega) * p + omega * p_gs, p)
+
+
+def rb_sor_slab_kernel(p_ref, p_left_ref, p_right_ref, rhs_ref, out_ref, *,
+                       nslabs: int, bx: int, dx: float, dy: float,
+                       omega: float, inner_iters: int):
+    i = pl.program_id(0)
+    p = p_ref[...]
+    rhs = rhs_ref[...]
+    ny = p.shape[0]
+    dx2, dy2 = dx * dx, dy * dy
+    inv_diag = 1.0 / (2.0 / dx2 + 2.0 / dy2)
+
+    # halo columns (stale during inner sweeps = block-Jacobi)
+    left_halo = jnp.where(i == 0, p[:, :1],              # Neumann at inlet
+                          p_left_ref[...][:, -1:])
+    right_halo = jnp.where(i == nslabs - 1, -p[:, -1:],  # Dirichlet-0 outlet
+                           p_right_ref[...][:, :1])
+
+    # global checkerboard parity: slab column offset = i * bx (bx is even)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (ny, bx), 0)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (ny, bx), 1)
+    red = ((ii + jj) % 2 == 0)
+
+    def body(_, p):
+        p = _sweep(p, rhs, red, inv_diag, omega, dx2, dy2, left_halo, right_halo)
+        p = _sweep(p, rhs, ~red, inv_diag, omega, dx2, dy2, left_halo, right_halo)
+        return p
+
+    out_ref[...] = jax.lax.fori_loop(0, inner_iters, body, p)
+
+
+def rb_sor_slabs(p, rhs, *, dx: float, dy: float, omega: float,
+                 nslabs: int, inner_iters: int, interpret: bool = True):
+    """One outer block-Jacobi iteration: all slabs smoothed in parallel."""
+    ny, nx = p.shape
+    assert nx % nslabs == 0, (nx, nslabs)
+    bx = nx // nslabs
+    assert bx % 2 == 0, "slab width must be even for checkerboard parity"
+
+    kern = functools.partial(rb_sor_slab_kernel, nslabs=nslabs, bx=bx,
+                             dx=dx, dy=dy, omega=omega,
+                             inner_iters=inner_iters)
+    slab = pl.BlockSpec((ny, bx), lambda i: (0, i))
+    left = pl.BlockSpec((ny, bx), lambda i: (0, jnp.maximum(i - 1, 0)))
+    right = pl.BlockSpec((ny, bx), lambda i: (0, jnp.minimum(i + 1, nslabs - 1)))
+    return pl.pallas_call(
+        kern,
+        grid=(nslabs,),
+        in_specs=[slab, left, right, slab],
+        out_specs=slab,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), p.dtype),
+        interpret=interpret,
+    )(p, p, p, rhs)

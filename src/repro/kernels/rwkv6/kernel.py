@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence (RWKV-6 linear attention).
+
+The sequential per-token recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+is reformulated into chunks of C tokens so that within a chunk everything is
+MXU matmuls (the TPU adaptation of the CUDA chunked-WKV kernels):
+
+    lp_t   = cumsum(log w)                    (within chunk)
+    r~_t   = r_t * exp(lp_{t-1})              (exclusive cumprod decay)
+    k~_s   = k_s * exp(-lp_s)
+    o      = r~ @ S_prev + strict_tril(r~ k~^T) @ v + (sum(r*u*k, -1)) * v
+    S_new  = diag(exp(lp_C)) (S_prev + k~^T v)
+
+Grid: (B*H, num_chunks), chunk axis sequential; the (N, N) state lives in VMEM
+scratch across chunk steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 out_ref, sfin_ref, state_scr, *, chunk: int,
+                 num_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)               # (C, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)               # decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)               # (1, N) bonus
+
+    lw = jnp.log(jnp.maximum(w, 1e-30))
+    lp = jnp.cumsum(lw, axis=0)                    # inclusive (C, N)
+    lp_excl = lp - lw                              # exclusive
+    r_t = r * jnp.exp(lp_excl)
+    k_t = k * jnp.exp(-lp)
+
+    S = state_scr[...]                             # (N, N)
+    inter = jax.lax.dot_general(r_t, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    A = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(si < ti, A, 0.0)                 # strictly lower
+    intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    diag_c = jnp.sum(r * u * k, axis=-1, keepdims=True)
+    out_ref[0] = (inter + intra + diag_c * v).astype(out_ref.dtype)
+
+    decay_c = jnp.exp(lp[-1:])                     # (1, N)
+    kv = jax.lax.dot_general(k_t, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, N)
+    state_scr[...] = decay_c.T * (S + kv)
+
+    @pl.when(ci == num_chunks - 1)
+    def _fin():
+        sfin_ref[0] = state_scr[...].astype(sfin_ref.dtype)
+
+
+def wkv6_bhsn(r, k, v, w, u, s0, *, chunk: int = 32,
+              interpret: bool = True):
+    """r,k,v,w: (BH, S, N); u: (BH, 1, N); s0: (BH, N, N).
+    Returns (out (BH, S, N), s_final (BH, N, N))."""
+    BH, S, N = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    kern = functools.partial(_wkv6_kernel, chunk=chunk, num_chunks=nc)
+    seq = pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0))
+    bh_only = pl.BlockSpec((1, 1, N), lambda b, c: (b, 0, 0))
+    st = pl.BlockSpec((1, N, N), lambda b, c: (b, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[seq, seq, seq, seq, bh_only, st],
+        out_specs=(seq, st),
+        out_shape=(jax.ShapeDtypeStruct((BH, S, N), r.dtype),
+                   jax.ShapeDtypeStruct((BH, N, N), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

@@ -1,0 +1,36 @@
+"""jit'd wrapper: models/ssm-shaped entry point for the WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_bhsn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, state, *, chunk: int = 32, interpret: bool = None):
+    """models/ssm layout: r,k,v,w (B,S,H,N); u (H,N); state (B,H,N,N).
+    Returns (out (B,S,H,N), new_state (B,H,N,N))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+
+    ub = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, 1, N)
+    out, s_fin = wkv6_bhsn(to_bh(r), to_bh(k), to_bh(v),
+                           to_bh(w.astype(r.dtype)), ub.astype(r.dtype),
+                           state.reshape(B * H, N, N),
+                           chunk=c, interpret=interpret)
+    out = out.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    return out, s_fin.reshape(B, H, N, N)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the chunked WKV6 kernel: the sequential scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import wkv6_scan  # noqa: F401  (canonical recurrence)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Same layout as the kernel: r,k,v,w (BH,S,N); u (BH,1,N); s0 (BH,N,N)."""
+    BH, S, N = r.shape
+
+    def one(r1, k1, v1, w1, u1, s1):
+        def step(S_, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]
+            out = rt @ (S_ + u1[0][:, None] * kv)
+            return wt[:, None] * S_ + kv, out
+        S_fin, outs = jax.lax.scan(step, s1, (r1, k1, v1, w1))
+        return outs, S_fin
+
+    outs, s_fin = jax.vmap(one)(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), w.astype(jnp.float32),
+                                u.astype(jnp.float32), s0.astype(jnp.float32))
+    return outs.astype(r.dtype), s_fin

@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# 512 placeholder host devices back both the 16x16 single-pod and the
+# 2x16x16 multi-pod production meshes.  dryrun ONLY — tests/benches see 1.
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production mesh; record memory analysis, HLO cost terms (with while-loop
+# trip scaling), and collective bytes for §Roofline.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.launch import hlo_analysis, roofline, steps
+from repro.launch.mesh import make_production_mesh
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = "artifacts/dryrun", verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_dev = mesh.size
+    t0 = time.time()
+    with mesh:
+        jitted, args = steps.lowering_for(cfg, shape, mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    analyzed = hlo_analysis.analyze(txt)
+    params_shape = steps.abstract_params(cfg)
+    mf = roofline.model_flops(cfg, shape, params_shape)
+    rl = roofline.build(arch, shape_name, mesh_name, n_dev, analyzed, mf)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": n_dev,
+        "status": "ok",
+        "t_lower_s": t_lower, "t_compile_s": t_compile,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in ("flops",
+                                                     "bytes accessed")},
+        "hlo_analysis": analyzed,
+        "roofline": rl.to_dict(),
+        "params": roofline.param_count(get_config(arch), params_shape),
+        "params_active": roofline.active_param_count(get_config(arch),
+                                                     params_shape),
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+        json.dumps(rec, indent=1, default=float))
+    if verbose:
+        m = rec["memory"]
+        print(f"OK {arch:24s} {shape_name:12s} {mesh_name:10s} "
+              f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s  "
+              f"mem/dev {m['peak_per_device_bytes']/2**30:6.2f} GiB  "
+              f"dom={rl.dominant:10s} "
+              f"C/M/X = {rl.compute_s*1e3:.1f}/{rl.memory_s*1e3:.1f}/"
+              f"{rl.collective_s*1e3:.1f} ms", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = Path(args.out) / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and path.exists():
+                    rec = json.loads(path.read_text())
+                    if rec.get("status") == "ok":
+                        print(f"SKIP {arch} {shape} {mesh_name} (cached)")
+                        continue
+                try:
+                    run_one(arch, shape, multi_pod=mp, out_dir=args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    Path(args.out).mkdir(parents=True, exist_ok=True)
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "fail", "error": repr(e),
+                        "traceback": traceback.format_exc()}, indent=1))
+                    print(f"FAIL {arch} {shape} {mesh_name}: {e}",
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f[:3], f[3][:120])
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

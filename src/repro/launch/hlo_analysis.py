@@ -1,0 +1,311 @@
+"""HLO-text analysis: FLOPs / HBM bytes / collective bytes with while-loop
+trip-count scaling.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified on this
+jax build), which under-counts scan-over-layers models by ~num_layers x.  This
+module parses ``compiled.as_text()`` into a computation call graph and costs it
+recursively:
+
+  flops(comp)   = sum dots/convs (2*M*N*K from recorded operand shapes)
+                  + while: trip_count * flops(body)
+                  + fusion/call: flops(called comp)
+  bytes(comp)   = sum over *top-granularity* instructions (fusion boundaries)
+                  of operand+output buffer sizes — a post-fusion HBM proxy
+  coll(comp)    = operand bytes of all-gather / all-reduce / reduce-scatter /
+                  all-to-all / collective-permute, trip-scaled
+
+Trip counts come from the while condition's comparison constant (static for
+lax.scan / fori_loop, which is all this codebase emits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BODY_ATTR = re.compile(r"body=%?([\w\.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'(f32[8,64]{1,0}, s32[])' -> [('f32', (8,64)), ('s32', ())]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(type_str):
+        n = _DTYPE_BYTES[dt]
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the ')' matching the '(' at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    # result type: balanced "(...)" tuple or a single space-free token
+    if rest.startswith("("):
+        tend = _balanced(rest, 0)
+        type_str = rest[:tend]
+        rest = rest[tend:].lstrip()
+    else:
+        sp = rest.find(" ")
+        type_str = rest[:sp]
+        rest = rest[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    aend = _balanced(rest, par)
+    args = rest[par + 1:aend - 1]
+    attrs = rest[aend:].lstrip(", ")
+    operands = [a.strip().split(" ")[-1].lstrip("%")
+                for a in _split_args(args)]
+    return Instr(name, type_str, op, operands, attrs)
+
+
+def _split_args(args: str) -> List[str]:
+    """Split top-level commas (tuple types in args contain commas/brackets)."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("(")[0]:
+            head = stripped.split("(")[0].strip()
+            if head.startswith("ENTRY"):
+                entry_name = head[len("ENTRY"):].strip().lstrip("%")
+                cur = Computation(entry_name)
+                entry = entry_name
+            else:
+                cur = Computation(head.lstrip("%"))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_bytes + o.coll_bytes, kinds)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                    {kk: v * k for kk, v in self.coll_by_kind.items()})
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self.shapes: Dict[str, str] = {}
+        for c in self.comps.values():
+            for ins in c.instrs:
+                self.shapes[ins.name] = ins.type_str
+        self._memo: Dict[str, Cost] = {}
+
+    # -- trip counts ---------------------------------------------------------
+
+    def trip_count(self, cond_name: str) -> int:
+        """Largest integer constant in the while condition computation.
+
+        lax.scan / fori_loop conditions are `iter < N` with a literal N;
+        constants parse as op='constant' with the literal in the args slot
+        (`%c = s32[] constant(61)`)."""
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        ints = []
+        for ins in comp.instrs:
+            if ins.op == "constant":
+                for tok in ins.operands:
+                    if re.fullmatch(r"\d+", tok.strip()):
+                        ints.append(int(tok))
+        return max(ints) if ints else 1
+
+    # -- instruction costs ---------------------------------------------------
+
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = 1
+        for _, shape in _parse_shapes(ins.type_str):
+            for d in shape:
+                out_elems *= d
+        # contracting dims from lhs operand shape
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        k = 1
+        if m and ins.operands:
+            lhs_type = self.shapes.get(ins.operands[0], "")
+            shapes = _parse_shapes(lhs_type)
+            if shapes:
+                lhs_shape = shapes[0][1]
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(lhs_shape):
+                        k *= lhs_shape[d]
+        return 2.0 * out_elems * k
+
+    def _operand_bytes(self, ins: Instr) -> float:
+        n = 0
+        for o in ins.operands:
+            n += _nbytes(self.shapes.get(o, ""))
+        return float(n)
+
+    # -- recursive computation cost ------------------------------------------
+
+    def cost(self, comp_name: Optional[str] = None) -> Cost:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        for ins in comp.instrs:
+            c = Cost()
+            if ins.op == "dot" or ins.op == "convolution":
+                c.flops = self._dot_flops(ins)
+                c.bytes = self._operand_bytes(ins) + _nbytes(ins.type_str)
+            elif ins.op == "fusion":
+                called = _CALL_ATTR.search(ins.attrs)
+                if called:
+                    sub = self.cost(called.group(1))
+                    c.flops = sub.flops          # dots inside the fusion
+                c.bytes = self._operand_bytes(ins) + _nbytes(ins.type_str)
+            elif ins.op == "while":
+                body = _BODY_ATTR.search(ins.attrs)
+                cond = _COND_ATTR.search(ins.attrs)
+                trips = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    c = self.cost(body.group(1)).scaled(trips)
+            elif ins.op in ("call", "custom-call", "conditional"):
+                called = _CALL_ATTR.search(ins.attrs)
+                if called:
+                    c = self.cost(called.group(1))
+                c.bytes += self._operand_bytes(ins) + _nbytes(ins.type_str)
+            elif any(ins.op.startswith(k) for k in COLLECTIVES):
+                if not ins.op.endswith("-done"):   # avoid start/done dupes
+                    kind = next(k for k in COLLECTIVES if ins.op.startswith(k))
+                    nb = self._operand_bytes(ins)
+                    c.coll_bytes = nb
+                    c.coll_by_kind = {kind: nb}
+                    c.bytes = nb + _nbytes(ins.type_str)
+            elif ins.op == "dynamic-update-slice":
+                # in-place semantics: HBM traffic = the updated slice (x2),
+                # not the whole buffer (else a KV-cache write per decode
+                # token would count as rewriting the full multi-GB cache)
+                upd = (_nbytes(self.shapes.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else 0)
+                c.bytes = 2.0 * upd
+            elif ins.op == "dynamic-slice":
+                c.bytes = 2.0 * _nbytes(ins.type_str)
+            elif ins.op in ("copy", "copy-start", "transpose", "reshape",
+                            "broadcast", "reduce", "sort", "scatter",
+                            "gather", "concatenate", "pad",
+                            "slice", "convert", "iota", "select-and-scatter",
+                            "reduce-window"):
+                c.bytes = self._operand_bytes(ins) + _nbytes(ins.type_str)
+            total = total + c
+        self._memo[comp_name] = total
+        return total
+
+
+def analyze(text: str) -> Dict[str, float]:
+    a = HloCostAnalyzer(text)
+    c = a.cost()
+    out = {"flops": c.flops, "bytes": c.bytes, "coll_bytes": c.coll_bytes}
+    for k, v in c.coll_by_kind.items():
+        out[f"coll_{k}"] = v
+    return out

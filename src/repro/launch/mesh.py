@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (required for the dry-run's forced 512-device host platform).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data", "model").
+    Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the pod axis is
+    pure data parallelism (params replicated across pods; only gradient
+    all-reduce crosses pods, per the paper's keep-the-outer-axis-embarrassing
+    principle, DESIGN.md §2)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many devices exist (tests / examples)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

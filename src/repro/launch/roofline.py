@@ -1,0 +1,143 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e constants).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / ICI_link_bw
+
+The SPMD-partitioned HLO is per-device, so analyzer outputs plug in directly.
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE; 2·N·tokens for single-token
+decode) anchors the "useful compute" ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (~per direction)
+
+
+def param_count(cfg: ModelConfig, params_shape) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shape)))
+
+
+def active_param_count(cfg: ModelConfig, params_shape) -> int:
+    """MoE: only top_k (+shared) experts per token are active."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        n = int(np.prod(leaf.shape))
+        if cfg.moe is not None and any(
+                path.endswith(s) for s in ("we1", "we2", "we3")):
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+def _encoder_param_count(params_shape) -> int:
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if path.startswith("encoder/"):
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, params_shape) -> float:
+    n_active = active_param_count(cfg, params_shape)
+    n_enc = _encoder_param_count(params_shape) if cfg.is_encdec else 0
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    fl = mult * (n_active - n_enc) * tokens
+    if n_enc and shape.kind != "decode":
+        # encoder runs over the (downsampled) frontend token stream
+        from repro.models import frontend as fe_mod
+        t_enc = shape.global_batch * fe_mod.num_frontend_tokens(
+            cfg, shape.seq_len)
+        fl += mult * n_enc * t_enc
+    return fl
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops: float
+    coll_by_kind: Dict[str, float]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/masking/dispatch waste."""
+        total = self.flops_per_dev * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-FLOPs utilization implied by the terms."""
+        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio, "mfu_bound": self.mfu_bound,
+        }
+
+
+def build(arch: str, shape_name: str, mesh_name: str, n_devices: int,
+          analyzed: Dict[str, float], model_fl: float) -> Roofline:
+    coll_by_kind = {k[len("coll_"):]: v for k, v in analyzed.items()
+                    if k.startswith("coll_") and k != "coll_bytes"}
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=analyzed.get("flops", 0.0),
+        bytes_per_dev=analyzed.get("bytes", 0.0),
+        coll_bytes_per_dev=analyzed.get("coll_bytes", 0.0),
+        model_flops=model_fl, coll_by_kind=coll_by_kind)

@@ -1,0 +1,300 @@
+"""Step builders: train_step / prefill_step / serve_step with mesh shardings.
+
+Shared by launch/train.py (real execution) and launch/dryrun.py (lowering on
+the production mesh).  Every (architecture x input shape) lowers through one
+of these three entry points:
+
+  train   -> train_step(params, opt_state, step, batch)
+  prefill -> prefill_step(params, tokens[, frontend]) -> (logits, cache)
+  decode  -> serve_step(params, cache, token, pos)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import act_sharding
+from repro.models import frontend as fe_mod
+from repro.models import model as M
+from repro.models.layers import dtype_of
+from repro.models.sharding import (axis_size, batch_spec, dp_axes,
+                                   kv_cache_spec, param_specs, spec_for,
+                                   state_spec)
+from repro.optim.optimizers import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# abstract state + shardings
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def fsdp_axes_for(cfg: ModelConfig, mesh: Optional[Mesh]):
+    """100B+ DENSE archs extend FSDP across the pod axis on the multi-pod
+    mesh (llama-405b: 65->37 GiB, mistral-123b: 22->15 GiB).  MoE archs keep
+    params replicated across pods: the shard_map expert layers re-gather
+    weights per layer and the extra pod-gather transients cost more than the
+    parameter savings (deepseek measured 39->49 GiB — refuted).  Everything
+    else follows the paper's keep-the-outer-axis-embarrassing principle."""
+    if (mesh is not None and "pod" in mesh.shape
+            and cfg.optimizer == "adafactor" and cfg.moe is None):
+        return ("pod", "data")
+    return ("data",)
+
+
+def make_opt(cfg: ModelConfig):
+    kw = {}
+    if cfg.optimizer == "adafactor":
+        # 100B+ archs: bf16 update direction (see optimizers.adafactor)
+        kw["update_dtype"] = jnp.bfloat16
+    return make_optimizer(cfg.optimizer, 1e-4, max_grad_norm=1.0, **kw)
+
+
+def abstract_opt_state(cfg: ModelConfig, params_shape):
+    opt = make_opt(cfg)
+    return jax.eval_shape(opt.init, params_shape)
+
+
+def _paths_to_specs(mesh: Mesh, shape_tree, fsdp_axes=("data",)):
+    """Flattened {path: spec} for a params shape tree."""
+    specs = param_specs(mesh, shape_tree, fsdp_axes)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    out = {}
+    for kp, spec in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = spec
+    return out
+
+
+def opt_state_specs(mesh: Mesh, params_shape, opt_shape,
+                    fsdp_axes=("data",)):
+    """Optimizer-state specs derived from the matching parameter's spec.
+
+    adamw m/v mirror the param; adafactor vr drops the last dim, vc drops the
+    second-to-last."""
+    pspecs = _paths_to_specs(mesh, params_shape, fsdp_axes)
+
+    def spec_for_leaf(kp, leaf):
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        # adamw: {"m": <params tree>, "v": <params tree>} — stat key at ROOT
+        if parts[0] in ("m", "v"):
+            base = pspecs.get("/".join(parts[1:]), P())
+            return base if len(base) == leaf.ndim else P()
+        # adafactor: <params tree> -> {"vr": ..., "vc": ...} or {"v": ...}
+        stat = parts[-1]
+        base = pspecs.get("/".join(parts[:-1]), P())
+        if stat == "v" and len(base) == leaf.ndim:
+            return base
+        if stat == "vr" and len(base) >= 1:       # param spec minus last dim
+            return P(*base[:-1]) if len(base) - 1 == leaf.ndim else P()
+        if stat == "vc" and len(base) >= 2:       # minus second-to-last dim
+            spec = tuple(base[:-2]) + (base[-1],)
+            return P(*spec) if len(spec) == leaf.ndim else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for_leaf, opt_shape)
+
+
+def _sh(mesh: Mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# data input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    dp = dp_axes(mesh)
+    bspec = batch_spec(mesh, B)
+    sds = lambda shp, dt, spec: jax.ShapeDtypeStruct(
+        shp, dt, sharding=NamedSharding(mesh, spec))
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, S), jnp.int32, P(bspec[0], None))
+        out["labels"] = sds((B, S), jnp.int32, P(bspec[0], None))
+        if cfg.frontend:
+            t = fe_mod.num_frontend_tokens(cfg, S)
+            out["frontend_embeds"] = sds((B, t, fe_mod.frontend_dim(cfg)),
+                                         jnp.float32, P(bspec[0], None, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32, P(bspec[0], None))
+        if cfg.frontend:
+            t = fe_mod.num_frontend_tokens(cfg, S)
+            out["frontend_embeds"] = sds((B, t, fe_mod.frontend_dim(cfg)),
+                                         jnp.float32, P(bspec[0], None, None))
+    else:  # decode
+        out["token"] = sds((B, 1), jnp.int32, P(bspec[0], None))
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    """PartitionSpec tree matching M.init_cache's structure."""
+    from repro.models.sharding import cache_leaf_spec
+    cache_shape = jax.eval_shape(lambda: M.init_cache(cfg, batch, seq))
+
+    def leaf_spec(kp, leaf):
+        key = str(getattr(kp[-1], "key", kp[-1]))
+        return cache_leaf_spec(mesh, key, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape), \
+        cache_shape
+
+
+def cache_structs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    specs, shapes = cache_specs(cfg, mesh, batch, seq)
+    return jax.tree.map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                    use_pallas: bool = False) -> Callable:
+    opt = make_opt(cfg)
+    accum_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
+
+    # gradients must carry the parameter sharding explicitly: the backward
+    # dots (e.g. one_hot^T @ dh for the embedding) otherwise produce
+    # full-size replicated outputs inside the accumulation loop (measured:
+    # full fp32 (V, D) embed grads on deepseek-v3)
+    if mesh is not None:
+        gspecs = param_specs(mesh, abstract_params(cfg),
+                             fsdp_axes_for(cfg, mesh))
+
+        def constrain_grads(g):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, s)), g, gspecs)
+    else:
+        def constrain_grads(g):
+            return g
+
+    def loss_fn(params, mb):
+        return M.lm_loss(cfg, params, mb, use_pallas=use_pallas)
+
+    def train_step(params, opt_state, step, batch):
+        # clamp microbatches so each microbatch still divides the dp axes
+        # (e.g. 16 microbatches of batch 256 breaks on the 32-way multi-pod
+        # dp axis: B_mb=16 % 32 != 0 would silently defeat the MoE shard_map)
+        B = jax.tree.leaves(batch)[0].shape[0]
+        n_dp = axis_size(mesh, dp_axes(mesh)) if mesh is not None else 1
+        Mmb = cfg.train_microbatches
+        while Mmb > 1 and (B % Mmb or (B // Mmb) % n_dp):
+            Mmb //= 2
+        with act_sharding.activation_mesh(mesh):
+            if Mmb == 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                grads = constrain_grads(grads)
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((Mmb, x.shape[0] // Mmb)
+                                        + x.shape[1:]), batch)
+                g0 = constrain_grads(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dtype), params))
+
+                def acc(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    g = constrain_grads(g)
+                    g_acc = constrain_grads(jax.tree.map(
+                        lambda a, b: a + b.astype(accum_dtype), g_acc, g))
+                    return (g_acc, l_acc + l), None
+
+                (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)),
+                                                mbs)
+                grads = jax.tree.map(lambda g: g / Mmb, grads)
+                loss = loss / Mmb
+                aux = {"loss": loss}
+            params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": loss}
+        return params, opt_state, step + 1, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                      use_pallas: bool = False) -> Callable:
+    def prefill_step(params, tokens, frontend_embeds=None):
+        with act_sharding.activation_mesh(mesh):
+            logits, cache = M.prefill(cfg, params, tokens,
+                                      frontend_embeds=frontend_embeds)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Callable:
+    def serve_step(params, cache, token, pos):
+        with act_sharding.activation_mesh(mesh):
+            logits, cache = M.decode_step(cfg, params, cache, token, pos)
+        return logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# one-stop lowering assembly for (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+def lowering_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 donate: bool = True):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    params_shape = abstract_params(cfg)
+    pspecs = param_specs(mesh, params_shape, fsdp_axes_for(cfg, mesh))
+    psh = _sh(mesh, pspecs)
+    params_structs = jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        params_shape, psh,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    data = batch_structs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt_shape = abstract_opt_state(cfg, params_shape)
+        ospecs = opt_state_specs(mesh, params_shape, opt_shape,
+                                 fsdp_axes_for(cfg, mesh))
+        osh = _sh(mesh, ospecs)
+        opt_structs = jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            opt_shape, osh,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        fn = make_train_step(cfg, mesh)
+        step0 = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(
+            fn, donate_argnums=(0, 1) if donate else (),
+            out_shardings=(psh, osh, None, None))
+        args = (params_structs, opt_structs, step0, data)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh)
+        cspecs, _ = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        csh = _sh(mesh, cspecs)
+        jitted = jax.jit(fn, out_shardings=(None, csh))
+        args = ((params_structs, data["tokens"], data["frontend_embeds"])
+                if "frontend_embeds" in data
+                else (params_structs, data["tokens"]))
+    else:
+        fn = make_serve_step(cfg, mesh)
+        cache_in = cache_structs(cfg, mesh, shape.global_batch,
+                                 shape.seq_len)
+        cspecs, _ = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        csh = _sh(mesh, cspecs)
+        jitted = jax.jit(fn, donate_argnums=(1,) if donate else (),
+                         out_shardings=(None, csh))
+        args = (params_structs, cache_in, data["token"], data["pos"])
+    return jitted, args

@@ -1,0 +1,77 @@
+"""LM training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs any assigned architecture (full or --reduced) on whatever devices exist,
+with the same step builders the dry-run lowers on the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_mod
+from repro.configs.base import get_config
+from repro.data.pipeline import LMDataConfig, synthetic_batch
+from repro.launch import steps
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    B = args.batch or (8 if args.reduced else 32)
+    S = args.seq or (64 if args.reduced else 1024)
+
+    mesh = make_debug_mesh(len(jax.devices()), 1)
+    key = jax.random.PRNGKey(args.seed)
+    print(f"init {cfg.name}: L={cfg.num_layers} d={cfg.d_model} "
+          f"V={cfg.vocab_size} devices={len(jax.devices())}")
+    params = M.init_params(cfg, key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f} M")
+    opt = steps.make_opt(cfg)
+    opt_state = opt.init(params)
+    train_step = jax.jit(steps.make_train_step(cfg, mesh))
+
+    dcfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B,
+                        seed=args.seed)
+    step = jnp.int32(0)
+    losses = []
+    for i in range(args.steps):
+        t0 = time.time()
+        batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i, cfg))
+        params, opt_state, step, metrics = train_step(params, opt_state,
+                                                      step, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % args.log_every == 0:
+            print(f"step {i:5d}  loss {loss:8.4f}  {time.time()-t0:6.2f}s",
+                  flush=True)
+    if args.ckpt_dir:
+        p = Path(args.ckpt_dir) / f"step_{int(step):08d}.ckpt"
+        n = ckpt_mod.save(str(p), {"params": params}, step=int(step))
+        print(f"checkpoint -> {p} ({n/1e6:.1f} MB)")
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Activation-sharding constraints, threadable into scan bodies.
+
+Model code calls ``constrain(x, axes...)``; the mesh is injected by the step
+builders (launch/steps.py) via ``activation_mesh(mesh)``.  Outside a mesh
+context the call is a no-op, so smoke tests on 1 CPU device are unaffected.
+Axes that don't divide the dim are dropped (models/sharding.spec_for).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import spec_for
+
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    tok = _ACTIVE_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(axes...)) if a mesh is active."""
+    mesh = _ACTIVE_MESH.get()
+    if mesh is None:
+        return x
+    axes = axes + (None,) * (x.ndim - len(axes))
+    spec = spec_for(mesh, x.shape, *axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def dp(mesh: Optional[Mesh] = None):
+    mesh = mesh or _ACTIVE_MESH.get()
+    if mesh is not None and "pod" in mesh.shape:
+        return ("pod", "data")
+    return "data"

@@ -1,0 +1,240 @@
+"""GQA attention: train/prefill (optionally Pallas flash) + cached decode.
+
+Decode attends one query token against a length-``S`` KV cache; cost is O(S)
+per token (linear, never quadratic) and the cache sequence axis is sharded
+across devices (distributed flash-decode) — see models/sharding.kv_cache_spec.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, dtype_of
+
+
+def init_attention(cfg: ModelConfig, key):
+    dt = dtype_of(cfg.param_dtype)
+    dh = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (cfg.d_model, cfg.num_heads * dh), dt),
+        "wk": dense_init(kk, (cfg.d_model, cfg.num_kv_heads * dh), dt),
+        "wv": dense_init(kv, (cfg.d_model, cfg.num_kv_heads * dh), dt),
+        "wo": dense_init(ko, (cfg.num_heads * dh, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * dh,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * dh,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * dh,), dt)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    cd = dtype_of(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    x = x.astype(cd)
+    q = x @ p["wq"].astype(cd)
+    k = x @ p["wk"].astype(cd)
+    v = x @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(B, S, cfg.num_heads, dh)
+    k = k.reshape(B, S, cfg.num_kv_heads, dh)
+    v = v.reshape(B, S, cfg.num_kv_heads, dh)
+    return q, k, v
+
+
+def gqa_attend(q, k, v, mask, *, scale: Optional[float] = None):
+    """q: (B,Sq,H,dh)  k,v: (B,Sk,Hkv,dh)  mask: broadcastable (B,1,Sq,Sk) bool.
+
+    Grouped einsum keeps the repeated KV heads virtual (no materialized repeat).
+    """
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    # standard GQA grouping: q head h attends kv head h // G
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, v.shape[-1])   # v dim may differ (MLA)
+
+
+def chunked_gqa_attend(q, k, v, *, sliding_window: int = 0,
+                       chunk: int = 1024):
+    """Memory-safe causal attention: lax.scan over query chunks.
+
+    Keeps the materialized logits at (B, H, chunk, S) instead of (B, H, S, S).
+    Baseline masks the full key range per chunk (2x causal FLOPs — the Pallas
+    flash kernel removes this on TPU; see EXPERIMENTS.md §Perf).
+    """
+    B, S, H, dh = q.shape
+    if S <= chunk:
+        return gqa_attend(q, k, v, causal_mask(S, S, sliding_window))
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n, chunk, H, dh)
+    kpos = jnp.arange(S)[None, :]
+
+    def body(_, inp):
+        qi, i = inp
+        qpos = i * chunk + jnp.arange(chunk)[:, None]
+        m = kpos[None] <= qpos                              # (chunk, S) -> bcast
+        if sliding_window:
+            m = m & (kpos[None] > qpos - sliding_window)
+        out = gqa_attend(qi, k, v, m.reshape(1, chunk, S))
+        return None, out
+
+    # remat per chunk: scan backward otherwise stacks every chunk's
+    # attention probs (chunks x B x H x chunk x S fp32) as residuals
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qc, 1, 0), jnp.arange(n)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n * chunk, H, outs.shape[-1])
+    return out[:, :S]
+
+
+def causal_mask(Sq: int, Sk: int, sliding_window: int = 0):
+    """(1, Sq, Sk) boolean; True == attend."""
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if sliding_window:
+        m = m & (kpos > qpos - sliding_window)
+    return m[None]
+
+
+def apply_attention(cfg: ModelConfig, p, x, positions, *,
+                    causal: bool = True, use_pallas: bool = False,
+                    chunk: int = 1024, return_kv: bool = False):
+    """Train/prefill self-attention (causal by default; encoder passes False).
+
+    With ``return_kv`` also returns the post-RoPE K/V for KV-cache population.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if use_pallas and causal:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True,
+                                        sliding_window=cfg.sliding_window)
+    elif causal:
+        out = chunked_gqa_attend(q, k, v, sliding_window=cfg.sliding_window,
+                                 chunk=chunk)
+    else:
+        out = gqa_attend(q, k, v, None)
+    cd = dtype_of(cfg.compute_dtype)
+    out = out.reshape(B, S, -1) @ p["wo"].astype(cd)
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def apply_cross_attention(cfg: ModelConfig, p, x, kv_src) -> jnp.ndarray:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    cd = dtype_of(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    Sk = kv_src.shape[1]
+    q = (x.astype(cd) @ p["wq"].astype(cd)).reshape(B, S, cfg.num_heads, dh)
+    k = (kv_src.astype(cd) @ p["wk"].astype(cd)).reshape(B, Sk, cfg.num_kv_heads, dh)
+    v = (kv_src.astype(cd) @ p["wv"].astype(cd)).reshape(B, Sk, cfg.num_kv_heads, dh)
+    out = gqa_attend(q, k, v, None)
+    return out.reshape(B, S, -1) @ p["wo"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, layers: int,
+                  dtype) -> dict:
+    dh = cfg.resolved_head_dim
+    shape = (layers, batch, seq_len, cfg.num_kv_heads, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_write(cache, new, pos):
+    """Write one token's K/V at ``pos`` (axis 1).
+
+    Under a mesh, a dynamic-update-slice at a traced position on the
+    256-way-sharded sequence axis triggers GSPMD "involuntary full
+    rematerialization" (the cache replicates: +322 GiB/device on qwen
+    long_500k); the masked elementwise write partitions cleanly."""
+    from repro.models import act_sharding
+    if act_sharding.current_mesh() is not None:
+        S = cache.shape[1]
+        onehot = (jnp.arange(S) == pos)
+        shape = (1, S) + (1,) * (cache.ndim - 2)
+        return jnp.where(onehot.reshape(shape), new.astype(cache.dtype),
+                         cache)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos, axis=1)
+
+
+def decode_attention(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
+    """One-token decode.  x: (B,1,D); cache_k/v: (B,S,Hkv,dh); pos: () int32.
+
+    Returns (out (B,1,D), new_k, new_v).  The new token's K/V are written at
+    ``pos`` and attention is masked to positions <= pos.
+    """
+    B, _, _ = x.shape
+    S = cache_k.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)                       # (B,1,·,dh)
+    if cfg.rope_kind in ("rope", "mrope"):
+        pvec = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.rope_kind == "mrope":
+            pvec = jnp.broadcast_to(pvec[..., None], (B, 1, 3))
+        q = apply_rope(q, pvec, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, pvec, cfg.rope_theta, cfg.mrope_sections)
+    cache_k = cache_write(cache_k, k, pos)
+    cache_v = cache_write(cache_v, v, pos)
+    kpos = jnp.arange(S)[None, None, :]                     # (1,1,S)
+    mask = kpos <= pos
+    if cfg.sliding_window:
+        mask = mask & (kpos > pos - cfg.sliding_window)
+    # distributed flash-decode: keep the whole attention chain on the cache's
+    # sequence sharding — left unconstrained, GSPMD re-partitions to a
+    # heads-major layout via "involuntary full rematerialization"
+    # (replicates the cache; measured 322 GiB/device on qwen long_500k)
+    from repro.models import act_sharding
+    from repro.models.sharding import kv_cache_spec
+    mesh = act_sharding.current_mesh()
+    if mesh is not None:
+        spec = kv_cache_spec(mesh, B, S)[1:]                # (B, S, H, dh)
+        seq_ax = spec[1]
+        k_att = act_sharding.constrain(cache_k.astype(q.dtype), *spec)
+        v_att = act_sharding.constrain(cache_v.astype(q.dtype), *spec)
+        Hkv = k_att.shape[2]
+        dh_ = q.shape[-1]
+        G = q.shape[2] // Hkv
+        qg = q.reshape(B, 1, Hkv, G, dh_)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_att
+                            ).astype(jnp.float32) * dh_ ** -0.5
+        # (B, Hkv, G, 1, S): pin S to the cache's sequence axes
+        logits = act_sharding.constrain(logits, spec[0], None, None, None,
+                                        seq_ax)
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)   # psum over sharded S
+        w = act_sharding.constrain(w, spec[0], None, None, None, seq_ax)
+        out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v_att.dtype), v_att)
+        out = out.reshape(B, 1, -1)
+    else:
+        out = gqa_attend(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                         mask)
+    cd = dtype_of(cfg.compute_dtype)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(cd)
+    return out, cache_k, cache_v

@@ -1,0 +1,47 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+[audio] seamless-m4t: the mel-spectrogram + conv feature extractor is stubbed;
+the model consumes precomputed *frame embeddings* (B, T_frames, frontend_dim).
+[vlm] qwen2-vl: the ViT/SigLIP encoder is stubbed; the model consumes
+precomputed *patch embeddings* (B, n_patches, frontend_dim).
+
+A learned linear projector (frontend_dim -> d_model) is real and trained; only
+the upstream encoder is a stub.  ``frontend_spec`` supplies the
+ShapeDtypeStruct stand-ins used by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+AUDIO_FRONTEND_DIM = 1024      # w2v-BERT 2.0 frame features
+VISION_FRONTEND_DIM = 1280     # Qwen2-VL ViT width
+AUDIO_DOWNSAMPLE = 8           # frames per decoder token budget (T_enc = S // 8)
+VISION_PATCHES = 1024          # stub patch count (dynamic-resolution placeholder)
+
+
+def frontend_dim(cfg: ModelConfig) -> int:
+    return {"audio": AUDIO_FRONTEND_DIM, "vision": VISION_FRONTEND_DIM}[cfg.frontend]
+
+
+def init_frontend(cfg: ModelConfig, key):
+    if not cfg.frontend:
+        return {}
+    dt = dtype_of(cfg.param_dtype)
+    return {"projector": dense_init(key, (frontend_dim(cfg), cfg.d_model), dt)}
+
+
+def project(cfg: ModelConfig, p, embeds):
+    cd = dtype_of(cfg.compute_dtype)
+    return embeds.astype(cd) @ p["projector"].astype(cd)
+
+
+def num_frontend_tokens(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend == "audio":
+        return max(8, seq_len // AUDIO_DOWNSAMPLE)
+    if cfg.frontend == "vision":
+        return min(VISION_PATCHES, max(8, seq_len // 4))
+    return 0

@@ -1,0 +1,49 @@
+"""Hymba hybrid block: parallel attention + Mamba heads on the same input,
+outputs normalized and averaged.  [arXiv:2411.13676]"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dtype_of
+
+
+def init_hybrid(cfg: ModelConfig, key):
+    ka, km = jax.random.split(key)
+    dt = dtype_of(cfg.param_dtype)
+    # SSM branch sized to the attention branch (d_inner == H * dh == attn width)
+    d_inner = cfg.num_heads * cfg.resolved_head_dim
+    return {
+        "attn": attn_mod.init_attention(cfg, ka),
+        "mamba": ssm_mod.init_mamba(cfg, km, d_inner=d_inner),
+        "out_norm_attn": jnp.ones((cfg.d_model,), dt),
+        "out_norm_ssm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_hybrid(cfg: ModelConfig, p, x, positions, *, use_pallas=False):
+    """Train/prefill.  Returns block mixer output (B,S,D)."""
+    a = attn_mod.apply_attention(cfg, p["attn"], x, positions,
+                                 use_pallas=use_pallas)
+    m, _, _ = ssm_mod.apply_mamba(cfg, p["mamba"], x)
+    return 0.5 * (_rms(a, p["out_norm_attn"]) + _rms(m, p["out_norm_ssm"]))
+
+
+def decode_hybrid(cfg: ModelConfig, p, x, cache_k, cache_v, conv_state,
+                  ssm_state, pos):
+    """One-token decode through both branches."""
+    a, cache_k, cache_v = attn_mod.decode_attention(
+        cfg, p["attn"], x, cache_k, cache_v, pos)
+    m, conv_state, ssm_state = ssm_mod.apply_mamba(
+        cfg, p["mamba"], x, conv_state=conv_state, ssm_state=ssm_state)
+    out = 0.5 * (_rms(a, p["out_norm_attn"]) + _rms(m, p["out_norm_ssm"]))
+    return out, cache_k, cache_v, conv_state, ssm_state

@@ -1,0 +1,153 @@
+"""Core layers: norms, embeddings, rotary variants, MLPs.  Raw JAX (no flax).
+
+Parameters are plain dict pytrees.  Stacked-layer parameters carry a leading
+L dim and are consumed by ``jax.lax.scan`` in model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16,
+            "float8_e4m3fn": jnp.float8_e4m3fn}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int):
+    p = {"scale": jnp.ones((dim,), dtype_of(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype_of(cfg.param_dtype))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (B, S) or (B, S, 3) for M-RoPE."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                           # (dh/2,)
+    if mrope_sections and positions.ndim == 3:
+        # M-RoPE: split the dh/2 frequency slots into (t, h, w) sections,
+        # each driven by its own position component.  [arXiv:2409.12191]
+        secs = mrope_sections
+        assert sum(secs) == dh // 2, (secs, dh)
+        pos_parts = []
+        start = 0
+        for i, s in enumerate(secs):
+            pos_parts.append(jnp.broadcast_to(
+                positions[..., i:i + 1].astype(jnp.float32), positions.shape[:2] + (s,)))
+            start += s
+        pos = jnp.concatenate(pos_parts, axis=-1)           # (B, S, dh/2)
+        angles = pos * freqs[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(pos, dim: int) -> jnp.ndarray:
+    """Sinusoidal PE row(s) for arbitrary (traced) positions.  pos: scalar or
+    (...,) -> (..., dim)."""
+    pos = jnp.asarray(pos, jnp.float32)
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / dim))
+    ang = pos[..., None] * div
+    pe = jnp.zeros(pos.shape + (dim,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    div = np.exp(np.arange(0, dim, 2) * (-np.log(10000.0) / dim))
+    pe = np.zeros((seq, dim), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_model: int, d_ff: int):
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"w1": dense_init(k1, (d_model, d_ff), dt),
+                "w3": dense_init(k3, (d_model, d_ff), dt),
+                "w2": dense_init(k2, (d_ff, d_model), dt)}
+    if cfg.activation == "rwkv_ffn":
+        # RWKV channel-mix: relu(x W1)^2 W2 (+ receptance gate handled in ssm.py)
+        return {"w1": dense_init(k1, (d_model, d_ff), dt),
+                "w2": dense_init(k2, (d_ff, d_model), dt)}
+    return {"w1": dense_init(k1, (d_model, d_ff), dt),
+            "w2": dense_init(k2, (d_ff, d_model), dt)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    cd = dtype_of(cfg.compute_dtype)
+    x = x.astype(cd)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(cd)) * (x @ p["w3"].astype(cd))
+        return h @ p["w2"].astype(cd)
+    if cfg.activation == "rwkv_ffn":
+        h = jnp.square(jax.nn.relu(x @ p["w1"].astype(cd)))
+        return h @ p["w2"].astype(cd)
+    h = jax.nn.gelu(x @ p["w1"].astype(cd))
+    return h @ p["w2"].astype(cd)

@@ -1,0 +1,120 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).  [arXiv:2412.19437]
+
+Prefill/train uses the expanded form; decode uses the *absorbed* form against a
+compressed cache (c_kv latent + shared rope key), which is what makes the
+decode KV cache tiny: (kv_lora_rank + rope_dim) per token instead of
+2*H*dh — 576 vs 32768 floats/token for the 671B config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, dtype_of
+
+
+def init_mla(cfg: ModelConfig, key):
+    m = cfg.mla
+    dt = dtype_of(cfg.param_dtype)
+    H = cfg.num_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(k1, (cfg.d_model, m.q_lora_rank), dt),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dt)},
+        "wq_b": dense_init(k2, (m.q_lora_rank, H * qk), dt),
+        "wkv_a": dense_init(k3, (cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dt)},
+        "wkv_b": dense_init(k4, (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)), dt),
+        "wo": dense_init(k5, (H * m.v_head_dim, cfg.d_model), dt),
+    }
+
+
+def _rms(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _project(cfg: ModelConfig, p, x):
+    """-> q_nope (B,S,H,dn), q_rope (B,S,H,dr), c_kv (B,S,c), k_rope (B,S,dr)."""
+    m = cfg.mla
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    x = x.astype(cd)
+    q = _rms(cfg, p["q_norm"], x @ p["wq_a"].astype(cd)) @ p["wq_b"].astype(cd)
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    kv = x @ p["wkv_a"].astype(cd)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = _rms(cfg, p["kv_norm"], c_kv)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(cfg: ModelConfig, p, x, positions) -> jnp.ndarray:
+    """Train/prefill, expanded form.
+
+    The expanded MLA is MHA with per-head keys [k_nope ; shared k_rope]; the
+    softmax scale 1/sqrt(dn + dr) coincides with the concatenated head dim,
+    so the memory-safe chunked attention core from attention.py applies
+    directly (no (B,H,S,S) materialization)."""
+    from repro.models.attention import chunked_gqa_attend
+    m = cfg.mla
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _project(cfg, p, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+    kv = (c_kv @ p["wkv_b"].astype(cd)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)       # (B,S,H,dn+dr)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+        axis=-1)
+    out = chunked_gqa_attend(q_full, k_full, v)               # causal
+    out = out.reshape(B, S, -1)
+    return out @ p["wo"].astype(cd)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq_len: int, layers: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((layers, batch, seq_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((layers, batch, seq_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def decode_mla(cfg: ModelConfig, p, x, c_cache, r_cache, pos):
+    """Absorbed-form decode.  x: (B,1,D); c_cache: (B,S,c); r_cache: (B,S,dr)."""
+    m = cfg.mla
+    cd = dtype_of(cfg.compute_dtype)
+    B = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _project(cfg, p, x)      # S==1
+    pvec = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, pvec, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], pvec, cfg.rope_theta)[:, :, 0, :]
+    from repro.models.attention import cache_write
+    c_cache = cache_write(c_cache, c_kv, pos)
+    r_cache = cache_write(r_cache, k_rope, pos)
+    # absorb W_uk into the query: q_lat (B,1,H,c)
+    w_uk = p["wkv_b"].astype(cd).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)[..., :m.qk_nope_head_dim]
+    w_uv = p["wkv_b"].astype(cd).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)[..., m.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bshd,chd->bshc", q_nope, w_uk)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    S = c_cache.shape[1]
+    logits = (jnp.einsum("bshc,btc->bhst", q_lat, c_cache.astype(cd))
+              + jnp.einsum("bshd,btd->bhst", q_rope, r_cache.astype(cd)))
+    logits = logits.astype(jnp.float32) * scale
+    mask = (jnp.arange(S)[None, None, None, :] <= pos)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhst,btc->bshc", w.astype(cd), c_cache.astype(cd))
+    out = jnp.einsum("bshc,chd->bshd", out_lat, w_uv).reshape(B, 1, -1)
+    return out @ p["wo"].astype(cd), c_cache, r_cache

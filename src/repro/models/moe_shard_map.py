@@ -1,0 +1,164 @@
+"""Expert-parallel MoE via shard_map + lax.all_to_all (the production path).
+
+GSPMD cannot partition the gather/scatter dispatch of moe.py: it all-gathers
+the full token array per layer (measured: deepseek-v3 train_4k baseline hits
+88 GiB/device and a 994 s collective term — artifacts/dryrun).  This module
+implements the classic two-hop expert-parallel dispatch explicitly:
+
+  1. tokens live sharded over (dp x "model"); experts over "model" (E/EP each)
+  2. each device packs its tokens into per-target-rank capacity buckets
+  3. lax.all_to_all along "model" delivers tokens to expert owners
+  4. local sort-dispatch -> grouped GEMMs over the E/EP local experts
+  5. results return through the inverse all_to_all; probs applied at origin
+
+Weights stay FSDP-sharded over "data" and are all-gathered per layer
+(ZeRO-style).  Numerics match moe._moe_dispatch up to capacity-drop patterns;
+tests use generous capacity for exact comparison.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+shard_map = jax.shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models import act_sharding
+from repro.models.layers import dtype_of
+
+
+def _pack(x, groups, n_groups, capacity, payload):
+    """Pack payload rows into (n_groups, capacity, ...) buckets by group id.
+
+    Returns (buckets, slot_group, slot_pos, keep) so the caller can route
+    results back to the original rows."""
+    n = groups.shape[0]
+    order = jnp.argsort(groups)
+    g_s = groups[order]
+    counts = jnp.zeros((n_groups,), jnp.int32).at[groups].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n, dtype=jnp.int32) - starts[g_s]
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, 0)
+    buckets = jnp.zeros((n_groups, capacity) + payload.shape[1:],
+                        payload.dtype)
+    buckets = buckets.at[g_s, pos_c].add(
+        payload[order] * keep.reshape((-1,) + (1,) * (payload.ndim - 1)
+                                      ).astype(payload.dtype))
+    return buckets, order, g_s, pos_c, keep
+
+
+def _unpack(buckets, order, g_s, pos_c, keep, n):
+    out = buckets[g_s, pos_c] * keep.reshape(
+        (-1,) + (1,) * (buckets.ndim - 2)).astype(buckets.dtype)
+    return jnp.zeros((n,) + buckets.shape[2:], buckets.dtype
+                     ).at[order].add(out)
+
+
+def apply_moe_expert_parallel(cfg: ModelConfig, p, x
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux).  Requires an active mesh with a "model"
+    axis dividing num_experts; otherwise falls back to the gather/scatter
+    implementation."""
+    from repro.models.moe import _moe_dispatch, router
+    mesh = act_sharding.current_mesh()
+    m = cfg.moe
+    if (mesh is None or "model" not in mesh.shape
+            or m.num_experts % mesh.shape["model"]):
+        return _moe_dispatch(cfg, p, x)
+    EP = mesh.shape["model"]
+    if EP == 1:
+        return _moe_dispatch(cfg, p, x)
+    E_loc = m.num_experts // EP
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    dp = act_sharding.dp(mesh)
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    n_dp = 1
+    for a in dp_t:
+        n_dp *= mesh.shape[a]
+    # tokens per device after (dp x model) sharding of (B, S)
+    if B % n_dp or S % EP:
+        return _moe_dispatch(cfg, p, x)
+    T_loc = (B // n_dp) * (S // EP)
+    K = m.top_k
+    c_send = max(8, -(-int(T_loc * K / EP * m.capacity_factor) // 8) * 8)
+    c_exp = max(8, -(-int(EP * c_send / E_loc * m.capacity_factor) // 8) * 8)
+
+    has_shared = m.num_shared_experts and "shared" in p
+
+    def body(x_loc, w_router, we1, we3, we2, *shared_w):
+        # x_loc: (B_loc, S_loc, D); weights FSDP-sharded on "data"
+        Bl, Sl, _ = x_loc.shape
+        xf = x_loc.reshape(-1, D).astype(cd)
+        n = xf.shape[0]
+        wr = jax.lax.all_gather(w_router, "data", axis=0, tiled=True)
+        logits = xf.astype(jnp.float32) @ wr
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_idx = jax.lax.top_k(probs, K)
+        top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+        # load-balance aux (local estimate, averaged over the mesh)
+        one_hot = jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.float32)
+        f_e = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = m.num_experts * jnp.sum(f_e * p_e) * m.router_aux_weight
+        aux = jax.lax.pmean(aux, "model")
+        for a in dp_t:
+            aux = jax.lax.pmean(aux, a)
+
+        flat_e = top_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), K)
+        flat_p = top_p.reshape(-1).astype(cd)
+        target = flat_e // E_loc                       # owning model-rank
+        payload = xf[flat_t]
+        send, order, g_s, pos_c, keep = _pack(payload, target, EP, c_send,
+                                              payload)
+        eid_payload = (flat_e % E_loc).astype(jnp.float32)[:, None]
+        send_eid, *_ = _pack(eid_payload, target, EP, c_send, eid_payload)
+        # two-hop: deliver buckets to expert owners
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=True)
+        recv_eid = jax.lax.all_to_all(send_eid, "model", split_axis=0,
+                                      concat_axis=0, tiled=True)
+        rx = recv.reshape(EP * c_send, D)
+        re = recv_eid.reshape(EP * c_send).astype(jnp.int32)
+        # local dispatch over E_loc experts
+        buf, order2, e2_s, pos2_c, keep2 = _pack(rx, re, E_loc, c_exp, rx)
+        # FSDP gather of local expert weights along "data"
+        w1 = jax.lax.all_gather(we1, "data", axis=1, tiled=True)  # (E_loc,D,F)
+        w3 = jax.lax.all_gather(we3, "data", axis=1, tiled=True)
+        w2 = jax.lax.all_gather(we2, "data", axis=2, tiled=True)  # (E_loc,F,D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1.astype(cd)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, w3.astype(cd))
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w2.astype(cd))
+        back_tokens = _unpack(out_buf, order2, e2_s, pos2_c, keep2,
+                              EP * c_send)
+        back = jax.lax.all_to_all(back_tokens.reshape(EP, c_send, D),
+                                  "model", split_axis=0, concat_axis=0,
+                                  tiled=True)
+        contrib = _unpack(back, order, g_s, pos_c, keep, n * K)
+        y = jnp.zeros((n, D), cd).at[flat_t].add(contrib * flat_p[:, None])
+        if has_shared:
+            sw1 = jax.lax.all_gather(shared_w[0], "data", axis=0, tiled=True)
+            sw3 = jax.lax.all_gather(shared_w[1], "data", axis=0, tiled=True)
+            sw2 = jax.lax.all_gather(shared_w[2], "data", axis=1, tiled=True)
+            hs = jax.nn.silu(xf @ sw1.astype(cd)) * (xf @ sw3.astype(cd))
+            y = y + hs @ sw2.astype(cd)
+        return y.reshape(Bl, Sl, D), aux
+
+    x_spec = P(dp, "model", None)
+    in_specs = [x_spec, P("data", None),
+                P("model", "data", None), P("model", "data", None),
+                P("model", None, "data")]
+    args = [x, p["w_router"], p["we1"], p["we3"], p["we2"]]
+    if has_shared:
+        in_specs += [P("data", None), P("data", None), P(None, "data")]
+        args += [p["shared"]["w1"], p["shared"]["w3"], p["shared"]["w2"]]
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=(x_spec, P()), check_vma=False)
+    return fn(*args)

@@ -1,0 +1,220 @@
+"""Sharding rules: map parameter/activation logical dims onto the production mesh.
+
+Mesh axes (launch/mesh.py):
+  "pod"   — pure data parallelism across pods.  Parameters are REPLICATED across
+            pods on purpose: the paper's central finding is that the outer
+            (environment/data) axis should stay embarrassingly parallel; the only
+            cross-pod collective in training is the gradient all-reduce.
+  "data"  — batch sharding + FSDP parameter sharding (ZeRO-style).
+  "model" — tensor parallelism (heads / FFN / experts) + sequence sharding of
+            decode KV caches (distributed flash-decode).
+
+All helpers degrade gracefully: an axis is only used if the dim is divisible by
+the mesh axis size (GSPMD could pad, but divisible shardings keep the roofline
+arithmetic exact).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    n = axis_size(mesh, name)
+    return n > 1 and dim % n == 0
+
+
+def spec_for(mesh: Mesh, shape, *axes) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, (tuple, list)):
+            keep = tuple(a for a in ax if a in mesh.shape)
+            if keep and dim % axis_size(mesh, keep) == 0:
+                out.append(keep if len(keep) > 1 else keep[0])
+            else:
+                out.append(None)
+        else:
+            out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+def dp_axes(mesh: Mesh):
+    """Batch-sharding axes: ('pod','data') when the pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings.  Parameter trees are dicts whose leaves are arrays with
+# a known logical role, identified by key path.  Rules:
+#   - TP dim (heads*dh / d_ff / experts / vocab)     -> "model"
+#   - FSDP dim (the other large dim)                 -> "data"
+#   - pod                                            -> replicated
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (key-suffix, axes per dim) — stacked-layer arrays have a leading L dim
+    # which is always unsharded (rule applies to trailing dims).
+    ("wq",       ("data", "model")),
+    ("wq_a",     ("data", None)),       # MLA q down-proj (D, q_lora)
+    ("wq_b",     (None, "model")),      # MLA q up-proj (q_lora, H*dh)
+    ("wkv_a",    ("data", None)),       # MLA kv down-proj (D, c_kv + rope)
+    ("wkv_b",    (None, "model")),      # MLA kv up-proj (c_kv, H*(nope+v))
+    ("wk",       ("data", "model")),
+    ("wv",       ("data", "model")),
+    ("wo",       ("model", "data")),
+    ("bq",       ("model",)),
+    ("bk",       ("model",)),
+    ("bv",       ("model",)),
+    ("w1",       ("data", "model")),
+    ("w3",       ("data", "model")),
+    ("w2",       ("model", "data")),
+    ("w_router", ("data", None)),
+    # experts: (E, D, F) / (E, F, D): experts on "model" (expert parallel)
+    ("we1",      ("model", "data", None)),
+    ("we3",      ("model", "data", None)),
+    ("we2",      ("model", None, "data")),
+    ("embed",    ("model", "data")),    # vocab-parallel embedding
+    ("lm_head",  ("data", "model")),
+    ("pos_embed", (None, None)),
+    # rwkv6 / mamba params — channel dims on "model" where divisible
+    ("w_in",     ("data", "model")),
+    ("w_out",    ("model", "data")),
+    ("w_state",  (None, "model")),
+]
+
+
+def _spec_for_leaf(mesh: Mesh, path: str, shape, fsdp_axes=("data",)) -> P:
+    fsdp = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+
+    def xlate(ax):
+        return fsdp if ax == "data" else ax
+
+    for suffix, axes in _RULES:
+        if path.endswith(suffix):
+            ndim = len(shape)
+            axes = tuple(xlate(a) for a in axes)
+            if len(axes) < ndim:  # stacked-layer leading dims -> unsharded
+                axes = (None,) * (ndim - len(axes)) + tuple(axes)
+            elif len(axes) > ndim:
+                axes = axes[-ndim:]
+            return spec_for(mesh, shape, *axes)
+    # default: FSDP the largest dim if it fits and is large
+    if shape:
+        big = int(np.argmax(shape))
+        if shape[big] >= 1024 and _fits(shape[big], mesh, fsdp):
+            axes = [None] * len(shape)
+            axes[big] = fsdp
+            return P(*axes)
+    return P()
+
+
+def _key_path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(mesh: Mesh, params_shape: Any, fsdp_axes=("data",)):
+    """PartitionSpec pytree for a params shape-tree (from jax.eval_shape).
+
+    ``fsdp_axes=("pod","data")`` extends ZeRO-3 sharding across pods (used by
+    the 100B+ configs on the multi-pod mesh — DESIGN.md §8)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _spec_for_leaf(mesh, _key_path_str(kp), leaf.shape,
+                                        fsdp_axes),
+        params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape: Any):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params_shape))
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch: int, *rest_dims) -> P:
+    """(B, ...) with batch over the dp axes when divisible."""
+    dp = dp_axes(mesh)
+    if batch % axis_size(mesh, dp) == 0:
+        return P(dp if len(dp) > 1 else dp[0], *rest_dims)
+    if batch % axis_size(mesh, "data") == 0:
+        return P("data", *rest_dims)
+    return P(None, *rest_dims)
+
+
+def kv_cache_spec(mesh: Mesh, batch: int, seq: int) -> P:
+    """(L, B, S, H_kv, dh).  Distributed flash-decode: shard the cache sequence.
+
+    batch >= data-axis: batch on dp axes, seq on "model".
+    batch == 1 (long_500k): seq on ("data","model") — 256-way sequence shard.
+    """
+    dp = dp_axes(mesh)
+    ndp = axis_size(mesh, dp)
+    if batch % ndp == 0:
+        bs = dp if len(dp) > 1 else dp[0]
+        seq_ax = "model" if seq % axis_size(mesh, "model") == 0 else None
+        return P(None, bs, seq_ax, None, None)
+    # tiny batch: give the sequence everything
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    if seq % axis_size(mesh, axes) == 0:
+        return P(None, None, axes, None, None)
+    return P(None, None, None, None, None)
+
+
+def state_spec(mesh: Mesh, batch: int, heads: int) -> P:
+    """(L, B, H, d, d) recurrent state (rwkv/mamba)."""
+    b = batch_spec(mesh, batch)
+    h_ax = "model" if heads % axis_size(mesh, "model") == 0 else None
+    return P(None, b[0], h_ax, None, None)
+
+
+def cache_leaf_spec(mesh: Mesh, key: str, shape) -> P:
+    """Decode-cache leaf spec by key name (shared by launch/steps.py and the
+    in-loop constraints of model._scan_decode).
+
+    Stacked-layer leaves: (L, B, S, ...) for kv-likes, (L, B, ...) for
+    recurrent states."""
+    if len(shape) < 3:
+        return P()
+    L, B = shape[0], shape[1]
+    if key in ("k", "v", "xk", "xv"):          # (L, B, S, Hkv, dh)
+        kv5 = kv_cache_spec(mesh, B, shape[2])
+        return spec_for(mesh, shape, *kv5)
+    if key in ("c_kv", "k_rope"):              # (L, B, S, c)
+        kv5 = kv_cache_spec(mesh, B, shape[2])
+        return spec_for(mesh, shape, kv5[0], kv5[1], kv5[2], None)
+    bs = batch_spec(mesh, B)
+    if key == "state":                          # (L, B, H, N, N)
+        return spec_for(mesh, shape, None, bs[0], "model", None, None)
+    if key in ("xprev_t", "xprev_c"):           # (L, B, D)
+        return spec_for(mesh, shape, None, bs[0], None)
+    if key == "conv":                           # (L, B, W-1, di)
+        return spec_for(mesh, shape, None, bs[0], None, "model")
+    if key == "ssm":                            # (L, B, di, n)
+        return spec_for(mesh, shape, None, bs[0], "model", None)
+    return P()

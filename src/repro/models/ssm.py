@@ -1,0 +1,281 @@
+"""State-space layers: RWKV-6 "Finch" time/channel mix and Mamba selective SSM.
+
+RWKV-6 recurrence (per head, key-dim N x value-dim N state S):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+with data-dependent per-channel decay w_t (the Finch novelty, arXiv:2404.05892).
+
+The sequential form here is the reference; kernels/rwkv6 provides the chunked
+Pallas kernel that exposes MXU matmuls within chunks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv_tmix(cfg: ModelConfig, key):
+    dt = dtype_of(cfg.param_dtype)
+    D = cfg.d_model
+    H = cfg.num_heads
+    N = cfg.ssm.head_dim
+    assert H * N == D, (H, N, D)
+    ks = jax.random.split(key, 8)
+    lora = max(32, D // 16)
+    return {
+        # static token-shift mixes for r,k,v,g + data-dependent decay LoRA
+        "mu_r": jnp.full((D,), 0.5, dt), "mu_k": jnp.full((D,), 0.5, dt),
+        "mu_v": jnp.full((D,), 0.5, dt), "mu_g": jnp.full((D,), 0.5, dt),
+        "mu_w": jnp.full((D,), 0.5, dt),
+        "w_in": dense_init(ks[0], (D, 4 * D), dt),   # fused r,k,v,g projection
+        "w_decay_a": dense_init(ks[1], (D, lora), dt),
+        "w_decay_b": dense_init(ks[2], (lora, D), dt, scale=0.1),
+        "w0": jnp.full((D,), -6.0, dt),              # base decay bias
+        "u": (jax.random.normal(ks[3], (H, N), jnp.float32) * 0.1).astype(dt),
+        "w_out": dense_init(ks[4], (D, D), dt),
+        "ln_x_scale": jnp.ones((D,), dt),            # per-head group-norm scale
+    }
+
+
+def _tshift(x, x_prev):
+    """x: (B,S,D). shift right by one; x_prev fills position 0."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv6_project(cfg: ModelConfig, p, x, x_prev):
+    """-> r,k,v,g (B,S,H,N), w (B,S,H,N) decay in (0,1), plus last x for shift."""
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    H, N = cfg.num_heads, cfg.ssm.head_dim
+    x = x.astype(cd)
+    xs = _tshift(x, x_prev.astype(cd))
+    def mix(mu):
+        return x + (xs - x) * mu.astype(cd)
+    rkvg = mix(p["mu_r"])  # shared mix for the fused projection (simplified ddlerp)
+    rkvg = rkvg @ p["w_in"].astype(cd)
+    r, k, v, g = jnp.split(rkvg, 4, axis=-1)
+    xw = mix(p["mu_w"])
+    dec = (xw @ p["w_decay_a"].astype(cd))
+    dec = jnp.tanh(dec) @ p["w_decay_b"].astype(cd)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32)
+                          + dec.astype(jnp.float32))))      # (B,S,D) in (0,1)
+    shp = (B, S, H, N)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g.reshape(B, S, D), w.reshape(shp).astype(jnp.float32), x[:, -1, :])
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """Sequential WKV6.  r,k,v,w: (B,S,H,N) — w fp32 decay; u: (H,N);
+    state: (B,H,N,N).  Returns (out (B,S,H,N), new_state)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                 # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    new_state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), new_state
+
+
+def wkv6_chunked(r, k, v, w, u, state, *, chunk: int = 64):
+    """Chunked WKV6: same math as kernels/rwkv6 but in pure jnp.
+
+    Within a chunk everything is matmuls; the per-token scan only carries the
+    (B,H,N,N) state across chunk boundaries, so backward saves O(S/chunk)
+    states instead of O(S) (the per-step scan costs 153 GiB/device on the
+    rwkv6-3b train_4k dry-run).  See kernels/rwkv6/kernel.py for the algebra.
+    """
+    B, S, H, N = r.shape
+    if S % chunk or S <= chunk:
+        return wkv6_scan(r, k, v, w, u, state)
+    nc = S // chunk
+    # keep xs in the input dtype; upcast per chunk inside the body (a global
+    # fp32 copy of r,k,v,w at 32k prefill is ~4x the activation budget)
+    rf, kf, vf = (jnp.moveaxis(a, 1, 0).reshape(nc, chunk, B, H, N)
+                  for a in (r, k, v))
+    wf = jnp.moveaxis(w, 1, 0).reshape(nc, chunk, B, H, N).astype(r.dtype)
+    uf = u.astype(jnp.float32)
+    ti = jnp.arange(chunk)[:, None]
+    si = jnp.arange(chunk)[None, :]
+    tril = (si < ti).astype(jnp.float32)
+
+    def one_chunk(S0, inp):
+        # (C, B, H, N) -> (B, H, C, N), fp32 per chunk
+        rc, kc, vc, wc = (jnp.transpose(a, (1, 2, 0, 3)).astype(jnp.float32)
+                          for a in inp)
+        lw = jnp.log(jnp.maximum(wc, 1e-30))
+        lp = jnp.cumsum(lw, axis=2)
+        r_t = rc * jnp.exp(lp - lw)                 # r * P_{t-1}
+        k_t = kc * jnp.exp(-lp)                     # k / P_t
+        inter = jnp.einsum("bhcn,bhnm->bhcm", r_t, S0)
+        A = jnp.einsum("bhcn,bhsn->bhcs", r_t, k_t) * tril[None, None]
+        intra = jnp.einsum("bhcs,bhsm->bhcm", A, vc)
+        diag = jnp.sum(rc * uf[None, :, None, :] * kc, axis=-1,
+                       keepdims=True)
+        out = inter + intra + diag * vc             # (B,H,C,N)
+        decay = jnp.exp(lp[:, :, -1, :])            # (B,H,N)
+        kv = jnp.einsum("bhsn,bhsm->bhnm", k_t, vc)
+        S1 = decay[..., None] * (S0 + kv)
+        return S1, jnp.transpose(out, (2, 0, 1, 3))  # (C,B,H,N)
+
+    one_chunk = jax.checkpoint(one_chunk)
+    S_fin, outs = jax.lax.scan(one_chunk, state.astype(jnp.float32),
+                               (rf, kf, vf, wf))
+    out = outs.reshape(S, B, H, N)
+    return jnp.moveaxis(out, 0, 1), S_fin
+
+
+def apply_rwkv_tmix(cfg: ModelConfig, p, x, x_prev, state, *,
+                    use_pallas: bool = False):
+    """x: (B,S,D) -> (out, new_x_prev, new_state)."""
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    H, N = cfg.num_heads, cfg.ssm.head_dim
+    r, k, v, g, w, x_last = rwkv6_project(cfg, p, x, x_prev)
+    if use_pallas:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+        out, new_state = rwkv_ops.wkv6(r, k, v, w, p["u"], state)
+    elif S >= 128:
+        out, new_state = wkv6_chunked(r, k, v, w, p["u"], state)
+    else:
+        out, new_state = wkv6_scan(r, k, v, w, p["u"], state)
+    # per-head group norm
+    of = out.astype(jnp.float32)
+    mu = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + 1e-5)
+    of = of.reshape(B, S, D) * p["ln_x_scale"].astype(jnp.float32)
+    out = (of.astype(cd) * jax.nn.silu(g.astype(cd)))
+    return out @ p["w_out"].astype(cd), x_last, new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (token-shifted squared-relu FFN with receptance gate)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cmix(cfg: ModelConfig, key):
+    dt = dtype_of(cfg.param_dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, dt), "mu_r": jnp.full((D,), 0.5, dt),
+        "w1": dense_init(k1, (D, F), dt), "w2": dense_init(k2, (F, D), dt),
+        "wr": dense_init(k3, (D, D), dt),
+    }
+
+
+def apply_rwkv_cmix(cfg: ModelConfig, p, x, x_prev):
+    cd = dtype_of(cfg.compute_dtype)
+    x = x.astype(cd)
+    xs = _tshift(x, x_prev.astype(cd))
+    xk = x + (xs - x) * p["mu_k"].astype(cd)
+    xr = x + (xs - x) * p["mu_r"].astype(cd)
+    h = jnp.square(jax.nn.relu(xk @ p["w1"].astype(cd))) @ p["w2"].astype(cd)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(cd)) * h
+    return out, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective SSM (Hymba's SSM heads)
+# ---------------------------------------------------------------------------
+
+def init_mamba(cfg: ModelConfig, key, d_inner: int = 0):
+    s = cfg.ssm
+    dt = dtype_of(cfg.param_dtype)
+    D = cfg.d_model
+    di = d_inner or s.expand * D
+    n = s.state_size
+    dt_rank = s.dt_rank or -(-D // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (D, 2 * di), dt),          # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bcdt": dense_init(ks[2], (di, 2 * n + dt_rank), dt),
+        "w_dt": dense_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.full((di,), -4.0, dt),                # softplus(-4)~0.018
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()),
+        "Dskip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, D), dt),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x: (B,S,di); w: (W,di) depthwise.  Returns (y, new_conv_state (B,W-1,di))."""
+    W = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return y + b[None, None, :], xp[:, -(W - 1):, :]
+
+
+def apply_mamba(cfg: ModelConfig, p, x, conv_state=None, ssm_state=None):
+    """x: (B,S,D) -> (out, new_conv_state, new_ssm_state (B,di,n))."""
+    s = cfg.ssm
+    cd = dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    di = p["w_in"].shape[1] // 2
+    n = s.state_size
+    dt_rank = p["w_bcdt"].shape[1] - 2 * n
+    xz = x.astype(cd) @ p["w_in"].astype(cd)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, new_conv = _causal_conv(xi, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                                None if conv_state is None else conv_state.astype(cd))
+    xi = jax.nn.silu(xi)
+    bcdt = xi @ p["w_bcdt"].astype(cd)
+    Bm, Cm, dt_in = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["w_dt"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di,n)
+    # discretize: h_t = exp(dt*A) h + dt * B_t * x_t
+    dA = jnp.exp(dt[..., None] * A[None, None])               # (B,S,di,n)
+    dBx = (dt * xi.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, di, n), jnp.float32)
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    chunk = 64
+    if S > chunk and S % chunk == 0:
+        # chunk + remat: backward saves only chunk-boundary states instead of
+        # every step's (B, di, n) state (the naive scan's saved-state stack
+        # dominates the hymba train_4k dry-run memory)
+        xs_c = jax.tree.map(
+            lambda a: a.reshape((S // chunk, chunk) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_body(h, inp_c):
+            return jax.lax.scan(step, h, inp_c)
+
+        new_state, ys = jax.lax.scan(chunk_body,
+                                     ssm_state.astype(jnp.float32), xs_c)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        new_state, ys = jax.lax.scan(step, ssm_state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1)                                # (B,S,di)
+    y = y + p["Dskip"][None, None, :] * xi.astype(jnp.float32)
+    out = (y.astype(cd) * jax.nn.silu(z)) @ p["w_out"].astype(cd)
+    return out, new_conv.astype(x.dtype), new_state

@@ -1,0 +1,193 @@
+"""Optimizers in raw JAX: AdamW and Adafactor (+ grad clip, LR schedules).
+
+Adafactor (factored second moment, no first moment, bf16-friendly) is the
+HBM-fit policy for the 123B/405B/671B configs (DESIGN.md §8).  States are
+plain pytrees so they shard with the same rules as the parameters they mirror.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Norm in fp32; scaling in the native dtype (a tree-wide fp32 upcast
+    would materialize a full-precision copy of every gradient — 10 GiB/device
+    at 671B scale)."""
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr_fn, *, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          max_grad_norm=0.0) -> Optimizer:
+    if not callable(lr_fn):
+        lr_fn = constant_schedule(lr_fn)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+
+        def upd(p, m_, v_):
+            du = m_ / (jnp.sqrt(v_) + eps)
+            if weight_decay:
+                du = du + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * du).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mh, vh)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), simplified: factored v, no first moment
+# ---------------------------------------------------------------------------
+
+def adafactor(lr_fn, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              max_grad_norm=0.0, min_dim_size_to_factor=128,
+              update_dtype=jnp.float32) -> Optimizer:
+    """``update_dtype=bfloat16`` computes the update direction u in bf16
+    (factored stats stay fp32).  Used by the 100B+ configs: the fp32 u would
+    be a params-sized fp32 transient, and XLA-CPU's loop widening hoists such
+    converts to full-stack buffers (see EXPERIMENTS.md §Dry-run notes)."""
+    if not callable(lr_fn):
+        lr_fn = constant_schedule(lr_fn)
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr = lr_fn(step)
+
+        def upd_one(p, g, s):
+            # barrier: stop XLA from canonicalizing convert(slice(g)) into
+            # slice(convert(g)) and hoisting a full-stack fp32 copy out of
+            # the chunked-update loop (measured 2x3.2 GiB on deepseek-v3)
+            p, g = jax.lax.optimization_barrier((p, g))
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                new_s = {"vr": vr, "vc": vc}
+                if update_dtype == jnp.float32:
+                    vhat = (vr[..., None] * vc[..., None, :]
+                            / denom[..., None])
+                    u = gf * jax.lax.rsqrt(vhat + eps)
+                else:
+                    # bf16 update direction, factored rsqrt applied as two
+                    # broadcasts — no params-sized fp32 transient
+                    inv_r = jax.lax.rsqrt(vr / denom + eps).astype(
+                        update_dtype)
+                    inv_c = jax.lax.rsqrt(vc + eps).astype(update_dtype)
+                    u = (g.astype(update_dtype) * inv_r[..., None]
+                         * inv_c[..., None, :])
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": vhat}
+                u = gf * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u.astype(jnp.float32)))
+                           + 1e-30)
+            scale = (lr / jnp.maximum(1.0, rms / clip_threshold))
+            return (p - (u * scale.astype(u.dtype)).astype(p.dtype)
+                    ).astype(p.dtype), new_s
+
+        def upd(p, g, s):
+            # layer-stacked params: chunk the fp32 update over the leading
+            # dim (lax.map) so transients are 1-layer sized, not L-layer
+            if p.ndim >= 3 and p.shape[0] > 4 and "vr" in s \
+                    and s["vr"].shape[:1] == p.shape[:1]:
+                new_p, new_s = jax.lax.map(
+                    lambda args: upd_one(*args), (p, g, s))
+                return new_p, new_s
+            return upd_one(p, g, s)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = tdef.unflatten([o[1] for o in out])
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,8 @@
+import os
+
+# Tests must see 1 CPU device (the 512-device override is dryrun-only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

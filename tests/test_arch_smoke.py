@@ -1,0 +1,75 @@
+"""Per-architecture smoke tests: reduced variant (2 layers, d_model<=512,
+<=4 experts) runs one forward/train step on CPU; output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, list_configs
+from repro.launch import steps
+from repro.models import frontend as fe_mod
+from repro.models import model as M
+
+ARCHS = list_configs()
+
+
+def _inputs(cfg, B=2, S=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend:
+        T = fe_mod.num_frontend_tokens(cfg, S)
+        fe = jax.random.normal(key, (B, T, fe_mod.frontend_dim(cfg)))
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tokens, fe = _inputs(cfg)
+    logits, aux = M.forward_train(cfg, params, tokens, fe)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss_shape(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = steps.make_opt(cfg)
+    opt_state = opt.init(params)
+    train_step = jax.jit(steps.make_train_step(cfg))
+    B, S = 2, 16
+    tokens, fe = _inputs(cfg)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if fe is not None:
+        batch["frontend_embeds"] = fe
+    step = jnp.int32(0)
+    losses = []
+    for _ in range(3):
+        params, opt_state, step, metrics = train_step(params, opt_state,
+                                                      step, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(not jnp.isnan(l) for l in losses)
+    assert losses[-1] < losses[0], losses  # memorizes a fixed tiny batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill matches teacher-forced forward logits."""
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens, fe = _inputs(cfg)
+    full_logits, _ = M.forward_train(cfg, params, tokens, fe)
+    lp, cache = M.prefill(cfg, params, tokens[:, :S - 1], cache_len=S + 2,
+                          frontend_embeds=fe)
+    # decode the last token: should match the forward pass at position S-1
+    lg, cache = M.decode_step(cfg, params, cache, tokens[:, S - 1:S],
+                              jnp.int32(S - 1))
+    ref = full_logits[:, S - 1]
+    err = float(jnp.max(jnp.abs(lg - ref)))
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    assert err / scale < 0.05, (arch, err, scale)

@@ -1,0 +1,118 @@
+"""CFD solver physics validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import poisson, probes, solver
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig, build_geometry, probe_positions
+
+CFG = GridConfig(res=8, dt=0.01, poisson_iters=60)
+
+
+@pytest.fixture(scope="module")
+def geom():
+    return build_geometry(CFG)
+
+
+@pytest.fixture(scope="module")
+def developed(geom):
+    """~8 t.u. of uncontrolled flow (module-scoped: shared by tests)."""
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(CFG, geom)
+
+    def body(flow, _):
+        flow, out = solver.step(CFG, ga, flow, jnp.float32(0.0))
+        return flow, (out.cd, out.cl)
+
+    st, (cds, cls) = jax.jit(
+        lambda s: jax.lax.scan(body, s, None, length=800))(st)
+    return st, np.asarray(cds), np.asarray(cls), ga
+
+
+def test_poisson_residual_reduction():
+    rhs = jax.random.normal(jax.random.PRNGKey(0), (40, 176))
+    p0 = jnp.zeros_like(rhs)
+    r0 = float(jnp.linalg.norm(poisson.residual(p0, rhs, 0.125, 0.125)))
+    p = poisson.solve(rhs, 0.125, 0.125, iters=200)
+    r = float(jnp.linalg.norm(poisson.residual(p, rhs, 0.125, 0.125)))
+    assert r < 0.05 * r0, (r, r0)
+
+
+def test_divergence_free_interior(developed):
+    st, _, _, _ = developed
+    div = np.asarray(solver.divergence(st.u, st.v, CFG))
+    from repro.cfd.grid import CYL_X, CYL_Y, cell_centers
+    xc, yc = cell_centers(CFG)
+    xx, yy = np.meshgrid(xc, yc)
+    r = np.sqrt((xx - CYL_X) ** 2 + (yy - CYL_Y) ** 2)
+    interior = (r > 0.5 + 2 * CFG.dx) & (xx < 18.0)
+    assert np.abs(div[interior]).max() < 0.05
+
+
+def test_drag_in_confined_cylinder_range(developed):
+    _, cds, _, _ = developed
+    cd = cds[-200:].mean()
+    # Schäfer confined benchmark: C_D ~ 3.2; coarse IB overestimates somewhat
+    assert 2.5 < cd < 4.5, cd
+
+
+def test_no_nan_and_bounded_velocity(developed):
+    st, _, _, _ = developed
+    assert not np.isnan(np.asarray(st.u)).any()
+    assert np.abs(np.asarray(st.u)).max() < 3.5   # < ~2.3 x U_m physically
+
+
+def test_mass_conservation(developed):
+    st, _, _, _ = developed
+    influx = float(jnp.sum(st.u[:, 0]) * CFG.dy)
+    outflux = float(jnp.sum(st.u[:, -1]) * CFG.dy)
+    assert abs(outflux - influx) / abs(influx) < 0.02
+
+
+def test_jets_alter_lift(developed, geom):
+    """Blowing from the top jet should push lift measurably."""
+    st, _, _, ga = developed
+
+    def run(jet):
+        def body(flow, _):
+            flow, out = solver.step(CFG, ga, flow, jet)
+            return flow, out.cl
+        _, cls = jax.lax.scan(body, st, None, length=100)
+        return float(jnp.mean(cls[-50:]))
+
+    cl_neutral = run(jnp.float32(0.0))
+    cl_blow = run(jnp.float32(1.0))
+    assert abs(cl_blow - cl_neutral) > 0.05, (cl_neutral, cl_blow)
+
+
+def test_probe_layout_149():
+    pts = probe_positions()
+    assert pts.shape == (149, 2)
+    # all probes inside the domain, outside the cylinder
+    assert (pts[:, 0] > -2).all() and (pts[:, 0] < 20).all()
+    r = np.sqrt(pts[:, 0] ** 2 + (pts[:, 1] - 0.05) ** 2)
+    assert (r > 0.5).all()
+
+
+def test_probe_sampling_matches_bilinear(geom):
+    p = jnp.asarray(np.random.RandomState(0).randn(CFG.ny, CFG.nx),
+                    jnp.float32)
+    vals = probes.sample_pressure(geom.probe_ij, p)
+    assert vals.shape == (149,)
+    assert not bool(jnp.any(jnp.isnan(vals)))
+
+
+def test_env_step_api():
+    env = CylinderEnv(EnvConfig(grid=GridConfig(res=6, dt=0.012,
+                                                poisson_iters=40),
+                                steps_per_action=10, warmup_time=5.0))
+    st, obs = env.reset()
+    assert obs.shape == (149,)
+    assert env.cfg.cd0 > 0  # calibrated in warmup
+    st2, out = jax.jit(env.env_step)(st, jnp.float32(0.5))
+    # eq. (11): V_1 = V_0 + beta*(a*Um - V_0)
+    expect = 0.4 * 0.5 * env.cfg.action_max
+    assert abs(float(st2.jet_vel) - expect) < 1e-5
+    assert not bool(jnp.isnan(out.reward))

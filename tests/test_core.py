@@ -1,0 +1,126 @@
+"""Core (paper-contribution) tests: planner properties, scaling-model fit,
+I/O interface round trips.  Includes hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interface import ExchangeRecord, FileInterface
+from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
+    optimize_plan
+from repro.core.scaling_model import (PAPER_TABLE2, calibrate_to_paper,
+                                      fig7_rows, table1_rows, table2_rows)
+
+
+# ---------------------------------------------------------------------------
+# planner properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(n_total=st.integers(min_value=1, max_value=128))
+def test_optimal_plan_is_brute_force_minimum(n_total):
+    m = CostModel()
+    best = optimize_plan(n_total, m)
+    for p in enumerate_plans(n_total):
+        assert m.t_training(best, 300) <= m.t_training(p, 300) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(min_value=1, max_value=64))
+def test_cfd_efficiency_decreasing(n):
+    m = CostModel()
+    assert m.cfd_efficiency(n) <= 1.0 + 1e-9
+    if n > 1:
+        assert m.cfd_efficiency(n) <= m.cfd_efficiency(n - 1) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_envs=st.integers(min_value=1, max_value=60),
+       io=st.floats(min_value=0, max_value=2e7))
+def test_more_io_never_faster(n_envs, io):
+    m = CostModel()
+    p = ParallelPlan(n_envs, n_envs, 1)
+    assert m.t_episode(p, io_bytes=io) >= m.t_episode(p, io_bytes=0.0) - 1e-9
+
+
+def test_paper_finding_nranks1_optimal():
+    """The paper's central claim: at 60 workers the optimum is 60 x 1."""
+    m = calibrate_to_paper()
+    best = optimize_plan(60, m)
+    assert best.n_ranks == 1 and best.n_envs == 60
+
+
+def test_calibration_fits_paper_tables():
+    m = calibrate_to_paper()
+    errs = []
+    for r in table2_rows(m):
+        pb, pd, po = r["paper"]
+        errs += [abs(r["t_baseline_h"] - pb) / pb,
+                 abs(r["t_disabled_h"] - pd) / pd,
+                 abs(r["t_optimized_h"] - po) / po]
+    assert np.mean(errs) < 0.10, np.mean(errs)   # <10% mean error on Table II
+    assert np.max(errs) < 0.25
+
+
+def test_fig7_shape_matches_paper():
+    m = calibrate_to_paper()
+    rows = {r["n_ranks"]: r["efficiency"] for r in fig7_rows(m)}
+    assert rows[2] > 0.75                 # paper: ~90%
+    assert rows[16] < 0.30                # paper: <20%
+
+
+def test_io_optimization_recovers_efficiency():
+    """Paper: optimized I/O lifts 60-core efficiency from ~49% to ~78%."""
+    m = calibrate_to_paper()
+    p = ParallelPlan(60, 60, 1)
+    base = m.efficiency(p)
+    opt = m.efficiency(p, io_bytes=1.2e6)
+    assert opt > base * 1.2
+    assert 0.3 < base < 0.7
+    assert opt > 0.55
+
+
+# ---------------------------------------------------------------------------
+# I/O interface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["file_baseline", "optimized",
+                                  "optimized_zstd"])
+def test_interface_roundtrip(tmp_path, mode):
+    fi = FileInterface(mode, str(tmp_path), 0, flowfield_floats=1000)
+    obs = np.random.RandomState(0).randn(149)
+    rec = ExchangeRecord(obs=obs, forces=np.random.randn(10, 2), action=0.25)
+    fi.inject_action(0.25)
+    nb = fi.write_actuation(3, rec)
+    assert nb > 0
+    back = fi.read_actuation(3)
+    np.testing.assert_allclose(np.asarray(back.obs, np.float64).ravel(),
+                               obs, rtol=1e-4, atol=1e-5)
+    assert abs(fi.read_action() - 0.25) < 1e-9
+    fi.cleanup()
+
+
+def test_interface_sizes_match_paper():
+    """Baseline ~5 MB / actuation, optimized ~1.2 MB (-76%), paper §III.D."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        base = FileInterface("file_baseline", td + "/b", 0)
+        opt = FileInterface("optimized", td + "/o", 0)
+        rec = ExchangeRecord(obs=np.zeros(149), forces=np.zeros((10, 2)),
+                             action=0.0)
+        nb = base.write_actuation(0, rec)
+        no = opt.write_actuation(0, rec)
+        assert 4.0e6 < nb < 6.5e6, nb
+        assert 1.0e6 < no < 1.5e6, no
+        assert no < 0.35 * nb            # >= 65% reduction
+        base.cleanup(); opt.cleanup()
+
+
+def test_interface_action_regex_injection(tmp_path):
+    fi = FileInterface("file_baseline", str(tmp_path), 0,
+                       flowfield_floats=10)
+    for a in (0.0, -1.25, 0.37281):
+        fi.inject_action(a)
+        assert abs(fi.read_action() - a) < 1e-7
+    text = (fi.dir / "jetVelocity").read_text()
+    assert "jet2" in text  # antisymmetric jet written too
+    fi.cleanup()

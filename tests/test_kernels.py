@@ -1,0 +1,137 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import poisson as cfd_poisson
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.poisson import ops as poisson_ops
+from repro.kernels.poisson.kernel import rb_sor_slabs
+from repro.kernels.poisson.ref import rb_sor_slabs_ref
+from repro.kernels.rwkv6 import ops as rwkv_ops
+from repro.kernels.rwkv6.kernel import wkv6_bhsn
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+# ---------------------------------------------------------------------------
+# poisson
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ny,nx,nslabs", [(16, 64, 2), (48, 256, 4),
+                                          (32, 128, 1), (40, 160, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_poisson_kernel_matches_ref(ny, nx, nslabs, dtype):
+    key = jax.random.PRNGKey(ny * nx)
+    rhs = jax.random.normal(key, (ny, nx), dtype)
+    p0 = jax.random.normal(jax.random.fold_in(key, 1), (ny, nx), dtype)
+    a = rb_sor_slabs(p0, rhs, dx=0.05, dy=0.04, omega=1.6, nslabs=nslabs,
+                     inner_iters=3)
+    b = rb_sor_slabs_ref(p0, rhs, dx=0.05, dy=0.04, omega=1.6, nslabs=nslabs,
+                         inner_iters=3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_poisson_kernel_solver_converges():
+    rhs = jax.random.normal(jax.random.PRNGKey(0), (48, 256))
+    sol = poisson_ops.rb_sor(rhs, 0.05, 0.05, iters=800, inner_iters=4,
+                             interpret=True)
+    r = cfd_poisson.residual(sol, rhs, 0.05, 0.05)
+    r0 = cfd_poisson.residual(jnp.zeros_like(rhs), rhs, 0.05, 0.05)
+    assert float(jnp.linalg.norm(r)) < 0.05 * float(jnp.linalg.norm(r0))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,S,dh", [(2, 128, 64), (4, 256, 64),
+                                     (1, 256, 128), (2, 512, 32)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(BH, S, dh, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + dh), 3)
+    q = jax.random.normal(ks[0], (BH, S, dh), dtype)
+    k = jax.random.normal(ks[1], (BH, S, dh), dtype)
+    v = jax.random.normal(ks[2], (BH, S, dh), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, sliding_window=window,
+                               block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, sliding_window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_flash_attention_gqa_wrapper():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    out = flash_ops.flash_attention(q, k, v, interpret=True)
+    from repro.models.attention import causal_mask, gqa_attend
+    ref = gqa_attend(q, k, v, causal_mask(128, 128))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,S,N,chunk", [(2, 64, 16, 16), (4, 128, 32, 32),
+                                          (1, 96, 64, 16), (3, 256, 32, 64)])
+def test_wkv6_kernel_sweep(BH, S, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S * N), 6)
+    r = jax.random.normal(ks[0], (BH, S, N)) * 0.5
+    k = jax.random.normal(ks[1], (BH, S, N)) * 0.5
+    v = jax.random.normal(ks[2], (BH, S, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (BH, S, N)) - 2.0))
+    u = jax.random.normal(ks[4], (BH, 1, N)) * 0.3
+    s0 = jax.random.normal(ks[5], (BH, N, N)) * 0.1
+    out, s_fin = wkv6_bhsn(r, k, v, w, u, s0, chunk=chunk)
+    ref_out, ref_s = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(ref_s),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_ops_layout():
+    from repro.models.ssm import wkv6_scan
+    B, S, H, N = 2, 64, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 2.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    st = jnp.zeros((B, H, N, N))
+    o1, s1 = rwkv_ops.wkv6(r, k, v, w, u, st, interpret=True)
+    o2, s2 = wkv6_scan(r, k, v, w, u, st)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunked_jnp_matches_scan():
+    from repro.models.ssm import wkv6_chunked, wkv6_scan
+    B, S, H, N = 2, 256, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 2.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) * 0.1
+    o1, s1 = wkv6_chunked(r, k, v, w, u, s0)
+    o2, s2 = wkv6_scan(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede jax import — same rule as launch/dryrun.py)
+
+"""Beyond-paper: lower the paper's own DRL x CFD workload on the production
+TPU mesh — 256 environments on the "data" axis (the paper's N_envs) with the
+cylinder grid optionally sharded over "model" (the paper's N_ranks).
+
+    PYTHONPATH=src python tools/dryrun_drl.py [--n-ranks 16]
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.core import runner
+from repro.drl import networks
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-envs", type=int, default=256)
+    ap.add_argument("--n-ranks", type=int, default=1)
+    ap.add_argument("--actions", type=int, default=100)
+    ap.add_argument("--res", type=int, default=16)
+    ap.add_argument("--out", default="artifacts/dryrun_drl.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    env = CylinderEnv(EnvConfig(
+        grid=GridConfig(res=args.res, dt=0.005, poisson_iters=60),
+        steps_per_action=50, actions_per_episode=args.actions,
+        warmup_time=0.0))
+    # abstract env state batch (no warmup on 512 fake devices)
+    from repro.cfd import solver
+    ny, nx = env.cfg.grid.ny, env.cfg.grid.nx
+    N = args.n_envs
+    st_b = jax.eval_shape(
+        lambda: runner.jax.tree.map(
+            lambda a: jnp.zeros((N,) + a.shape, a.dtype),
+            __import__("repro.cfd.env", fromlist=["EnvState"]).EnvState(
+                flow=solver.FlowState(
+                    u=jnp.zeros((ny, nx + 1), jnp.float32),
+                    v=jnp.zeros((ny + 1, nx), jnp.float32),
+                    p=jnp.zeros((ny, nx), jnp.float32)),
+                jet_vel=jnp.float32(0), t=jnp.int32(0))))
+    obs_b = jax.ShapeDtypeStruct((N, 149), jnp.float32)
+    pcfg = networks.PolicyConfig()
+    params = jax.eval_shape(
+        lambda: networks.init_actor_critic(pcfg, jax.random.PRNGKey(0)))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    jitted, _ = runner.make_distributed_collect(
+        env, mesh, N, args.actions, n_ranks=args.n_ranks)
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(params, st_b, obs_b, key)
+        compiled = lowered.compile()
+    t = time.time() - t0
+    m = compiled.memory_analysis()
+    a = hlo_analysis.analyze(compiled.as_text())
+    rec = {
+        "n_envs": N, "n_ranks": args.n_ranks, "grid": [ny, nx],
+        "actions": args.actions, "compile_s": t,
+        "peak_per_device_bytes": (m.argument_size_in_bytes
+                                  + m.temp_size_in_bytes
+                                  + m.output_size_in_bytes
+                                  - m.alias_size_in_bytes),
+        "hlo": a,
+        "terms_s": {"compute": a["flops"] / 197e12,
+                    "memory": a["bytes"] / 819e9,
+                    "collective": a["coll_bytes"] / 50e9},
+    }
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rec, indent=1, default=float))
+    print(json.dumps(rec["terms_s"], indent=1))
+    print(f"peak/dev {rec['peak_per_device_bytes']/2**20:.1f} MiB  "
+          f"compile {t:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 6: reward convergence is invariant to the number of parallel
+environments.  Trains the same reduced AFC problem with different N_envs and
+the SAME number of policy updates; writes artifacts/fig6.json.
+
+    PYTHONPATH=src python tools/fig6_env_invariance.py --episodes 30
+"""
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.cfd.env import EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl.ppo import PPOConfig
+from repro.drl.train import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=30)
+    ap.add_argument("--envs", type=int, nargs="+", default=[2, 6])
+    ap.add_argument("--out", default="artifacts/fig6.json")
+    args = ap.parse_args()
+
+    results = {}
+    for n in args.envs:
+        cfg = TrainConfig(
+            env=EnvConfig(grid=GridConfig(res=8, dt=0.01, poisson_iters=50),
+                          steps_per_action=25, actions_per_episode=40,
+                          warmup_time=20.0),
+            ppo=PPOConfig(lr=3e-4, epochs=6, minibatches=4,
+                          entropy_coef=0.005),
+            n_envs=n, episodes=args.episodes, seed=0)
+        hist, _ = train(cfg, log_fn=lambda s: print(f"[envs={n}] {s}",
+                                                    flush=True))
+        results[str(n)] = {k: np.asarray(v).tolist() for k, v in hist.items()}
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1))
+    for n, h in results.items():
+        r = np.asarray(h["reward"])
+        k = max(3, len(r) // 6)
+        print(f"n_envs={n}: return {np.mean(r[:k]):+.2f} -> "
+              f"{np.mean(r[-k:]):+.2f}")
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

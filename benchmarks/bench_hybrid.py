@@ -17,7 +17,9 @@ from repro.core.scaling_model import calibrate_to_paper, fig10_breakdown, \
     table1_rows
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # pure cost-model evaluation — already cheap; smoke changes nothing
+    del smoke
     m = calibrate_to_paper()
     for r in table1_rows(m):
         if r["n_envs"] in (1, 2, 10, 30, 60) or \

@@ -2,21 +2,26 @@
 
 Writes+reads one actuation period's files per mode (ascii 5 MB baseline vs
 1.2 MB binary vs zstd), then feeds the measured per-actuation costs into the
-calibrated scaling model to produce the Table II analogue.
+calibrated scaling model to produce the Table II analogue.  Also measures the
+engine-side trajectory spill (``drl.engine.TrajectorySink``), which reuses the
+same binary codec for whole-episode dumps (§IV refinement).
 """
-import dataclasses
 import tempfile
 
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
 from repro.core.interface import ExchangeRecord, FileInterface
 from repro.core.plan import ParallelPlan
 from repro.core.scaling_model import calibrate_to_paper
+from repro.drl.engine import FileSink, MemorySink
+from repro.drl.rollout import Trajectory
 
 
-def _measure_mode(mode: str, tmp: str, iters: int = 5):
-    fi = FileInterface(mode, f"{tmp}/{mode}", 0)
+def _measure_mode(mode: str, tmp: str, iters: int = 5,
+                  flowfield_floats=None):
+    fi = FileInterface(mode, f"{tmp}/{mode}", 0,
+                       flowfield_floats=flowfield_floats)
     rng = np.random.RandomState(0)
     rec = ExchangeRecord(obs=rng.randn(149), forces=rng.randn(10, 2),
                          action=0.3,
@@ -35,13 +40,46 @@ def _measure_mode(mode: str, tmp: str, iters: int = 5):
     return times[len(times) // 2], float(np.mean(sizes))
 
 
-def run() -> None:
+def _synthetic_traj(n_envs: int, horizon: int) -> Trajectory:
+    rng = np.random.RandomState(1)
+    return Trajectory(
+        obs=rng.randn(n_envs, horizon, 149).astype(np.float32),
+        act=rng.randn(n_envs, horizon, 1).astype(np.float32),
+        logp=rng.randn(n_envs, horizon).astype(np.float32),
+        reward=rng.randn(n_envs, horizon).astype(np.float32),
+        cd=rng.randn(n_envs, horizon).astype(np.float32),
+        cl=rng.randn(n_envs, horizon).astype(np.float32),
+        last_obs=rng.randn(n_envs, 149).astype(np.float32))
+
+
+def _measure_sinks(tmp: str, smoke: bool) -> None:
+    n_envs, horizon = (2, 8) if smoke else (16, 100)
+    traj = _synthetic_traj(n_envs, horizon)
+    sinks = [("memory", MemorySink()),
+             ("binary", FileSink(f"{tmp}/sink_bin", codec="binary")),
+             ("zstd", FileSink(f"{tmp}/sink_zstd", codec="zstd"))]
+    for name, sink in sinks:
+        episodes = 1 if smoke else 3
+        for ep in range(episodes):
+            sink.write(ep, traj)
+        per_ep = sink.time_spent / sink.episodes
+        emit(f"sink_{name}", per_ep * 1e6,
+             f"bytes_per_episode={sink.bytes_written // sink.episodes};"
+             f"n_envs={n_envs};horizon={horizon};codec="
+             f"{getattr(sink, 'codec', 'ram')}")
+        sink.cleanup()
+
+
+def run(smoke: bool = False) -> None:
+    iters = 1 if smoke else 5
+    ff = 1000 if smoke else None       # smoke: skip the 5 MB ascii payload
     with tempfile.TemporaryDirectory() as tmp:
         measured = {}
         for mode in ("file_baseline", "optimized", "optimized_zstd"):
-            t, nb = _measure_mode(mode, tmp)
+            t, nb = _measure_mode(mode, tmp, iters=iters, flowfield_floats=ff)
             measured[mode] = (t, nb)
             emit(f"io_{mode}", t * 1e6, f"bytes={nb:.0f}")
+        _measure_sinks(tmp, smoke)
 
     base_t, base_b = measured["file_baseline"]
     opt_t, opt_b = measured["optimized"]
@@ -51,7 +89,7 @@ def run() -> None:
 
     # Table II analogue from the calibrated model with MEASURED io bytes
     m = calibrate_to_paper()
-    for n_envs in (1, 10, 30, 60):
+    for n_envs in (1, 30) if smoke else (1, 10, 30, 60):
         p = ParallelPlan(n_envs, n_envs, 1)
         tb = m.t_training(p, 3000, io_bytes=base_b) / 3600
         td = m.t_training(p, 3000, io_bytes=0.0) / 3600

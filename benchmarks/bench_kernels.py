@@ -12,32 +12,36 @@ from repro.kernels.rwkv6 import ops as rwkv_ops
 from repro.models.ssm import wkv6_scan
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    it_ref, it_ker = (1, 1) if smoke else (5, 3)
     # poisson: jnp global SOR vs pallas slab kernel (same iteration count)
+    p_it = 20 if smoke else 100
     rhs = jax.random.normal(jax.random.PRNGKey(0), (48, 256))
-    t_ref = time_fn(lambda r: poisson.solve(r, 0.05, 0.05, iters=100), rhs,
-                    iters=5)
-    t_ker = time_fn(lambda r: poisson_ops.rb_sor(r, 0.05, 0.05, iters=100,
+    t_ref = time_fn(lambda r: poisson.solve(r, 0.05, 0.05, iters=p_it), rhs,
+                    iters=it_ref)
+    t_ker = time_fn(lambda r: poisson_ops.rb_sor(r, 0.05, 0.05, iters=p_it,
                                                  interpret=True), rhs,
-                    iters=3)
-    emit("poisson_jnp_100it", t_ref * 1e6, "48x256")
-    emit("poisson_pallas_interp_100it", t_ker * 1e6,
+                    iters=it_ker)
+    emit(f"poisson_jnp_{p_it}it", t_ref * 1e6, "48x256")
+    emit(f"poisson_pallas_interp_{p_it}it", t_ker * 1e6,
          "48x256;interpret_mode")
 
     # flash attention vs naive ref
+    S_att = 128 if smoke else 512
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    q = jax.random.normal(ks[0], (8, 512, 64))
-    k = jax.random.normal(ks[1], (8, 512, 64))
-    v = jax.random.normal(ks[2], (8, 512, 64))
-    t_ref = time_fn(lambda a, b, c: attention_ref(a, b, c), q, k, v, iters=5)
+    q = jax.random.normal(ks[0], (8, S_att, 64))
+    k = jax.random.normal(ks[1], (8, S_att, 64))
+    v = jax.random.normal(ks[2], (8, S_att, 64))
+    t_ref = time_fn(lambda a, b, c: attention_ref(a, b, c), q, k, v,
+                    iters=it_ref)
     from repro.kernels.flash_attention.kernel import flash_attention_bhsd
     t_ker = time_fn(lambda a, b, c: flash_attention_bhsd(
-        a, b, c, interpret=True), q, k, v, iters=3)
-    emit("attention_ref_naive", t_ref * 1e6, "BH8_S512_dh64")
-    emit("attention_pallas_interp", t_ker * 1e6, "BH8_S512_dh64")
+        a, b, c, interpret=True), q, k, v, iters=it_ker)
+    emit("attention_ref_naive", t_ref * 1e6, f"BH8_S{S_att}_dh64")
+    emit("attention_pallas_interp", t_ker * 1e6, f"BH8_S{S_att}_dh64")
 
     # wkv6: sequential scan vs chunked kernel
-    B, S, H, N = 2, 512, 4, 64
+    B, S, H, N = (1, 128, 2, 64) if smoke else (2, 512, 4, 64)
     ks = jax.random.split(jax.random.PRNGKey(2), 6)
     r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
     kk = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
@@ -45,9 +49,9 @@ def run() -> None:
     w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) - 2.0))
     u = jax.random.normal(ks[4], (H, N)) * 0.3
     st = jnp.zeros((B, H, N, N))
-    t_scan = time_fn(jax.jit(wkv6_scan), r, kk, vv, w, u, st, iters=3)
+    t_scan = time_fn(jax.jit(wkv6_scan), r, kk, vv, w, u, st, iters=it_ker)
     t_ker = time_fn(lambda *a: rwkv_ops.wkv6(*a, interpret=True),
-                    r, kk, vv, w, u, st, iters=3)
+                    r, kk, vv, w, u, st, iters=it_ker)
     emit("wkv6_seq_scan", t_scan * 1e6, f"B{B}_S{S}_H{H}_N{N}")
     emit("wkv6_pallas_interp", t_ker * 1e6, f"B{B}_S{S}_H{H}_N{N}")
 

@@ -1,5 +1,6 @@
-"""DRL component benchmarks: policy inference, PPO update, env actuation —
-the per-component costs of paper Fig. 10 measured for the JAX stack."""
+"""DRL component benchmarks: policy inference, PPO update, env actuation,
+and the unified RolloutEngine collect path — the per-component costs of
+paper Fig. 10 measured for the JAX stack."""
 import jax
 import jax.numpy as jnp
 
@@ -7,21 +8,23 @@ from benchmarks.common import emit, time_fn
 from repro.cfd.env import CylinderEnv, EnvConfig
 from repro.cfd.grid import GridConfig
 from repro.drl import networks
-from repro.drl.gae import gae_batch
+from repro.drl.engine import EngineConfig, RolloutEngine, broadcast_env_state
 from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    iters = 1 if smoke else 3
     pcfg = networks.PolicyConfig()
     params = networks.init_actor_critic(pcfg, jax.random.PRNGKey(0))
     obs = jax.random.normal(jax.random.PRNGKey(1), (16, 149))
 
     sample = jax.jit(lambda p, o, k: networks.sample_action(p, o, k))
-    t = time_fn(sample, params, obs, jax.random.PRNGKey(2))
+    t = time_fn(sample, params, obs, jax.random.PRNGKey(2),
+                iters=1 if smoke else 5)
     emit("policy_sample_16envs", t * 1e6, "2x512_mlp")
 
     # PPO update on one episode of 16 envs x 100 actuations
-    N = 16 * 100
+    N = 16 * (4 if smoke else 100)
     batch = Batch(obs=jax.random.normal(jax.random.PRNGKey(3), (N, 149)),
                   act=jax.random.normal(jax.random.PRNGKey(4), (N, 1)),
                   logp_old=jax.random.normal(jax.random.PRNGKey(5), (N,)),
@@ -32,22 +35,34 @@ def run() -> None:
     opt_state = opt.init(params)
     upd = jax.jit(lambda p, s, b, k, st: ppo_update(cfg, opt, p, s, b, k, st))
     t = time_fn(upd, params, opt_state, batch, jax.random.PRNGKey(8),
-                jnp.int32(0), iters=3)
-    emit("ppo_update_1600samples", t * 1e6,
+                jnp.int32(0), iters=iters)
+    emit(f"ppo_update_{N}samples", t * 1e6,
          f"epochs={cfg.epochs};minibatches={cfg.minibatches}")
 
     # one actuation period of the environment (50 solver steps)
-    env = CylinderEnv(EnvConfig(grid=GridConfig(res=12, dt=0.006,
-                                                poisson_iters=60),
-                                warmup_time=2.0))
+    res, p_iters = (6, 30) if smoke else (12, 60)
+    env = CylinderEnv(EnvConfig(grid=GridConfig(res=res, dt=0.006,
+                                                poisson_iters=p_iters),
+                                steps_per_action=5 if smoke else 50,
+                                warmup_time=0.5 if smoke else 2.0))
     st, obs0 = env.reset()
     step = jax.jit(env.env_step)
-    t = time_fn(step, st, jnp.float32(0.2), iters=3)
+    t = time_fn(step, st, jnp.float32(0.2), iters=iters)
     emit("env_actuation_period", t * 1e6,
-         "50_solver_steps;res12")
+         f"{env.cfg.steps_per_action}_solver_steps;res{res}")
     emit("cfd_share_estimate", 0.0,
          f"paper_claim=>95%;policy+update_vs_cfd="
          f"{(t):.3f}s_per_actuation")
+
+    # unified engine: full collect -> GAE -> flatten round for N_envs
+    n_envs, horizon = (2, 2) if smoke else (4, 4)
+    engine = RolloutEngine.for_env(
+        env, EngineConfig(n_envs=n_envs, horizon=horizon))
+    st_b, obs_b = broadcast_env_state(st, obs0, n_envs)
+    t = time_fn(lambda p, k: engine.collect(p, st_b, obs_b, k),
+                params, jax.random.PRNGKey(9), iters=iters)
+    emit("engine_collect_round", t * 1e6,
+         f"n_envs={n_envs};horizon={horizon};res{res}")
 
 
 if __name__ == "__main__":

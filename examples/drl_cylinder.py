@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.cfd.env import EnvConfig
 from repro.cfd.grid import GridConfig
+from repro.drl.engine import make_sink
 from repro.drl.ppo import PPOConfig
 from repro.drl.train import TrainConfig, train
 
@@ -26,6 +27,11 @@ def main() -> None:
     ap.add_argument("--actions", type=int, default=40)
     ap.add_argument("--steps-per-action", type=int, default=25)
     ap.add_argument("--warmup", type=float, default=20.0)
+    ap.add_argument("--spill", default="none",
+                    choices=["none", "memory", "binary", "zstd"],
+                    help="trajectory sink: spill each episode's trajectories"
+                         " via the engine's TrajectorySink (paper §IV I/O)")
+    ap.add_argument("--spill-dir", default="artifacts/traj_spill")
     ap.add_argument("--out", default="artifacts/drl_cylinder.json")
     args = ap.parse_args()
 
@@ -41,8 +47,12 @@ def main() -> None:
         n_envs=args.n_envs,
         episodes=args.episodes,
     )
-    hist, params = train(cfg)
-    cd0 = None
+    sink = make_sink(args.spill, args.spill_dir)
+    hist, params = train(cfg, sink=sink)
+    if sink is not None:
+        print(f"spill[{args.spill}]: {sink.episodes} episodes, "
+              f"{sink.bytes_written / 1e6:.2f} MB, "
+              f"{sink.time_spent:.2f}s interface time")
     # report drag reduction: mean CD of last episodes vs uncontrolled CD0
     first5 = float(np.mean(hist["cd"][:5]))
     last5 = float(np.mean(hist["cd"][-5:]))

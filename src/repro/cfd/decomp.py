@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-shard_map = jax.shard_map
+from repro.compat import shard_map
 
 
 def _local_sweeps(p, rhs, left, right, *, dx, dy, omega, inner_iters,

@@ -1,0 +1,26 @@
+"""Version-compatibility shims for the jax API surface.
+
+The repo targets current jax but must run on 0.4.x containers:
+  * ``jax.shard_map`` became public API after 0.4 (experimental before)
+  * its ``check_rep`` kwarg was renamed ``check_vma``
+Callers write the NEW spelling; this module adapts downward.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map                      # jax >= 0.5
+except AttributeError:                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kw):
+    """jax.shard_map with the modern kwarg spelling on any jax version."""
+    if not _HAS_CHECK_VMA and "check_vma" in kw:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _shard_map(f, **kw)

@@ -41,6 +41,42 @@ except ImportError:  # pragma: no cover
 
 MODES = ("file_baseline", "optimized", "optimized_zstd", "disabled")
 
+
+# ---------------------------------------------------------------------------
+# binary codec (shared by FileInterface and drl.engine.TrajectorySink)
+# ---------------------------------------------------------------------------
+
+def pack_arrays(arrays: Dict[str, np.ndarray],
+                scalars: Optional[Dict[str, float]] = None,
+                cctx=None) -> bytes:
+    """msgpack + raw fp32 payload: {name: bytes, name_shape: [...]} per array.
+
+    ``cctx`` is an optional zstd compressor (the 'optimized_zstd' mode)."""
+    payload: Dict[str, object] = {"__scalars__": dict(scalars or {})}
+    for name, arr in arrays.items():
+        a = np.ascontiguousarray(np.asarray(arr), dtype=np.float32)
+        payload[name] = a.tobytes()
+        payload[name + "_shape"] = list(a.shape)
+    blob = msgpack.packb(payload)
+    if cctx is not None:
+        blob = cctx.compress(blob)
+    return blob
+
+
+def unpack_arrays(blob: bytes, dctx=None):
+    """Inverse of ``pack_arrays`` -> (arrays dict, scalars dict)."""
+    if dctx is not None:
+        blob = dctx.decompress(blob)
+    d = msgpack.unpackb(blob)
+    scalars = d.pop("__scalars__", {})
+    arrays = {}
+    for name, raw in d.items():
+        if name.endswith("_shape"):
+            continue
+        arrays[name] = np.frombuffer(raw, np.float32).reshape(
+            d[name + "_shape"])
+    return arrays, scalars
+
 # Paper: "multiple files with a total size of 5.0 MB ... at the end of each
 # instance of CFD simulation"; optimized: 1.2 MB (-76%).
 BASELINE_FLOWFIELD_FLOATS = 5_000_000 // 13  # ~5.0 MB as "%.6e" ascii text
@@ -162,35 +198,26 @@ class FileInterface:
     # binary (optimized): single msgpack+raw file, essential arrays only ----
 
     def _write_binary(self, period: int, rec: ExchangeRecord) -> int:
-        payload = {
-            "obs": rec.obs.astype(np.float32).tobytes(),
-            "obs_shape": list(rec.obs.shape),
-            "forces": rec.forces.astype(np.float32).tobytes(),
-            "forces_shape": list(np.atleast_2d(rec.forces).shape),
-            "action": float(rec.action),
-        }
+        arrays = {"obs": rec.obs,
+                  "forces": np.atleast_2d(np.asarray(rec.forces))}
         if self.flowfield_floats:
             ff = rec.flow_field
             if ff is None:
                 ff = np.zeros(self.flowfield_floats, np.float32)
-            payload["flow"] = ff[: self.flowfield_floats].astype(
-                np.float32).tobytes()
-        blob = msgpack.packb(payload)
-        if self.mode == "optimized_zstd" and self._cctx:
-            blob = self._cctx.compress(blob)
+            arrays["flow"] = np.asarray(ff)[: self.flowfield_floats]
+        cctx = self._cctx if self.mode == "optimized_zstd" else None
+        blob = pack_arrays(arrays, scalars={"action": float(rec.action)},
+                           cctx=cctx)
         path = self.dir / f"{period:06d}.bin"
         path.write_bytes(blob)
         return len(blob)
 
     def _read_binary(self, period: int) -> ExchangeRecord:
         blob = (self.dir / f"{period:06d}.bin").read_bytes()
-        if self.mode == "optimized_zstd" and self._dctx:
-            blob = self._dctx.decompress(blob)
-        d = msgpack.unpackb(blob)
-        obs = np.frombuffer(d["obs"], np.float32).reshape(d["obs_shape"])
-        forces = np.frombuffer(d["forces"], np.float32).reshape(
-            d["forces_shape"])
-        return ExchangeRecord(obs=obs, forces=forces, action=d["action"])
+        dctx = self._dctx if self.mode == "optimized_zstd" else None
+        arrays, scalars = unpack_arrays(blob, dctx=dctx)
+        return ExchangeRecord(obs=arrays["obs"], forces=arrays["forces"],
+                              action=scalars["action"])
 
     def cleanup(self):
         if self.dir.exists():

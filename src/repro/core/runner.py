@@ -5,51 +5,26 @@ The paper's two parallel axes map directly onto mesh axes (DESIGN.md §2):
   n_envs  -> "data" (x "pod")   : env-batch sharding — embarrassingly parallel
   n_ranks -> "model"            : spatial domain decomposition of each CFD grid
 
-Env state arrays are (N_env, ny, nx)-shaped; the batch dim is sharded over
-the data axes and the x (streamwise) grid dim over the model axis.  XLA's SPMD
-partitioner inserts the halo exchanges (collective-permutes) for every stencil
-— the TPU-native equivalent of OpenFOAM's MPI halo messages — so the dry-run
-HLO exposes exactly the collective traffic the roofline analysis needs.
+The actual collect implementation (vmap rollout, sharding constraints, GAE,
+flattening) is ``repro.drl.engine.RolloutEngine`` — this module is the thin
+mesh-facing façade kept for the dry-run tools and CFD-only sharded stepping.
+XLA's SPMD partitioner inserts the halo exchanges (collective-permutes) for
+every stencil — the TPU-native equivalent of OpenFOAM's MPI halo messages —
+so the dry-run HLO exposes exactly the collective traffic the roofline
+analysis needs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.cfd.env import CylinderEnv
 from repro.cfd.solver import FlowState
-from repro.drl import networks, rollout
-from repro.drl.gae import gae_batch
-from repro.drl.ppo import Batch
-from repro.models.sharding import dp_axes
+from repro.drl.engine import (EngineConfig, RolloutEngine, env_state_specs,
+                              shard_env_batch)
 
-
-def env_state_specs(mesh: Mesh, n_envs: int) -> Tuple[P, P]:
-    """(batch-only spec, batch+space spec) for env pytrees.
-
-    Grid arrays additionally shard their x (last) dim over "model" when the
-    plan uses n_ranks > 1."""
-    dp = dp_axes(mesh)
-    dp = dp if len(dp) > 1 else dp[0]
-    batch = P(dp)
-    batch_space = P(dp, None, "model")
-    return batch, batch_space
-
-
-def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
-    """Apply shardings to a batched EnvState pytree."""
-    batch, batch_space = env_state_specs(mesh, st_b.t.shape[0])
-
-    def spec_of(a):
-        if a.ndim == 3 and n_ranks > 1:        # (N, ny, nx) grid field
-            return NamedSharding(mesh, batch_space)
-        return NamedSharding(mesh, P(batch[0]))
-
-    return jax.tree.map(lambda a: jax.device_put(a, spec_of(a)), st_b)
+__all__ = ["env_state_specs", "shard_env_batch", "make_distributed_collect",
+           "make_sharded_cfd_step"]
 
 
 def make_distributed_collect(env: CylinderEnv, mesh: Mesh, n_envs: int,
@@ -58,37 +33,13 @@ def make_distributed_collect(env: CylinderEnv, mesh: Mesh, n_envs: int,
     """jit'd (params, st_b, obs_b, key) -> (Batch, traj) with mesh shardings.
 
     Used both for real execution (1 device: shardings are no-ops) and for the
-    dry-run lowering of the paper's own workload on the production mesh."""
-    batch, batch_space = env_state_specs(mesh, n_envs)
-    dp = batch[0]
-
-    def collect(params, st_b, obs_b, key):
-        def constrain(a):
-            if a.ndim >= 3 and n_ranks > 1:
-                return jax.lax.with_sharding_constraint(
-                    a, NamedSharding(mesh, batch_space))
-            return jax.lax.with_sharding_constraint(
-                a, NamedSharding(mesh, P(dp)))
-
-        st_b = jax.tree.map(constrain, st_b)
-        _, traj = rollout.rollout_batch(env.env_step, params, st_b, obs_b,
-                                        key, length, n_envs)
-        values = networks.value(params, traj.obs)
-        last_v = networks.value(params, traj.last_obs)
-        adv, ret = gae_batch(traj.reward, values, last_v,
-                             gamma=gamma, lam=lam)
-        flat = lambda x: x.reshape((-1,) + x.shape[2:])
-        return Batch(obs=flat(traj.obs), act=flat(traj.act),
-                     logp_old=flat(traj.logp), adv=flat(adv),
-                     ret=flat(ret)), traj
-
-    in_shardings = (
-        NamedSharding(mesh, P()),                      # params replicated
-        None,                                          # st_b: as provided
-        NamedSharding(mesh, P(dp)),                    # obs batch-sharded
-        NamedSharding(mesh, P()),
-    )
-    return jax.jit(collect), collect
+    dry-run lowering of the paper's own workload on the production mesh.
+    Returns (jitted collect, untraced closure) — both from the engine."""
+    engine = RolloutEngine.for_env(
+        env, EngineConfig(n_envs=n_envs, horizon=length, gamma=gamma,
+                          lam=lam, n_ranks=n_ranks),
+        mesh=mesh)
+    return engine._collect, engine.collect_fn
 
 
 def make_sharded_cfd_step(env: CylinderEnv, mesh: Mesh):

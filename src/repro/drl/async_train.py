@@ -1,4 +1,4 @@
-"""Asynchronous training — the paper's §IV future-work pointer, prototyped.
+"""Asynchronous training — the paper's §IV future-work pointer, realized.
 
 The synchronous loop serializes [collect episode] -> [PPO update]; the async
 variant overlaps them: episode *e* is collected with the policy from episode
@@ -6,67 +6,39 @@ variant overlaps them: episode *e* is collected with the policy from episode
 importance ratio r_t(theta) absorbs the one-step staleness (the trajectories
 carry their behaviour-policy log-probs).
 
-On this 1-core host the overlap cannot reduce wall time, so this module
-validates the ALGORITHMIC half (stale-trajectory updates still learn —
-tests/test_drl_async.py) and `async_speedup` quantifies the SYSTEMS half via
+The double-buffered loop itself is ``RolloutEngine.run_async`` (drl/engine.py)
+— JAX async dispatch with the stale batch and optimizer state donated to the
+update.  On this 1-core host the overlap cannot reduce wall time, so this
+module validates the ALGORITHMIC half (stale-trajectory updates still learn —
+tests/test_drl_async.py) and ``async_speedup`` quantifies the SYSTEMS half via
 the calibrated cost model: with updates hidden behind collection,
 t_episode -> max(t_collect, t_update) + interface costs.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Dict, Optional
 
 from repro.core.plan import CostModel, ParallelPlan
-from repro.drl import networks, rollout
-from repro.drl.gae import gae_batch
-from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
+from repro.drl import networks
+from repro.drl.engine import EngineConfig, RolloutEngine
+from repro.drl.ppo import PPOConfig
 
 
 def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
                 st0_b, obs0_b, *, n_envs: int, horizon: int, episodes: int,
-                seed: int = 0):
+                seed: int = 0, sink=None):
     """Stale-gradient PPO: updates always consume the PREVIOUS episode's
     trajectories (collected under the then-current policy)."""
-    key = jax.random.PRNGKey(seed)
-    key, kp = jax.random.split(key)
-    params = networks.init_actor_critic(pcfg, kp)
-    opt = make_optimizer(ppo_cfg)
-    opt_state = opt.init(params)
-    step = jnp.int32(0)
-
-    @jax.jit
-    def collect(params, key):
-        _, traj = rollout.rollout_batch(env_step_fn, params, st0_b, obs0_b,
-                                        key, horizon, n_envs)
-        values = networks.value(params, traj.obs)
-        last_v = networks.value(params, traj.last_obs)
-        adv, ret = gae_batch(traj.reward, values, last_v,
-                             gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
-        flat = lambda x: x.reshape((-1,) + x.shape[2:])
-        return Batch(flat(traj.obs), flat(traj.act), flat(traj.logp),
-                     flat(adv), flat(ret)), traj
-
-    @jax.jit
-    def update(params, opt_state, batch, key, step):
-        return ppo_update(ppo_cfg, opt, params, opt_state, batch, key, step)
-
-    pending: Optional[Batch] = None     # trajectories awaiting their update
-    returns = []
-    for ep in range(episodes):
-        key, kr, ku = jax.random.split(key, 3)
-        # (in a real deployment these two lines run CONCURRENTLY)
-        batch, traj = collect(params, kr)        # with the *stale* params
-        if pending is not None:
-            params, opt_state, step, _ = update(params, opt_state, pending,
-                                                ku, step)
-        pending = batch
-        returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
-    return params, np.asarray(returns)
+    engine = RolloutEngine(
+        env_step_fn,
+        EngineConfig(n_envs=n_envs, horizon=horizon,
+                     gamma=ppo_cfg.gamma, lam=ppo_cfg.lam),
+        sink=sink)
+    params, optimizer, opt_state, key = engine.init(pcfg, ppo_cfg, seed)
+    params, _, returns = engine.run_async(params, opt_state, ppo_cfg,
+                                          optimizer, st0_b, obs0_b, key,
+                                          episodes)
+    return params, returns
 
 
 def async_speedup(model: CostModel, plan: ParallelPlan,

@@ -1,0 +1,379 @@
+"""Unified sharded rollout engine — the single implementation of trajectory
+collection shared by every training loop in the repo.
+
+Three concerns that used to be triplicated across ``drl/train.py``,
+``drl/async_train.py`` and ``core/runner.py`` live here exactly once:
+
+  * collect -> GAE -> flatten: the vmapped N_envs episode rollout (paper
+    Fig. 4), value bootstrap, advantage estimation and batch flattening.
+  * mesh placement (paper §II.D): the env batch is sharded over the mesh
+    "data" axis (the paper's N_envs) and each env's grid fields optionally
+    over "model" (the paper's N_ranks domain decomposition).  XLA's SPMD
+    partitioner inserts the halo collective-permutes.
+  * overlap: a double-buffered async mode where episode *e* is collected
+    while the PPO update for episode *e-1*'s trajectories runs.  JAX async
+    dispatch enqueues both computations back to back; the optimizer state is
+    donated to the update (params and the stale batch are not — collect still
+    reads the params concurrently), so the two in-flight programs never
+    contend for the same buffers.  PPO's importance ratio r_t(theta) absorbs
+    the one-step staleness (trajectories carry their behaviour-policy
+    log-probs).
+
+It also implements the paper's §IV I/O refinement for trajectory spill as a
+pluggable ``TrajectorySink``: in-memory, binary (msgpack + raw fp32) or
+zstd-compressed binary, reusing the ``core.interface`` codecs that back the
+measured Table II file-interface modes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.interface import pack_arrays, unpack_arrays
+from repro.drl import networks, rollout
+from repro.drl.gae import gae_batch
+from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
+from repro.drl.rollout import Trajectory
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - optional, gated
+    zstd = None
+
+
+# ---------------------------------------------------------------------------
+# trajectory sinks — the paper's I/O strategies applied to trajectory spill
+# ---------------------------------------------------------------------------
+
+class TrajectorySink:
+    """Receives each collected episode's trajectories.  Base class = no-op
+    (the paper's io-DISABLED upper bound); subclasses spill to memory or disk.
+
+    Tracks ``bytes_written``/``time_spent`` so training loops and benchmarks
+    can report interface cost exactly like ``core.interface``."""
+
+    def __init__(self):
+        self.episodes = 0
+        self.bytes_written = 0
+        self.time_spent = 0.0
+
+    def write(self, episode: int, traj: Trajectory) -> int:
+        t0 = time.perf_counter()
+        n = self._write(episode, traj)
+        self.bytes_written += n
+        self.time_spent += time.perf_counter() - t0
+        self.episodes += 1
+        return n
+
+    def _write(self, episode: int, traj: Trajectory) -> int:
+        return 0
+
+    def read(self, episode: int) -> Trajectory:
+        raise KeyError(f"sink holds no episode {episode}")
+
+    def close(self) -> None:
+        """Flush and release handles; never destroys spilled data."""
+
+    def cleanup(self) -> None:
+        """Delete everything the sink spilled (mirrors FileInterface)."""
+
+
+class MemorySink(TrajectorySink):
+    """Keeps the last ``keep`` episodes on the host (replay / inspection)."""
+
+    def __init__(self, keep: int = 8):
+        super().__init__()
+        self.keep = keep
+        self._store: Dict[int, Trajectory] = {}
+
+    def _write(self, episode: int, traj: Trajectory) -> int:
+        host = Trajectory(*(np.asarray(a) for a in traj))
+        self._store[episode] = host
+        while len(self._store) > self.keep:
+            del self._store[min(self._store)]
+        return sum(a.nbytes for a in host)
+
+    def read(self, episode: int) -> Trajectory:
+        return self._store[episode]
+
+
+class FileSink(TrajectorySink):
+    """Spills each episode to one binary file via the ``core.interface``
+    codec (paper §III.D: single binary file instead of many ASCII dumps).
+
+    codec='binary'  msgpack + raw fp32 (the paper's optimized mode)
+    codec='zstd'    the same, zstd-compressed (beyond-paper); silently
+                    degrades to 'binary' when zstandard is not installed.
+    """
+
+    def __init__(self, root: str, codec: str = "binary"):
+        super().__init__()
+        assert codec in ("binary", "zstd"), codec
+        if codec == "zstd" and zstd is None:
+            codec = "binary"
+        self.codec = codec
+        self.dir = Path(root)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._cctx = zstd.ZstdCompressor(level=1) if codec == "zstd" else None
+        self._dctx = zstd.ZstdDecompressor() if codec == "zstd" else None
+
+    def _path(self, episode: int) -> Path:
+        return self.dir / f"traj_{episode:06d}.bin"
+
+    def _write(self, episode: int, traj: Trajectory) -> int:
+        arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)}
+        blob = pack_arrays(arrays, cctx=self._cctx)
+        self._path(episode).write_bytes(blob)
+        return len(blob)
+
+    def read(self, episode: int) -> Trajectory:
+        path = self._path(episode)
+        if not path.exists():
+            raise KeyError(f"sink holds no episode {episode}")
+        arrays, _ = unpack_arrays(path.read_bytes(), dctx=self._dctx)
+        return Trajectory(**{f: arrays[f] for f in Trajectory._fields})
+
+    def cleanup(self) -> None:
+        import shutil
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+
+def make_sink(mode: str, root: Optional[str] = None) -> Optional[TrajectorySink]:
+    """'none' | 'memory' | 'binary' | 'zstd' -> sink instance (or None)."""
+    if mode in (None, "none", "disabled"):
+        return None
+    if mode == "memory":
+        return MemorySink()
+    assert root is not None, "file sinks need a root directory"
+    return FileSink(root, codec=mode)
+
+
+# ---------------------------------------------------------------------------
+# mesh placement helpers (absorbed from core/runner.py)
+# ---------------------------------------------------------------------------
+
+def env_state_specs(mesh: Mesh) -> Tuple[P, P]:
+    """(batch-only spec, batch+space spec) for env pytrees.
+
+    Grid arrays additionally shard their x (last) dim over "model" when the
+    plan uses n_ranks > 1."""
+    from repro.models.sharding import dp_axes
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    return P(dp), P(dp, None, "model")
+
+
+def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
+    """device_put a batched env-state pytree with engine shardings."""
+    batch, batch_space = env_state_specs(mesh)
+
+    def spec_of(a):
+        if a.ndim == 3 and n_ranks > 1:        # (N, ny, nx) grid field
+            return NamedSharding(mesh, batch_space)
+        return NamedSharding(mesh, P(batch[0]))
+
+    return jax.tree.map(lambda a: jax.device_put(a, spec_of(a)), st_b)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_envs: int
+    horizon: int              # actuation periods per episode (the paper's T)
+    gamma: float = 0.99
+    lam: float = 0.95
+    n_ranks: int = 1          # grid shards per env over the "model" axis
+    donate: bool = True       # donate opt_state to the async-mode update
+
+
+class RolloutEngine:
+    """One collect implementation, three consumers.
+
+    ``collect`` is the jitted (params, st_b, obs_b, key) -> (Batch, Trajectory)
+    function; ``collect_fn`` is the untraced closure (for ``.lower()`` dry-runs
+    on abstract inputs).  With a mesh, inputs are constrained to the paper's
+    hybrid placement; with ``mesh=None`` it is the plain single-host vmap path.
+    """
+
+    def __init__(self, env_step_fn: Callable, cfg: EngineConfig, *,
+                 mesh: Optional[Mesh] = None,
+                 sink: Optional[TrajectorySink] = None):
+        self.env_step_fn = env_step_fn
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sink = sink
+        self.episode = 0
+        self.collect_fn = self._build_collect()
+        if mesh is not None:
+            batch, _ = env_state_specs(mesh)
+            in_shardings = (
+                NamedSharding(mesh, P()),              # params replicated
+                None,                                  # st_b: as provided
+                NamedSharding(mesh, P(batch[0])),      # obs batch-sharded
+                NamedSharding(mesh, P()),
+            )
+            self._collect = jax.jit(self.collect_fn,
+                                    in_shardings=in_shardings)
+        else:
+            self._collect = jax.jit(self.collect_fn)
+
+    @classmethod
+    def for_env(cls, env, cfg: EngineConfig, **kw) -> "RolloutEngine":
+        """Bind a CylinderEnv-like object (anything with ``env_step``)."""
+        return cls(env.env_step, cfg, **kw)
+
+    # -- collect -> GAE -> flatten (THE single implementation) --------------
+
+    def _build_collect(self):
+        cfg, mesh = self.cfg, self.mesh
+
+        def collect(params, st_b, obs_b, key):
+            if mesh is not None:
+                batch_spec, batch_space = env_state_specs(mesh)
+
+                def constrain(a):
+                    if a.ndim >= 3 and cfg.n_ranks > 1:
+                        return jax.lax.with_sharding_constraint(
+                            a, NamedSharding(mesh, batch_space))
+                    return jax.lax.with_sharding_constraint(
+                        a, NamedSharding(mesh, batch_spec))
+
+                st_b = jax.tree.map(constrain, st_b)
+            _, traj = rollout.rollout_batch(self.env_step_fn, params, st_b,
+                                            obs_b, key, cfg.horizon,
+                                            cfg.n_envs)
+            values = networks.value(params, traj.obs)            # (N, T)
+            last_v = networks.value(params, traj.last_obs)       # (N,)
+            adv, ret = gae_batch(traj.reward, values, last_v,
+                                 gamma=cfg.gamma, lam=cfg.lam)
+            flat = lambda x: x.reshape((-1,) + x.shape[2:])
+            batch = Batch(obs=flat(traj.obs), act=flat(traj.act),
+                          logp_old=flat(traj.logp), adv=flat(adv),
+                          ret=flat(ret))
+            return batch, traj
+
+        return collect
+
+    def collect(self, params, st_b, obs_b, key, *, record: bool = True
+                ) -> Tuple[Batch, Trajectory]:
+        """One episode round of all N_envs environments."""
+        batch, traj = self._collect(params, st_b, obs_b, key)
+        if record and self.sink is not None:
+            self.sink.write(self.episode, traj)
+        self.episode += 1
+        return batch, traj
+
+    # -- PPO update (donation-aware, shared by sync + async loops) -----------
+
+    def make_update(self, ppo_cfg: PPOConfig, optimizer, *,
+                    donate: bool = False):
+        """jit'd (params, opt_state, batch, key, step) -> updated tuple.
+
+        With ``donate=True`` the optimizer state is donated (it aliases the
+        returned opt_state buffers), so in async mode the in-flight update
+        never allocates a second moment-buffer set while collect runs.
+        Params and the stale batch are NOT donated: the concurrently
+        dispatched collect still reads the params, and the batch has no
+        output to alias."""
+
+        def update(params, opt_state, batch, key, step):
+            return ppo_update(ppo_cfg, optimizer, params, opt_state, batch,
+                              key, step)
+
+        kw = {"donate_argnums": (1,)} if donate and self.cfg.donate else {}
+        return jax.jit(update, **kw)
+
+    # -- training loops ------------------------------------------------------
+
+    def run_sync(self, params, opt_state, ppo_cfg: PPOConfig, optimizer,
+                 st_b, obs_b, key, episodes: int, *,
+                 on_batch: Optional[Callable] = None,
+                 on_episode: Optional[Callable] = None):
+        """Sequential [collect] -> [update] (the paper's Fig. 4 loop)."""
+        update = self.make_update(ppo_cfg, optimizer)
+        step = jnp.int32(0)
+        returns = []
+        for _ in range(episodes):
+            key, kr, ku = jax.random.split(key, 3)
+            batch, traj = self.collect(params, st_b, obs_b, kr)
+            if on_batch is not None:   # e.g. the CFD<->DRL file interface
+                batch = on_batch(batch)
+            params, opt_state, step, metrics = update(params, opt_state,
+                                                      batch, ku, step)
+            returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
+            if on_episode is not None:
+                on_episode(traj, metrics)
+        return params, opt_state, np.asarray(returns)
+
+    def run_async(self, params, opt_state, ppo_cfg: PPOConfig, optimizer,
+                  st_b, obs_b, key, episodes: int, *, drain: bool = True,
+                  on_episode: Optional[Callable] = None):
+        """Double-buffered stale-gradient PPO.
+
+        Episode *e* is collected with the params as of episode *e-1* while
+        the update consuming episode *e-1*'s trajectories is dispatched; JAX
+        async dispatch lets both programs be in flight together (on 1 CPU
+        device they serialize — the algorithmic semantics are what the tests
+        pin down; ``async_speedup`` models the systems half)."""
+        update = self.make_update(ppo_cfg, optimizer, donate=True)
+        step = jnp.int32(0)
+        pending: Optional[Batch] = None   # awaits its (overlapped) update
+        spill = None                      # (episode, traj) awaiting the sink
+        returns = []
+        for _ in range(episodes):
+            key, kr, ku = jax.random.split(key, 3)
+            ep_id = self.episode
+            # both dispatches below can execute concurrently: collect uses
+            # the STALE params, and the update only touches the previous
+            # episode's batch — never the buffers collect is writing.
+            # The sink (host-blocking I/O) only ever sees the PREVIOUS,
+            # already-materialized episode, after the update is dispatched,
+            # so spilling never serializes the two in-flight programs.
+            batch, traj = self.collect(params, st_b, obs_b, kr, record=False)
+            if pending is not None:
+                params, opt_state, step, _ = update(params, opt_state,
+                                                    pending, ku, step)
+            if self.sink is not None and spill is not None:
+                self.sink.write(*spill)
+            pending = batch
+            spill = (ep_id, traj)
+            returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
+            if on_episode is not None:
+                on_episode(traj, None)
+        if drain and pending is not None:
+            key, ku = jax.random.split(key)
+            params, opt_state, step, _ = update(params, opt_state, pending,
+                                                ku, step)
+        if self.sink is not None and spill is not None:
+            self.sink.write(*spill)
+        return params, opt_state, np.asarray(returns)
+
+    # -- convenience ---------------------------------------------------------
+
+    def init(self, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig, seed: int
+             ) -> Tuple[Any, Any, Any, Any]:
+        """(params, optimizer, opt_state, key) for a fresh run."""
+        key = jax.random.PRNGKey(seed)
+        key, kp = jax.random.split(key)
+        params = networks.init_actor_critic(pcfg, kp)
+        optimizer = make_optimizer(ppo_cfg)
+        opt_state = optimizer.init(params)
+        return params, optimizer, opt_state, key
+
+
+def broadcast_env_state(st, obs, n_envs: int):
+    """Tile a single reset state/obs into an (N_envs, ...) batch."""
+    st_b = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_envs,) + a.shape), st)
+    obs_b = jnp.broadcast_to(obs, (n_envs,) + obs.shape)
+    return st_b, obs_b

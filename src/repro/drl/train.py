@@ -2,24 +2,24 @@
 
 This is the paper's training loop (Fig. 4): N_envs environments roll out one
 episode each in parallel, trajectories are batched, and PPO updates the shared
-policy.  The distributed (mesh) version lives in core/runner.py; this module
-is the plain vmap form used by examples and tests.
+policy.  Collection itself — the vmap/shard path, GAE and flattening — is the
+``RolloutEngine``'s single implementation (drl/engine.py); this module only
+owns the episode loop, logging and the optional CFD<->DRL file interface hook.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cfd.env import CylinderEnv, EnvConfig
-from repro.drl import networks, rollout
-from repro.drl.gae import gae_batch
-from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
+from repro.drl import networks
+from repro.drl.engine import (EngineConfig, RolloutEngine, TrajectorySink,
+                              broadcast_env_state)
+from repro.drl.ppo import PPOConfig
 
 
 @dataclass
@@ -31,62 +31,46 @@ class TrainConfig:
     seed: int = 0
 
 
-def broadcast_state(st, n):
-    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), st)
-
-
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
-          interface=None) -> Dict[str, np.ndarray]:
+          interface=None, sink: Optional[TrajectorySink] = None,
+          ) -> Tuple[Dict[str, np.ndarray], Any]:
+    """Returns (history dict of per-episode arrays, trained params)."""
     env = CylinderEnv(cfg.env)
     st0, obs0 = env.reset()           # warms up + calibrates CD0
     pcfg = networks.PolicyConfig(obs_dim=cfg.env.obs_dim)
-    key = jax.random.PRNGKey(cfg.seed)
-    key, kp = jax.random.split(key)
-    params = networks.init_actor_critic(pcfg, kp)
-    optimizer = make_optimizer(cfg.ppo)
-    opt_state = optimizer.init(params)
-    step = jnp.int32(0)
 
-    T = cfg.env.actions_per_episode
-    st_b = broadcast_state(st0, cfg.n_envs)
-    obs_b = jnp.broadcast_to(obs0, (cfg.n_envs,) + obs0.shape)
-
-    @jax.jit
-    def collect(params, st_b, obs_b, key):
-        _, traj = rollout.rollout_batch(env.env_step, params, st_b, obs_b,
-                                        key, T, cfg.n_envs)
-        values = networks.value(params, traj.obs)            # (N, T)
-        last_v = networks.value(params, traj.last_obs)       # (N,)
-        adv, ret = gae_batch(traj.reward, values, last_v,
-                             gamma=cfg.ppo.gamma, lam=cfg.ppo.lam)
-        flat = lambda x: x.reshape((-1,) + x.shape[2:])
-        batch = Batch(obs=flat(traj.obs), act=flat(traj.act),
-                      logp_old=flat(traj.logp), adv=flat(adv), ret=flat(ret))
-        return batch, traj
-
-    @jax.jit
-    def update(params, opt_state, batch, key, step):
-        return ppo_update(cfg.ppo, optimizer, params, opt_state, batch, key,
-                          step)
+    engine = RolloutEngine.for_env(
+        env, EngineConfig(n_envs=cfg.n_envs,
+                          horizon=cfg.env.actions_per_episode,
+                          gamma=cfg.ppo.gamma, lam=cfg.ppo.lam),
+        sink=sink)
+    params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo, cfg.seed)
+    st_b, obs_b = broadcast_env_state(st0, obs0, cfg.n_envs)
 
     hist = {"reward": [], "cd": [], "cl": [], "wall": []}
-    for ep in range(cfg.episodes):
-        t0 = time.time()
-        key, kr, ku = jax.random.split(key, 3)
-        batch, traj = collect(params, st_b, obs_b, kr)
-        if interface is not None:     # paper's CFD<->DRL interface experiment
-            batch = interface.exchange(batch)
-        params, opt_state, step, metrics = update(params, opt_state, batch,
-                                                  ku, step)
+    t_ep = [time.time()]
+
+    def on_batch(batch):
+        # paper's CFD<->DRL interface experiment
+        return interface.exchange(batch) if interface is not None else batch
+
+    def on_episode(traj, metrics):
+        ep = len(hist["reward"])
         r = float(jnp.mean(jnp.sum(traj.reward, axis=1)))
         cd = float(jnp.mean(traj.cd[:, -10:]))
         cl = float(jnp.mean(jnp.abs(traj.cl[:, -10:])))
         hist["reward"].append(r)
         hist["cd"].append(cd)
         hist["cl"].append(cl)
-        hist["wall"].append(time.time() - t0)
+        now = time.time()
+        hist["wall"].append(now - t_ep[0])
+        t_ep[0] = now
         if log_fn and (ep % max(1, cfg.episodes // 20) == 0
                        or ep == cfg.episodes - 1):
             log_fn(f"ep {ep:4d}  return {r:+8.3f}  CD(tail) {cd:.3f}  "
                    f"|CL| {cl:.3f}  {hist['wall'][-1]:.1f}s")
+
+    params, _, _ = engine.run_sync(params, opt_state, cfg.ppo, optimizer,
+                                   st_b, obs_b, key, cfg.episodes,
+                                   on_batch=on_batch, on_episode=on_episode)
     return {k: np.asarray(v) for k, v in hist.items()}, params

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import act_sharding

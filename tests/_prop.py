@@ -1,0 +1,55 @@
+"""Property-testing shim: real hypothesis when installed (CI does
+``pip install -e .[test]``), otherwise a tiny deterministic fallback that
+runs each property over a fixed pseudo-random sample so the tier-1 suite
+stays runnable in minimal containers.
+
+Only the subset used by this repo's tests is emulated: ``@settings`` /
+``@given`` with keyword strategies ``st.integers`` and ``st.floats``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # deterministic fallback
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _St()
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 25)):
+                    fn(**{k: s.example(rng) for k, s in strats.items()})
+            # no functools.wraps: pytest must see the ZERO-arg signature,
+            # not the original one (whose params would look like fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = 25
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -1,8 +1,9 @@
 """Core (paper-contribution) tests: planner properties, scaling-model fit,
-I/O interface round trips.  Includes hypothesis property tests."""
+I/O interface round trips.  Includes hypothesis property tests (via the
+_prop shim, which degrades to a deterministic sampler without hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.interface import ExchangeRecord, FileInterface
 from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \

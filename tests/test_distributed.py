@@ -11,6 +11,7 @@ SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 def _run(code: str) -> str:
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu",   # never probe TPU/GPU in the child
            "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
            "HOME": "/tmp"}
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
@@ -36,8 +37,8 @@ def test_moe_shard_map_matches_reference():
         p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64))
         ref, _ = moe_mod._moe_dispatch(cfg, p, x)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         with mesh, act_sharding.activation_mesh(mesh):
             out, _ = jax.jit(lambda p, x: apply_moe_expert_parallel(
                 cfg, p, x))(p, x)
@@ -53,8 +54,8 @@ def test_decomposed_poisson_converges():
         import jax, jax.numpy as jnp
         from repro.cfd.decomp import make_decomposed_poisson
         from repro.cfd import poisson
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         ny, nx = 48, 256
         rhs = jax.random.normal(jax.random.PRNGKey(0), (ny, nx))
         solve = make_decomposed_poisson(mesh, nx, dx=0.05, dy=0.05,
@@ -81,8 +82,8 @@ def test_train_step_lowers_on_multidevice_mesh():
         import jax, jax.numpy as jnp
         from repro.configs.base import get_config, INPUT_SHAPES, InputShape
         from repro.launch import steps
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_config("phi4-mini-3.8b").reduced()
         shape = InputShape("t", 64, 8, "train")
         with mesh:

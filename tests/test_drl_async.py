@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import ParallelPlan
+from repro.core.plan import CostModel, ParallelPlan
 from repro.core.scaling_model import calibrate_to_paper
 from repro.drl import networks
 from repro.drl.async_train import async_speedup, train_async
@@ -39,3 +39,53 @@ def test_async_speedup_modeled():
     # the update is a small share of an episode, so the gain is modest but
     # strictly positive and grows when episodes shrink
     assert 1.0 < res["speedup"] < 1.5, res
+
+
+# ---------------------------------------------------------------------------
+# cost-model edge cases feeding async_speedup
+# ---------------------------------------------------------------------------
+
+def test_async_speedup_io_bytes_none_uses_model_default():
+    """io_bytes=None must fall back to the model's calibrated baseline
+    volume, i.e. match passing it explicitly."""
+    m = calibrate_to_paper()
+    p = ParallelPlan(60, 60, 1)
+    res_none = async_speedup(m, p, io_bytes=None)
+    res_expl = async_speedup(m, p, io_bytes=m.io_bytes_per_actuation)
+    for k in res_none:
+        assert res_none[k] == res_expl[k], (k, res_none, res_expl)
+    assert res_none["speedup"] > 1.0
+    assert res_none["t_async_h"] < res_none["t_sync_h"]
+
+
+def test_async_speedup_nondividing_envs_rounds_up():
+    """n_envs that doesn't divide n_episodes: the last round still runs a
+    full episode wall-time, so t_async uses ceil(n_episodes / n_envs)."""
+    m = calibrate_to_paper()
+    p = ParallelPlan(7, 7, 1)
+    res = async_speedup(m, p, n_episodes=100, io_bytes=0.0)   # 15 rounds
+    t_collect = m.t_episode(p, io_bytes=0.0) - m.t_update
+    expected = (15 * max(t_collect, m.t_update) + m.t_update) / 3600
+    assert abs(res["t_async_h"] - expected) < 1e-12
+    # one extra (partial) round vs the exact-divisor episode count
+    res_98 = async_speedup(m, p, n_episodes=98, io_bytes=0.0)  # 14 rounds
+    assert res["t_async_h"] > res_98["t_async_h"]
+
+
+def test_t_episode_io_bytes_none_matches_default_volume():
+    m = CostModel()
+    p = ParallelPlan(4, 4, 1)
+    assert m.t_episode(p, io_bytes=None) == \
+        m.t_episode(p, io_bytes=m.io_bytes_per_actuation)
+    # and zero I/O is strictly cheaper
+    assert m.t_episode(p, io_bytes=0.0) < m.t_episode(p, io_bytes=None)
+
+
+def test_t_training_ceils_rounds_when_envs_dont_divide():
+    m = CostModel()
+    p = ParallelPlan(7, 7, 1)
+    t_ep = m.t_episode(p)
+    assert m.t_training(p, 10) == 2 * t_ep     # ceil(10/7)  = 2
+    assert m.t_training(p, 14) == 2 * t_ep     # exact
+    assert m.t_training(p, 15) == 3 * t_ep     # ceil(15/7)  = 3
+    assert m.t_training(p, 1) == t_ep

@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, get_config, list_configs
 from repro.launch import roofline, steps
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_abstract_mesh, make_debug_mesh
 from repro.models import model as M
 from repro.models.sharding import param_specs
 
@@ -27,9 +27,7 @@ def test_input_shapes_pool():
 def test_param_specs_cover_big_dims():
     """Every >=1M-element parameter of every arch must be sharded on the
     production mesh shape (16,16) — nothing big may stay replicated."""
-    import jax.sharding
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"),
-                                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     for arch in list_configs():
         cfg = get_config(arch)
         shapes = steps.abstract_params(cfg)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.ckpt import checkpoint as C
 from repro.data.pipeline import LMDataConfig, synthetic_batch

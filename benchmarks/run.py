@@ -24,7 +24,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cfd_scaling, bench_hybrid, bench_io,
-                            bench_kernels, bench_roofline, bench_rollout)
+                            bench_kernels, bench_roofline, bench_rollout,
+                            bench_scenarios)
     suites = [
         ("fig7_cfd_scaling", bench_cfd_scaling.run),
         ("table1_hybrid", bench_hybrid.run),
@@ -32,6 +33,7 @@ def main() -> None:
         ("fig10_components", bench_rollout.run),
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
+        ("scenarios", bench_scenarios.run),
     ]
     if args.only and args.only not in {n for n, _ in suites}:
         names = ", ".join(n for n, _ in suites)

@@ -27,6 +27,14 @@ def main() -> None:
     ap.add_argument("--actions", type=int, default=40)
     ap.add_argument("--steps-per-action", type=int, default=25)
     ap.add_argument("--warmup", type=float, default=20.0)
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario names (see "
+                         "repro.cfd.scenarios.list_scenarios(), e.g. "
+                         "'cyl_re100,cyl_re200,cyl_re100_rotary') assigned "
+                         "round-robin over the env batch; default: the "
+                         "single Re=100 jets case")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the scenario registry and exit")
     ap.add_argument("--spill", default="none",
                     choices=["none", "memory", "binary", "zstd"],
                     help="trajectory sink: spill each episode's trajectories"
@@ -34,6 +42,14 @@ def main() -> None:
     ap.add_argument("--spill-dir", default="artifacts/traj_spill")
     ap.add_argument("--out", default="artifacts/drl_cylinder.json")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from repro.cfd.scenarios import get_scenario, list_scenarios
+        for name in list_scenarios():
+            s = get_scenario(name)
+            print(f"{name:22s} Re={s.re:<6g} {s.actuation:7s} "
+                  f"{s.probes:9s} {s.description}")
+        return
 
     cfg = TrainConfig(
         env=EnvConfig(
@@ -46,6 +62,9 @@ def main() -> None:
                       entropy_coef=0.005),
         n_envs=args.n_envs,
         episodes=args.episodes,
+        scenarios=(tuple(s.strip() for s in args.scenarios.split(",")
+                         if s.strip())
+                   if args.scenarios else None),
     )
     sink = make_sink(args.spill, args.spill_dir)
     hist, params = train(cfg, sink=sink)

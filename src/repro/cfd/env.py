@@ -1,94 +1,131 @@
 """Gym-like cylinder AFC environment (the paper's DRL environment).
 
-One ``env_step`` = one actuation period: the smoothed jet velocity (eq. 11,
-beta = 0.4) is held while the solver advances ``steps_per_action`` dt's; the
-reward is eq. (12): r = C_D0 - <C_D> - omega_L |<C_L>|.
+One ``env_step`` = one actuation period: the smoothed actuation amplitude
+(eq. 11, beta = 0.4) is held while the solver advances ``steps_per_action``
+dt's; the reward is eq. (12): r = C_D0 - <C_D> - omega_L |<C_L>|.
 
-Everything is jit/vmap/shard_map-compatible: the environment state is a pytree
-and geometry arrays are closed over as constants, so ``N_envs`` environments
-run as a single vmapped program on the "data" mesh axis (the paper's
-multi-environment parallelism, DESIGN.md §2).
+Everything is jit/vmap/shard_map-compatible.  The environment splits into a
+**static** half (geometry fields, closed over as constants — shared by every
+env in a batch) and a **traced** half (``ScenarioParams`` carried inside
+``EnvState``: per-env Reynolds number, actuation mode, probe layout, C_D0),
+so ``N_envs`` *heterogeneous* scenarios run as a single vmapped program on
+the "data" mesh axis (the paper's multi-environment parallelism extended to
+the scenario-diversity axis; see ``repro.cfd.scenarios``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cfd import probes as probes_mod
+from repro.cfd import scenarios as scn_mod
 from repro.cfd import solver
-from repro.cfd.grid import Geometry, GridConfig, build_geometry
+from repro.cfd.grid import GridConfig, build_geometry
+from repro.cfd.scenarios import Scenario, ScenarioParams
 
 
 @dataclass(frozen=True)
 class EnvConfig:
+    """Environment configuration.
+
+    ``cd0`` is the uncontrolled mean drag entering reward eq. (12).  The
+    paper's value on its OpenFOAM mesh is 3.205; our IB grid at moderate
+    resolution gives ~3.5-3.7 (resolution-dependent).  ``cd0=None`` (the
+    default) means "calibrate it from the uncontrolled warmup run"; any
+    float — including 0.0 — is used as-is, no calibration.
+
+    ``obs_dim`` is derived from ``probe_layout`` (see ``repro.cfd.probes``),
+    not hardcoded; ``actuation`` selects synthetic jets vs. rotary control.
+    """
     grid: GridConfig = GridConfig()
     steps_per_action: int = 50
     actions_per_episode: int = 100
     beta: float = 0.4             # action smoothing, eq. (11)
     reward_omega: float = 0.1     # lift penalty weight, eq. (12)
-    # Uncontrolled mean drag, eq. (12).  The paper's value on its OpenFOAM mesh
-    # is 3.205; 0.0 means "calibrate from the warmup run" (our IB grid at
-    # moderate res gives ~3.5-3.7, resolution-dependent).
-    cd0: float = 0.0
+    cd0: Optional[float] = None   # None -> calibrate during warmup
     warmup_time: float = 30.0     # t.u. of uncontrolled flow before training
-    obs_dim: int = 149
+    probe_layout: str = "ring149"
+    actuation: str = "jets"
+
+    @property
+    def obs_dim(self) -> int:
+        return probes_mod.layout_size(self.probe_layout)
 
     @property
     def action_max(self) -> float:
         return self.grid.u_max    # |V_jet| <= U_m constraint
 
+    def scenario(self, name: str = "__cfg__") -> Scenario:
+        """The (anonymous) scenario this config describes."""
+        return Scenario(name=name, re=self.grid.re, actuation=self.actuation,
+                        probes=self.probe_layout, cd0=self.cd0)
+
+    @classmethod
+    def for_scenario(cls, scn, **overrides) -> "EnvConfig":
+        """EnvConfig bound to a registered scenario (or Scenario object)."""
+        scn = scn if isinstance(scn, Scenario) else scn_mod.get_scenario(scn)
+        grid = overrides.pop("grid", GridConfig())
+        grid = dataclasses.replace(grid, re=scn.re)
+        return cls(grid=grid, probe_layout=scn.probes,
+                   actuation=scn.actuation, cd0=scn.cd0, **overrides)
+
 
 class EnvState(NamedTuple):
     flow: solver.FlowState
-    jet_vel: jnp.ndarray          # smoothed jet velocity (scalar)
+    jet_vel: jnp.ndarray          # smoothed actuation amplitude (scalar)
     t: jnp.ndarray                # actuation counter
+    scn: ScenarioParams           # traced per-env scenario parameters
 
 
 class EnvOutput(NamedTuple):
-    obs: jnp.ndarray              # (149,) pressure probes
+    obs: jnp.ndarray              # (obs_dim,) pressure probes (padded)
     reward: jnp.ndarray
     cd: jnp.ndarray               # mean C_D over the actuation period
     cl: jnp.ndarray
 
 
 class CylinderEnv:
-    """Factory for pure env functions bound to a geometry."""
+    """Factory for pure env functions bound to a geometry.
+
+    The geometry (masks, actuation target fields, inlet profile) is built
+    once and closed over; ``env_step`` reads all per-scenario physics from
+    ``state.scn``, so one CylinderEnv serves an arbitrary scenario mix."""
 
     def __init__(self, cfg: EnvConfig = EnvConfig()):
         self.cfg = cfg
         self.geom = build_geometry(cfg.grid)
         self.geom_arrays = solver.geom_to_arrays(self.geom)
-        self.probe_ij = jnp.asarray(self.geom.probe_ij, jnp.float32)
         self._reset_flow = None
+        self._group_cache = {}   # (re, act_mode) -> (FlowState, cd0)
 
     # -- uncontrolled warmup to a developed shedding state ------------------
 
     def warmup(self, verbose: bool = False) -> solver.FlowState:
+        """Run (or fetch from the group cache) the uncontrolled warmup for
+        this config's own (Re, actuation) group — the zero-amplitude flow
+        still depends on the actuation mode because each mode's penalization
+        band differs — and calibrate ``cd0`` from its tail when unset."""
         cfg = self.cfg
-        n = int(round(cfg.warmup_time / cfg.grid.dt))
-        flow = solver.init_state(cfg.grid, self.geom)
-        run = jax.jit(functools.partial(self._run_steps, n))
-        flow, (cds, cls) = run(flow, jnp.float32(0.0))
-        self._reset_flow = jax.tree.map(lambda a: np.asarray(a), flow)
-        if not self.cfg.cd0:  # calibrate C_D0 on the uncontrolled flow
-            tail = max(1, n // 4)
-            self.cfg = dataclasses.replace(
-                self.cfg, cd0=float(jnp.mean(cds[-tail:])))
+        group = (cfg.grid.re, cfg.scenario().act_mode)
+        self._warmup_groups([group])
+        flow, cd0 = self._group_cache[group]
+        self._reset_flow = flow
+        if self.cfg.cd0 is None:  # calibrate C_D0 on the uncontrolled flow
+            self.cfg = dataclasses.replace(self.cfg, cd0=cd0)
         if verbose:
-            print(f"warmup {n} steps: CD0={self.cfg.cd0:.3f} "
-                  f"CL[-1]={float(cls[-1]):.3f}")
-        return flow
+            n = max(1, int(round(cfg.warmup_time / cfg.grid.dt)))
+            print(f"warmup {n} steps: CD0={self.cfg.cd0:.3f}")
+        return solver.FlowState(*jax.tree.map(jnp.asarray, flow))
 
-    def _run_steps(self, n, flow, jet_vel):
+    def _run_steps(self, n, flow, jet_vel, re=None, act_mode=None):
         def body(flow, _):
             flow, out = solver.step(self.cfg.grid, self.geom_arrays, flow,
-                                    jet_vel)
+                                    jet_vel, re=re, act_mode=act_mode)
             return flow, (out.cd, out.cl)
         return jax.lax.scan(body, flow, None, length=n)
 
@@ -98,29 +135,89 @@ class CylinderEnv:
         if self._reset_flow is None:
             self.warmup()
         flow = jax.tree.map(jnp.asarray, self._reset_flow)
+        params = scn_mod.scenario_params(self.cfg.scenario(), self.cfg.grid,
+                                         cd0=self.cfg.cd0)
         st = EnvState(flow=solver.FlowState(*flow), jet_vel=jnp.float32(0.0),
-                      t=jnp.int32(0))
+                      t=jnp.int32(0), scn=params)
         return st, self._observe(st)
 
+    def reset_batch(self, scenarios: Sequence, n_envs: Optional[int] = None,
+                    *, obs_dim: Optional[int] = None,
+                    ) -> Tuple[EnvState, jnp.ndarray]:
+        """Mixed-scenario reset: an (N_envs, ...) batch with per-env physics.
+
+        ``scenarios``: names and/or Scenario objects, assigned round-robin
+        over ``n_envs`` (default: one env per scenario).  Warmup runs once
+        per distinct *(Re, actuation)* pair as a single vmapped program —
+        the actuation mode matters even at zero amplitude because each
+        mode's penalization band differs, so the developed flow and C_D0
+        must come from the same operator ``env_step`` will integrate.
+        Per-scenario C_D0 is calibrated from each warmup tail unless the
+        scenario pins one; results are cached, so repeated resets with the
+        same scenario set re-run nothing.  Probe layouts are padded to a
+        common ``obs_dim`` (default: widest in the batch).
+        """
+        cfg = self.cfg
+        scns = scn_mod.assign_envs(scenarios, n_envs or len(scenarios))
+        groups = sorted({(s.re, s.act_mode) for s in scns})
+        self._warmup_groups(groups)
+
+        flows, cd0s = [], []
+        for s in scns:
+            flow, cd0 = self._group_cache[(s.re, s.act_mode)]
+            flows.append(flow)
+            cd0s.append(s.cd0 if s.cd0 is not None else cd0)
+        flow_b = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[jax.tree.map(jnp.asarray, f) for f in flows])
+        params_b = scn_mod.batch_params(scns, cfg.grid, obs_dim=obs_dim,
+                                        cd0s=cd0s)
+        st_b = EnvState(flow=solver.FlowState(*flow_b),
+                        jet_vel=jnp.zeros(len(scns), jnp.float32),
+                        t=jnp.zeros(len(scns), jnp.int32), scn=params_b)
+        obs_b = jax.vmap(self._observe)(st_b)
+        return st_b, obs_b
+
+    def _warmup_groups(self, groups) -> None:
+        """Warm up every uncached (re, act_mode) group in one vmapped run."""
+        cfg = self.cfg
+        todo = [g for g in groups if g not in self._group_cache]
+        if not todo:
+            return
+        n = max(1, int(round(cfg.warmup_time / cfg.grid.dt)))
+        flow0 = solver.init_state(cfg.grid, self.geom)
+        run = jax.jit(jax.vmap(
+            lambda re, m: self._run_steps(n, flow0, jnp.float32(0.0),
+                                          re=re, act_mode=m)))
+        flows, (cds, _) = run(jnp.asarray([g[0] for g in todo], jnp.float32),
+                              jnp.asarray([g[1] for g in todo], jnp.float32))
+        tail = max(1, n // 4)
+        cd0s = np.asarray(jnp.mean(cds[:, -tail:], axis=1))
+        for i, g in enumerate(todo):
+            flow = jax.tree.map(lambda a, i=i: np.asarray(a[i]), flows)
+            self._group_cache[g] = (solver.FlowState(*flow), float(cd0s[i]))
+
     def _observe(self, st: EnvState) -> jnp.ndarray:
-        return probes_mod.sample_pressure(self.probe_ij, st.flow.p)
+        return probes_mod.sample_pressure(st.scn.probe_ij, st.flow.p,
+                                          st.scn.probe_mask)
 
     def env_step(self, st: EnvState, action) -> Tuple[EnvState, EnvOutput]:
-        """One actuation period.  action: scalar in [-1, 1] (scaled to jets)."""
+        """One actuation period.  action: scalar in [-1, 1] (scaled to the
+        actuator: jet velocity or rotary surface speed, per ``st.scn``)."""
         cfg = self.cfg
         a = jnp.clip(action, -1.0, 1.0) * cfg.action_max
         jet = st.jet_vel + cfg.beta * (a - st.jet_vel)        # eq. (11)
         jet = jnp.clip(jet, -cfg.action_max, cfg.action_max)
 
         def body(flow, _):
-            flow, out = solver.step(cfg.grid, self.geom_arrays, flow, jet)
+            flow, out = solver.step(cfg.grid, self.geom_arrays, flow, jet,
+                                    re=st.scn.re, act_mode=st.scn.act_mode)
             return flow, (out.cd, out.cl)
 
         flow, (cds, cls) = jax.lax.scan(body, st.flow, None,
                                         length=cfg.steps_per_action)
         cd = jnp.mean(cds)
         cl = jnp.mean(cls)
-        reward = cfg.cd0 - cd - cfg.reward_omega * jnp.abs(cl)  # eq. (12)
-        st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1)
+        reward = st.scn.cd0 - cd - cfg.reward_omega * jnp.abs(cl)  # eq. (12)
+        st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1, scn=st.scn)
         return st2, EnvOutput(obs=self._observe(st2), reward=reward,
                               cd=cd, cl=cl)

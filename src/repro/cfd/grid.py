@@ -79,6 +79,29 @@ def _smoothed_solid(xx, yy, dx) -> np.ndarray:
     return np.clip(0.5 * (1 - (r - RADIUS) / eps), 0.0, 1.0)
 
 
+def _rotary_shell(xx, yy, dx):
+    """Rotary-control target field: rigid-body rotation per unit surface speed.
+
+    Returns (rot_x, rot_y, rmask), each (ny, nx): the x/y components of the
+    target velocity per unit surface speed, and the penalization mask in
+    [0, 1].  The target is the rigid rotation V(r) = V_s * (r/R) * t_hat
+    inside the cylinder; rmask is 1 out to r = R + 0.25 dx and tapers
+    linearly to 0 over the next 0.5 dx (so the band reaches R + 0.75 dx),
+    imposing the rotating-wall boundary condition on the adjacent fluid
+    (Magnus control, cf. rotary AFC in Rabault et al. follow-ups).  Callers
+    keep the component matching their staggered face (rot_x at u faces,
+    rot_y at v faces).
+    """
+    rx, ry = xx - CYL_X, yy - CYL_Y
+    r = np.sqrt(rx ** 2 + ry ** 2) + 1e-12
+    # tangential unit vector for counter-clockwise rotation
+    tx, ty = -ry / r, rx / r
+    # 1 inside / on the surface, linear taper to 0 at R + 0.75 dx
+    rmask = np.clip((RADIUS + 0.75 * dx - r) / (0.5 * dx), 0.0, 1.0)
+    mag = np.clip(r / RADIUS, 0.0, 1.0) * rmask
+    return mag * tx, mag * ty, rmask
+
+
 def _jet_shell(xx, yy, dx):
     """Jet actuation targets: surface band within each jet arc.
 
@@ -120,6 +143,10 @@ class Geometry:
     jet_v: np.ndarray        # (2, ny+1, nx) jet direction*profile at v faces
     jmask_u: np.ndarray      # (ny, nx+1) jet penalization mask at u faces
     jmask_v: np.ndarray      # (ny+1, nx) jet penalization mask at v faces
+    rot_u: np.ndarray        # (ny, nx+1) rotary target (x comp) per unit speed
+    rot_v: np.ndarray        # (ny+1, nx) rotary target (y comp) per unit speed
+    rmask_u: np.ndarray      # (ny, nx+1) rotary penalization mask at u faces
+    rmask_v: np.ndarray      # (ny+1, nx) rotary penalization mask at v faces
     inlet_u: np.ndarray      # (ny,) parabolic inlet profile at u rows
     probe_ij: np.ndarray     # (149, 2) float cell-index coords of probes
     cell_volume: float
@@ -146,17 +173,26 @@ def build_geometry(cfg: GridConfig) -> Geometry:
     jet_u = ju_prof * nx_u[None]
     jet_v = jv_prof * ny_v[None]
 
+    rot_u, _, rmask_u = _rotary_shell(xxu, yyu, dx)
+    _, rot_v, rmask_v = _rotary_shell(xxv, yyv, dx)
+
     inlet_u = inlet_profile(cfg, yu)
 
-    probes = probe_positions()
-    # convert physical coords to fractional cell-center indices
-    pi = (probes[:, 0] - (X0 + 0.5 * dx)) / dx
-    pj = (probes[:, 1] - (-H / 2 + 0.5 * dy)) / dy
-    probe_ij = np.stack([pj, pi], axis=-1)  # (row=j, col=i)
+    probe_ij = points_to_ij(cfg, probe_positions())
 
     return Geometry(chi_u=chi_u, chi_v=chi_v, jet_u=jet_u, jet_v=jet_v,
                     jmask_u=jmask_u, jmask_v=jmask_v,
+                    rot_u=rot_u, rot_v=rot_v,
+                    rmask_u=rmask_u, rmask_v=rmask_v,
                     inlet_u=inlet_u, probe_ij=probe_ij, cell_volume=dx * dy)
+
+
+def points_to_ij(cfg: GridConfig, pts: np.ndarray) -> np.ndarray:
+    """(P, 2) physical (x, y) -> (P, 2) fractional cell-center [row=j, col=i]
+    coordinates for ``jax.scipy.ndimage.map_coordinates`` sampling."""
+    pi = (pts[:, 0] - (X0 + 0.5 * cfg.dx)) / cfg.dx
+    pj = (pts[:, 1] - (-H / 2 + 0.5 * cfg.dy)) / cfg.dy
+    return np.stack([pj, pi], axis=-1)
 
 
 def probe_positions() -> np.ndarray:

@@ -42,8 +42,14 @@ def solve(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7,
     The last ``polish`` sweeps run with omega = 1 (plain Gauss-Seidel):
     over-relaxation accelerates the smooth error modes but leaves an
     amplified high-frequency residual, which a few unrelaxed smoothing
-    sweeps remove (~4x lower residual norm at equal total iterations)."""
+    sweeps remove (~4x lower residual norm at equal total iterations).
+
+    ``use_pallas`` requires an even nx (checkerboard slab parity); odd
+    widths silently fall back to the jnp path so callers never crash on
+    unusual grids."""
     ny, nx = rhs.shape
+    if nx % 2:
+        use_pallas = False
     p = jnp.zeros_like(rhs) if p0 is None else p0
     jj, ii = jnp.meshgrid(jnp.arange(ny), jnp.arange(nx), indexing="ij")
     red = ((ii + jj) % 2 == 0)

@@ -1,14 +1,67 @@
-"""149-probe pressure sampler (bilinear interpolation at fixed positions)."""
+"""Pressure-probe layouts + sampler (bilinear interpolation at fixed points).
+
+Layouts are registered by name so scenarios (``repro.cfd.scenarios``) can pick
+an observation vector per case:
+
+  ring149   72 probes on three rings + 77 wake grid (Wang et al. 2022 style,
+            the repo's historical default)
+  sparse24  16-probe ring at r=0.8 + 8 near-wake probes (Tang et al. style
+            reduced sensing)
+  sparse8   8-probe ring at r=0.8 (minimal sensing)
+
+``sample_pressure`` takes the probe coordinates as *data* (not closure
+constants), so per-env probe layouts vmap into one program; a probe mask
+zeroes padded entries when layouts of different sizes share one batch.
+"""
 from __future__ import annotations
+
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.cfd.grid import Geometry
+from repro.cfd.grid import CYL_X, CYL_Y, probe_positions
 
 
-def sample_pressure(geom_probe_ij, p) -> jnp.ndarray:
-    """p: (ny, nx) cell-centered pressure -> (149,) probe values."""
-    coords = jnp.asarray(geom_probe_ij, jnp.float32).T  # (2, 149) [row, col]
-    return jax.scipy.ndimage.map_coordinates(p, coords, order=1,
+def _ring(n: int, r: float) -> np.ndarray:
+    a = 2 * np.pi * np.arange(n) / n
+    return np.stack([CYL_X + r * np.cos(a), CYL_Y + r * np.sin(a)], axis=-1)
+
+
+def _sparse24() -> np.ndarray:
+    wake = np.stack([np.linspace(1.5, 8.0, 8), np.zeros(8)], axis=-1)
+    return np.concatenate([_ring(16, 0.8), wake])
+
+
+LAYOUTS: Dict[str, Callable[[], np.ndarray]] = {
+    "ring149": probe_positions,
+    "sparse24": _sparse24,
+    "sparse8": lambda: _ring(8, 0.8),
+}
+
+
+def layout_positions(name: str) -> np.ndarray:
+    """(P, 2) physical probe coordinates for a registered layout."""
+    try:
+        return LAYOUTS[name]()
+    except KeyError:
+        raise KeyError(f"unknown probe layout {name!r}; "
+                       f"known: {sorted(LAYOUTS)}") from None
+
+
+def layout_size(name: str) -> int:
+    return len(layout_positions(name))
+
+
+def sample_pressure(probe_ij, p, mask=None) -> jnp.ndarray:
+    """p: (ny, nx) cell-centered pressure -> (P,) probe values.
+
+    probe_ij: (P, 2) fractional [row, col] coords (see grid.points_to_ij);
+    mask: optional (P,) multiplier zeroing padded probe slots."""
+    coords = jnp.asarray(probe_ij, jnp.float32).T       # (2, P) [row, col]
+    vals = jax.scipy.ndimage.map_coordinates(p, coords, order=1,
                                              mode="nearest")
+    if mask is not None:
+        vals = vals * jnp.asarray(mask, vals.dtype)
+    return vals

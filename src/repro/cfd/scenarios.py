@@ -1,0 +1,193 @@
+"""Scenario registry: parameterized, batchable AFC flow cases.
+
+The paper demonstrates its parallelization on one hard-coded cylinder case;
+the "data"-axis speedup only pays off at production scale when many
+*heterogeneous* cases share one vmapped program (Tang et al. train a single
+policy across Reynolds numbers; Rabault & Kuhnle show multi-env DRL speedup).
+This module supplies the missing environment layer:
+
+  * ``Scenario`` — a named flow case: Reynolds number, actuation mode
+    (synthetic jets vs. rotary cylinder control), probe layout, optional
+    fixed reference drag ``cd0``.
+  * a process-global registry (``register_scenario`` / ``get_scenario`` /
+    ``list_scenarios``) pre-populated with the Re 100/200/500 family.
+  * ``ScenarioParams`` — the *traced* per-env parameter pytree.  Geometry
+    stays static (closed over, shared across the batch); everything that
+    differs between scenarios rides in the env state, so a mixed-Re /
+    mixed-actuation / mixed-layout batch is ONE XLA program vmapped over
+    the "data" mesh axis.
+  * ``batch_params`` — stacks scenarios into a batched ``ScenarioParams``,
+    padding probe layouts to a common obs_dim (mask zeroes padded slots).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cfd import probes as probes_mod
+from repro.cfd.grid import GridConfig, points_to_ij
+
+ACTUATIONS = ("jets", "rotary")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One flow case.  ``cd0=None`` means "calibrate from the warmup run"."""
+    name: str
+    re: float = 100.0
+    actuation: str = "jets"        # "jets" | "rotary"
+    probes: str = "ring149"        # probe layout name (repro.cfd.probes)
+    cd0: Optional[float] = None
+    description: str = ""
+
+    def __post_init__(self):
+        if self.actuation not in ACTUATIONS:
+            raise ValueError(f"unknown actuation {self.actuation!r}; "
+                             f"choose from {ACTUATIONS}")
+        probes_mod.layout_positions(self.probes)   # validate eagerly
+
+    @property
+    def obs_dim(self) -> int:
+        return probes_mod.layout_size(self.probes)
+
+    @property
+    def act_mode(self) -> float:
+        return float(ACTUATIONS.index(self.actuation))
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(scn: Scenario, *, overwrite: bool = False) -> Scenario:
+    if scn.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {scn.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[scn.name] = scn
+    return scn
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {list_scenarios()}") from None
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _builtin(name, **kw):
+    register_scenario(Scenario(name=name, **kw))
+
+
+_builtin("cyl_re100", re=100.0,
+         description="Schäfer confined cylinder, jets, full 149-probe ring")
+_builtin("cyl_re200", re=200.0,
+         description="higher-Re shedding, jets, full ring")
+_builtin("cyl_re500", re=500.0,
+         description="strongly separated regime, jets, full ring")
+_builtin("cyl_re100_rotary", re=100.0, actuation="rotary",
+         description="rotary (Magnus) control at Re=100")
+_builtin("cyl_re200_rotary", re=200.0, actuation="rotary",
+         description="rotary control at Re=200")
+_builtin("cyl_re100_sparse8", re=100.0, probes="sparse8",
+         description="minimal 8-probe sensing at Re=100")
+_builtin("cyl_re200_sparse24", re=200.0, probes="sparse24",
+         description="reduced 24-probe sensing at Re=200")
+
+
+# ---------------------------------------------------------------------------
+# traced per-env parameters
+# ---------------------------------------------------------------------------
+
+class ScenarioParams(NamedTuple):
+    """The traced (batchable) half of a scenario.
+
+    Carried inside ``EnvState`` so each env of a vmapped batch can integrate
+    different physics through the same program:
+
+      re         ()       Reynolds number (per-env viscosity nu = 1/re)
+      act_mode   ()       0 = jets, 1 = rotary (blend of target fields)
+      cd0        ()       uncontrolled reference drag for reward eq. (12)
+      probe_ij   (P, 2)   fractional [row, col] probe coords (padded)
+      probe_mask (P,)     1 for live probes, 0 for padded slots
+    """
+    re: jnp.ndarray
+    act_mode: jnp.ndarray
+    cd0: jnp.ndarray
+    probe_ij: jnp.ndarray
+    probe_mask: jnp.ndarray
+
+
+def scenario_params(scn: Scenario, grid: GridConfig, *,
+                    obs_dim: Optional[int] = None,
+                    cd0: Optional[float] = None) -> ScenarioParams:
+    """Build the traced parameter pytree for one scenario.
+
+    obs_dim pads/validates the probe vector to a common batch width;
+    cd0 overrides (e.g. with the calibrated warmup value) when the scenario
+    does not pin one."""
+    pts = probes_mod.layout_positions(scn.probes)
+    ij = points_to_ij(grid, pts).astype(np.float32)
+    n = len(ij)
+    obs_dim = n if obs_dim is None else obs_dim
+    if obs_dim < n:
+        raise ValueError(f"obs_dim={obs_dim} < layout {scn.probes!r} "
+                         f"size {n}")
+    pad = obs_dim - n
+    ij = np.concatenate([ij, np.zeros((pad, 2), np.float32)])
+    mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    # no cd0 from either the scenario or the caller -> NaN, so a reward
+    # computed against an uncalibrated baseline fails loudly instead of
+    # silently reading cd0 = 0 (CylinderEnv.reset_batch always calibrates)
+    cd0 = scn.cd0 if scn.cd0 is not None else (np.nan if cd0 is None else cd0)
+    return ScenarioParams(re=jnp.float32(scn.re),
+                          act_mode=jnp.float32(scn.act_mode),
+                          cd0=jnp.float32(cd0),
+                          probe_ij=jnp.asarray(ij),
+                          probe_mask=jnp.asarray(mask))
+
+
+def resolve(scenarios: Sequence) -> Tuple[Scenario, ...]:
+    """Names and/or Scenario objects -> Scenario tuple."""
+    return tuple(s if isinstance(s, Scenario) else get_scenario(s)
+                 for s in scenarios)
+
+
+def common_obs_dim(scenarios: Sequence) -> int:
+    """Padded observation width for a mixed batch (max layout size)."""
+    return max(s.obs_dim for s in resolve(scenarios))
+
+
+def batch_params(scenarios: Sequence, grid: GridConfig, *,
+                 obs_dim: Optional[int] = None,
+                 cd0s: Optional[Sequence[float]] = None) -> ScenarioParams:
+    """Stack scenarios into a batched ScenarioParams (leading axis = env).
+
+    Probe layouts are padded to a common obs_dim (default: the widest layout
+    in the batch) so heterogeneous sensing vmaps into one program."""
+    scns = resolve(scenarios)
+    obs_dim = common_obs_dim(scns) if obs_dim is None else obs_dim
+    cd0s = [None] * len(scns) if cd0s is None else list(cd0s)
+    per = [scenario_params(s, grid, obs_dim=obs_dim, cd0=c)
+           for s, c in zip(scns, cd0s)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def assign_envs(scenarios: Sequence, n_envs: int) -> Tuple[Scenario, ...]:
+    """Round-robin scenario assignment over the env ("data") axis.
+
+    Raises when the batch is too small to hold every requested scenario —
+    silently dropping part of a scenario mix is a misconfiguration."""
+    scns = resolve(scenarios)
+    if n_envs < len(scns):
+        raise ValueError(
+            f"n_envs={n_envs} < {len(scns)} requested scenarios "
+            f"({[s.name for s in scns]}); raise n_envs or trim the mix")
+    return tuple(scns[i % len(scns)] for i in range(n_envs))

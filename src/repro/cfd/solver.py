@@ -1,12 +1,16 @@
 """Fractional-step (Chorin projection) incompressible Navier-Stokes on a
 staggered MAC grid, with volume-penalization immersed-boundary cylinder and
-synthetic-jet actuation.
+synthetic-jet / rotary actuation.
 
 u: (ny, nx+1) x-velocity at x-faces      v: (ny+1, nx) y-velocity at y-faces
 p: (ny, nx)   pressure at cell centers
 
 One ``step`` advances dt: upwind advection + central diffusion -> implicit
-volume penalization (cylinder + jets) -> projection -> force/probe outputs.
+volume penalization (cylinder + actuators) -> projection -> force outputs.
+
+Geometry is static (closed over); the Reynolds number and actuation mode can
+be *traced* per call so heterogeneous scenario batches vmap into one program
+(see ``repro.cfd.scenarios``).
 """
 from __future__ import annotations
 
@@ -25,6 +29,25 @@ class FlowState(NamedTuple):
     u: jnp.ndarray
     v: jnp.ndarray
     p: jnp.ndarray
+
+
+class GeomArrays(NamedTuple):
+    """Static geometry fields as jnp arrays (closed over by env closures).
+
+    These are shared by every scenario on the same grid; everything that
+    varies per scenario (Re, actuation mode, probe layout) is traced data so
+    mixed-scenario batches vmap into one program."""
+    chi_u: jnp.ndarray
+    chi_v: jnp.ndarray
+    jet_u: jnp.ndarray
+    jet_v: jnp.ndarray
+    jmask_u: jnp.ndarray
+    jmask_v: jnp.ndarray
+    rot_u: jnp.ndarray
+    rot_v: jnp.ndarray
+    rmask_u: jnp.ndarray
+    rmask_v: jnp.ndarray
+    inlet_u: jnp.ndarray
 
 
 class StepOutputs(NamedTuple):
@@ -84,9 +107,9 @@ def _pad_v(v):
 # spatial operators
 # ---------------------------------------------------------------------------
 
-def _advect_diffuse_u(u, v, cfg: GridConfig):
+def _advect_diffuse_u(u, v, cfg: GridConfig, re):
     """du/dt = -u du/dx - v du/dy + (1/Re) lap(u) at interior u-faces."""
-    dx, dy, re = cfg.dx, cfg.dy, cfg.re
+    dx, dy = cfg.dx, cfg.dy
     up = _pad_u(u)                                       # (ny+2, nx+3)
     uc = up[1:-1, 1:-1]                                  # == u
     # neighbors
@@ -107,8 +130,8 @@ def _advect_diffuse_u(u, v, cfg: GridConfig):
     return -adv + lap / re
 
 
-def _advect_diffuse_v(u, v, cfg: GridConfig):
-    dx, dy, re = cfg.dx, cfg.dy, cfg.re
+def _advect_diffuse_v(u, v, cfg: GridConfig, re):
+    dx, dy = cfg.dx, cfg.dy
     vp = _pad_v(v)                                       # (ny+3, nx+2)
     vc = vp[1:-1, 1:-1]                                  # == v
     vl, vr = vp[1:-1, :-2], vp[1:-1, 2:]
@@ -136,25 +159,47 @@ def divergence(u, v, cfg: GridConfig):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
-def step(cfg: GridConfig, geom_arrays, state: FlowState, jet_vel,
-         *, use_pallas: bool = False) -> Tuple[FlowState, StepOutputs]:
-    """Advance one dt.  jet_vel: scalar jet velocity (jet1 = +, jet2 = -)."""
-    chi_u, chi_v, jet_u, jet_v, jmask_u, jmask_v, inlet_u = geom_arrays
+def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
+         *, re=None, act_mode=None,
+         use_pallas: bool = False) -> Tuple[FlowState, StepOutputs]:
+    """Advance one dt.
+
+    jet_vel: scalar actuation amplitude — jet velocity (jet1 = +, jet2 = -)
+    in jet mode, cylinder surface speed in rotary mode.
+    re: Reynolds number; traced (per-env scenario data) when given, else the
+    static ``cfg.re``.
+    act_mode: actuation blend in [0, 1] — 0 = synthetic jets, 1 = rotary
+    cylinder control; traced when given, else jets.  Intermediate values
+    blend the two target fields (only 0/1 are physical scenarios).
+    """
+    ga = GeomArrays(*geom_arrays)
+    chi_u, chi_v, inlet_u = ga.chi_u, ga.chi_v, ga.inlet_u
     dt = cfg.dt
+    if re is None:
+        re = cfg.re
 
     u, v, p = state
     # 1. advection-diffusion (explicit Euler)
-    u_star = u + dt * _advect_diffuse_u(u, v, cfg)
-    v_star = v + dt * _advect_diffuse_v(u, v, cfg)
+    u_star = u + dt * _advect_diffuse_u(u, v, cfg, re)
+    v_star = v + dt * _advect_diffuse_v(u, v, cfg, re)
 
     # 2. immersed boundary: implicit volume penalization toward target.
-    # Penalization acts on the solid (target 0) AND the jet band (target =
-    # jet velocity): C = max(chi, jmask).
+    # Penalization acts on the solid (target 0) AND the actuation band
+    # (target = actuation velocity): C = max(chi, band mask).
     lam = dt / cfg.penal_eta
-    tgt_u = jet_vel * (jet_u[0] - jet_u[1])
-    tgt_v = jet_vel * (jet_v[0] - jet_v[1])
-    pen_u = jnp.maximum(chi_u, jmask_u)
-    pen_v = jnp.maximum(chi_v, jmask_v)
+    jet_tgt_u = ga.jet_u[0] - ga.jet_u[1]
+    jet_tgt_v = ga.jet_v[0] - ga.jet_v[1]
+    if act_mode is None:                      # static jets-only path
+        tgt_u = jet_vel * jet_tgt_u
+        tgt_v = jet_vel * jet_tgt_v
+        pen_u = jnp.maximum(chi_u, ga.jmask_u)
+        pen_v = jnp.maximum(chi_v, ga.jmask_v)
+    else:                                     # per-scenario traced blend
+        m = act_mode
+        tgt_u = jet_vel * ((1 - m) * jet_tgt_u + m * ga.rot_u)
+        tgt_v = jet_vel * ((1 - m) * jet_tgt_v + m * ga.rot_v)
+        pen_u = jnp.maximum(chi_u, (1 - m) * ga.jmask_u + m * ga.rmask_u)
+        pen_v = jnp.maximum(chi_v, (1 - m) * ga.jmask_v + m * ga.rmask_v)
     u_pen = (u_star + lam * pen_u * tgt_u) / (1 + lam * pen_u)
     v_pen = (v_star + lam * pen_v * tgt_v) / (1 + lam * pen_v)
     # momentum exchange -> force on the body (reaction), per unit density
@@ -185,12 +230,12 @@ def step(cfg: GridConfig, geom_arrays, state: FlowState, jet_vel,
     return FlowState(u_new, v_new, p), StepOutputs(cd=cd, cl=cl)
 
 
-def geom_to_arrays(geom: Geometry):
-    """Static geometry as a tuple of jnp arrays (hashable-free pytree)."""
-    return (jnp.asarray(geom.chi_u, jnp.float32),
-            jnp.asarray(geom.chi_v, jnp.float32),
-            jnp.asarray(geom.jet_u, jnp.float32),
-            jnp.asarray(geom.jet_v, jnp.float32),
-            jnp.asarray(geom.jmask_u, jnp.float32),
-            jnp.asarray(geom.jmask_v, jnp.float32),
-            jnp.asarray(geom.inlet_u, jnp.float32))
+def geom_to_arrays(geom: Geometry) -> GeomArrays:
+    """Static geometry as a pytree of jnp arrays (closed over, never traced)."""
+    as32 = lambda a: jnp.asarray(a, jnp.float32)
+    return GeomArrays(chi_u=as32(geom.chi_u), chi_v=as32(geom.chi_v),
+                      jet_u=as32(geom.jet_u), jet_v=as32(geom.jet_v),
+                      jmask_u=as32(geom.jmask_u), jmask_v=as32(geom.jmask_v),
+                      rot_u=as32(geom.rot_u), rot_v=as32(geom.rot_v),
+                      rmask_u=as32(geom.rmask_u), rmask_v=as32(geom.rmask_v),
+                      inlet_u=as32(geom.inlet_u))

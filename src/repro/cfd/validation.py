@@ -1,0 +1,55 @@
+"""Shared physics-validation helpers: golden-reference measurement.
+
+Used by ``tools/gen_golden.py`` (writes the checked-in reference) and
+``tests/test_golden_physics.py`` (re-measures and compares) so both sides
+compute Strouhal / mean C_D / C_L amplitude with byte-identical code.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cfd import solver
+from repro.cfd.grid import GridConfig, build_geometry
+
+
+def run_uncontrolled(cfg: GridConfig, state: solver.FlowState, n: int
+                     ) -> Tuple[solver.FlowState, np.ndarray, np.ndarray]:
+    """Advance ``n`` uncontrolled (jet_vel = 0) steps; returns (state, cds,
+    cls) with force-coefficient time series as numpy arrays."""
+    geom_arrays = solver.geom_to_arrays(build_geometry(cfg))
+
+    def body(flow, _):
+        flow, out = solver.step(cfg, geom_arrays, flow, jnp.float32(0.0))
+        return flow, (out.cd, out.cl)
+
+    state, (cds, cls) = jax.jit(
+        lambda s: jax.lax.scan(body, s, None, length=n))(state)
+    return state, np.asarray(cds), np.asarray(cls)
+
+
+def measure_shedding(cds: np.ndarray, cls: np.ndarray, dt: float
+                     ) -> Dict[str, float]:
+    """Vortex-shedding metrics over a developed window.
+
+    Strouhal from the mean upward-zero-crossing period of the mean-removed
+    C_L signal (sub-step resolution via linear interpolation); St = f D / U
+    with D = U_mean = 1 in our nondimensionalization.
+    """
+    cl = cls - cls.mean()
+    sgn = cl > 0
+    idx = np.flatnonzero(~sgn[:-1] & sgn[1:])
+    if len(idx) < 3:
+        raise ValueError("window too short: fewer than 3 C_L zero crossings "
+                         "(no developed shedding?)")
+    t_cross = idx + cl[idx] / (cl[idx] - cl[idx + 1])
+    period = float(np.diff(t_cross).mean()) * dt
+    return {
+        "strouhal": 1.0 / period,
+        "cd_mean": float(cds.mean()),
+        "cl_amp": float(0.5 * (cls.max() - cls.min())),
+        "n_periods": float(len(idx) - 1),
+    }

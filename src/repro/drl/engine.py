@@ -170,12 +170,21 @@ def env_state_specs(mesh: Mesh) -> Tuple[P, P]:
     return P(dp), P(dp, None, "model")
 
 
+def is_grid_field(a) -> bool:
+    """Heuristic for (N, ny, nx) grid arrays vs. small per-env tables.
+
+    Scenario batches carry (N, P, 2) probe coordinates in the env state;
+    only genuine grid fields (trailing dim = nx, always >> 4) should have
+    their x dim sharded over "model"."""
+    return a.ndim == 3 and a.shape[-1] > 4
+
+
 def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
     """device_put a batched env-state pytree with engine shardings."""
     batch, batch_space = env_state_specs(mesh)
 
     def spec_of(a):
-        if a.ndim == 3 and n_ranks > 1:        # (N, ny, nx) grid field
+        if n_ranks > 1 and is_grid_field(a):
             return NamedSharding(mesh, batch_space)
         return NamedSharding(mesh, P(batch[0]))
 
@@ -242,7 +251,7 @@ class RolloutEngine:
                 batch_spec, batch_space = env_state_specs(mesh)
 
                 def constrain(a):
-                    if a.ndim >= 3 and cfg.n_ranks > 1:
+                    if cfg.n_ranks > 1 and is_grid_field(a):
                         return jax.lax.with_sharding_constraint(
                             a, NamedSharding(mesh, batch_space))
                     return jax.lax.with_sharding_constraint(

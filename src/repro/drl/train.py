@@ -29,6 +29,9 @@ class TrainConfig:
     n_envs: int = 4
     episodes: int = 100
     seed: int = 0
+    # scenario names (repro.cfd.scenarios) assigned round-robin over the env
+    # batch; None = the single case described by ``env`` (historical default)
+    scenarios: Optional[Tuple[str, ...]] = None
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
@@ -36,8 +39,13 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
           ) -> Tuple[Dict[str, np.ndarray], Any]:
     """Returns (history dict of per-episode arrays, trained params)."""
     env = CylinderEnv(cfg.env)
-    st0, obs0 = env.reset()           # warms up + calibrates CD0
-    pcfg = networks.PolicyConfig(obs_dim=cfg.env.obs_dim)
+    if cfg.scenarios:
+        # mixed-scenario batch: per-env physics, one vmapped program
+        st_b, obs_b = env.reset_batch(cfg.scenarios, cfg.n_envs)
+    else:
+        st0, obs0 = env.reset()       # warms up + calibrates CD0
+        st_b, obs_b = broadcast_env_state(st0, obs0, cfg.n_envs)
+    pcfg = networks.PolicyConfig(obs_dim=int(obs_b.shape[-1]))
 
     engine = RolloutEngine.for_env(
         env, EngineConfig(n_envs=cfg.n_envs,
@@ -45,7 +53,6 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                           gamma=cfg.ppo.gamma, lam=cfg.ppo.lam),
         sink=sink)
     params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo, cfg.seed)
-    st_b, obs_b = broadcast_env_state(st0, obs0, cfg.n_envs)
 
     hist = {"reward": [], "cd": [], "cl": [], "wall": []}
     t_ep = [time.time()]

@@ -24,6 +24,11 @@ def rb_sor(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7, p0=None,
     ``inner_iters`` VMEM-resident sweeps each.
     """
     ny, nx = rhs.shape
+    if nx % 2:
+        raise ValueError(
+            f"rb_sor requires an even grid width for checkerboard slab "
+            f"parity, got nx={nx}; use cfd.poisson.solve (it falls back to "
+            f"the jnp path for odd widths)")
     if interpret is None:
         interpret = not _on_tpu()
     if nslabs == 0:

@@ -110,9 +110,29 @@ def test_env_step_api():
                                 steps_per_action=10, warmup_time=5.0))
     st, obs = env.reset()
     assert obs.shape == (149,)
-    assert env.cfg.cd0 > 0  # calibrated in warmup
+    assert env.cfg.cd0 > 0  # cd0=None default -> calibrated in warmup
     st2, out = jax.jit(env.env_step)(st, jnp.float32(0.5))
     # eq. (11): V_1 = V_0 + beta*(a*Um - V_0)
     expect = 0.4 * 0.5 * env.cfg.action_max
     assert abs(float(st2.jet_vel) - expect) < 1e-5
     assert not bool(jnp.isnan(out.reward))
+
+
+def test_cd0_explicit_vs_calibrated():
+    """cd0=None calibrates from warmup; any float (even 0.0) is used as-is."""
+    grid = GridConfig(res=6, dt=0.012, poisson_iters=30)
+    base = dict(grid=grid, steps_per_action=5, warmup_time=1.0)
+
+    env_cal = CylinderEnv(EnvConfig(**base))            # cd0=None default
+    st_cal, _ = env_cal.reset()
+    assert env_cal.cfg.cd0 is not None and env_cal.cfg.cd0 > 0
+    assert float(st_cal.scn.cd0) == pytest.approx(env_cal.cfg.cd0)
+
+    env_fix = CylinderEnv(EnvConfig(**base, cd0=3.205))  # paper's value
+    st_fix, _ = env_fix.reset()
+    assert env_fix.cfg.cd0 == 3.205                      # NOT recalibrated
+    assert float(st_fix.scn.cd0) == pytest.approx(3.205)
+
+    env_zero = CylinderEnv(EnvConfig(**base, cd0=0.0))   # explicit zero
+    env_zero.reset()
+    assert env_zero.cfg.cd0 == 0.0                       # kept, not a flag

@@ -1,0 +1,204 @@
+"""Scenario registry + mixed-scenario batching through the RolloutEngine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import scenarios as S
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl import networks
+from repro.drl.engine import EngineConfig, RolloutEngine, broadcast_env_state
+
+GRID = GridConfig(res=6, dt=0.012, poisson_iters=25)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return CylinderEnv(EnvConfig(grid=GRID, steps_per_action=4,
+                                 actions_per_episode=3, warmup_time=2.0))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_builtins():
+    names = S.list_scenarios()
+    assert {"cyl_re100", "cyl_re200", "cyl_re500",
+            "cyl_re100_rotary", "cyl_re100_sparse8"} <= set(names)
+    s = S.get_scenario("cyl_re200_sparse24")
+    assert s.re == 200.0 and s.probes == "sparse24" and s.obs_dim == 24
+
+
+def test_registry_errors():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        S.get_scenario("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        S.register_scenario(S.Scenario(name="cyl_re100"))
+    with pytest.raises(ValueError, match="unknown actuation"):
+        S.Scenario(name="x", actuation="telekinesis")
+    with pytest.raises(KeyError, match="unknown probe layout"):
+        S.Scenario(name="x", probes="nope")
+
+
+def test_register_custom_scenario():
+    scn = S.Scenario(name="test_re300", re=300.0, probes="sparse8",
+                     description="test-only")
+    S.register_scenario(scn)
+    try:
+        assert S.get_scenario("test_re300").obs_dim == 8
+        S.register_scenario(S.Scenario(name="test_re300", re=350.0),
+                            overwrite=True)
+        assert S.get_scenario("test_re300").re == 350.0
+    finally:
+        del S._REGISTRY["test_re300"]
+
+
+def test_obs_dim_derived_from_layout():
+    assert EnvConfig(probe_layout="ring149").obs_dim == 149
+    assert EnvConfig(probe_layout="sparse24").obs_dim == 24
+    assert EnvConfig(probe_layout="sparse8").obs_dim == 8
+
+
+def test_env_config_for_scenario():
+    cfg = EnvConfig.for_scenario("cyl_re200_sparse24", grid=GRID,
+                                 warmup_time=1.0)
+    assert cfg.grid.re == 200.0
+    assert cfg.probe_layout == "sparse24" and cfg.obs_dim == 24
+    assert cfg.warmup_time == 1.0
+
+
+def test_batch_params_padding():
+    params = S.batch_params(["cyl_re100_sparse8", "cyl_re100"], GRID)
+    assert params.probe_ij.shape == (2, 149, 2)
+    np.testing.assert_array_equal(np.asarray(params.probe_mask).sum(1),
+                                  [8.0, 149.0])
+    # no calibration supplied and none pinned by the scenario -> NaN, so a
+    # reward against an uncalibrated baseline fails loudly, not as cd0=0
+    assert np.isnan(np.asarray(params.cd0)).all()
+    with pytest.raises(ValueError, match="obs_dim"):
+        S.batch_params(["cyl_re100"], GRID, obs_dim=10)
+
+
+# ---------------------------------------------------------------------------
+# mixed-scenario physics through the engine (ISSUE 2 acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_collect_matches_single_path(env):
+    """3 distinct scenarios (3 Re's, 2 probe layouts) through ONE vmapped
+    RolloutEngine.collect: batch shape/dtype identical to the homogeneous
+    single-scenario path, per-env physics genuinely different."""
+    mix = ("cyl_re100", "cyl_re200_sparse24", "cyl_re500")
+    n_envs, T = 3, 3
+    engine = RolloutEngine.for_env(env, EngineConfig(n_envs=n_envs,
+                                                     horizon=T))
+    params = networks.init_actor_critic(
+        networks.PolicyConfig(obs_dim=149), jax.random.PRNGKey(0))
+
+    st0, obs0 = env.reset()
+    st_h, obs_h = broadcast_env_state(st0, obs0, n_envs)
+    batch_h, traj_h = engine.collect(params, st_h, obs_h,
+                                     jax.random.PRNGKey(1))
+
+    st_m, obs_m = env.reset_batch(mix, n_envs, obs_dim=149)
+    batch_m, traj_m = engine.collect(params, st_m, obs_m,
+                                     jax.random.PRNGKey(1))
+
+    # same program contract: identical shapes and dtypes everywhere
+    for a, b in zip(jax.tree.leaves(batch_h), jax.tree.leaves(batch_m)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    for a, b in zip(jax.tree.leaves(traj_h), jax.tree.leaves(traj_m)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert batch_m.obs.shape == (n_envs * T, 149)
+    assert not bool(jnp.any(jnp.isnan(batch_m.adv)))
+
+    # sparse24 env: padded probe slots observe exactly zero
+    assert bool(jnp.all(traj_m.obs[1, :, 24:] == 0.0))
+    assert bool(jnp.any(traj_m.obs[1, :, :24] != 0.0))
+
+
+def test_mixed_batch_per_env_physics_differ(env):
+    """Same action sequence, different Re -> distinct C_D trajectories."""
+    mix = ("cyl_re100", "cyl_re200", "cyl_re500")
+    st_b, _ = env.reset_batch(mix)
+    vstep = jax.jit(jax.vmap(env.env_step))
+    cds = []
+    acts = jnp.zeros(3, jnp.float32)
+    for _ in range(3):
+        st_b, out = vstep(st_b, acts)
+        cds.append(np.asarray(out.cd))
+    cds = np.stack(cds)                      # (T, 3)
+    assert np.isfinite(cds).all()
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert np.abs(cds[:, i] - cds[:, j]).max() > 1e-3, (i, j, cds)
+
+
+def test_same_scenario_same_physics(env):
+    """Two envs assigned the same scenario integrate identically."""
+    st_b, _ = env.reset_batch(["cyl_re100"], n_envs=2)
+    vstep = jax.jit(jax.vmap(env.env_step))
+    st_b, out = vstep(st_b, jnp.zeros(2, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out.cd[0]), np.asarray(out.cd[1]),
+                               rtol=0, atol=0)
+
+
+def test_rotary_actuation_differs_from_jets(env):
+    """Rotary control produces different lift response than jets at the
+    same commanded amplitude (Magnus effect vs. jet blowing)."""
+    st_b, _ = env.reset_batch(["cyl_re100", "cyl_re100_rotary"])
+    vstep = jax.jit(jax.vmap(env.env_step))
+    cls = []
+    for _ in range(4):
+        st_b, out = vstep(st_b, jnp.ones(2, jnp.float32))
+        cls.append(np.asarray(out.cl))
+    cls = np.stack(cls)
+    assert np.isfinite(cls).all()
+    assert np.abs(cls[:, 0] - cls[:, 1]).max() > 0.05, cls
+
+
+def test_per_scenario_cd0_calibration(env):
+    """Warmup calibrates a distinct C_D0 per (Re, actuation) group."""
+    st_b, _ = env.reset_batch(["cyl_re100", "cyl_re200", "cyl_re100",
+                               "cyl_re100_rotary"])
+    cd0 = np.asarray(st_b.scn.cd0)
+    assert cd0[0] != cd0[1]          # Re matters
+    assert cd0[0] == cd0[2]          # same group -> same calibration
+    assert cd0[0] != cd0[3]          # actuation operator matters too
+    assert (cd0 > 0.5).all(), cd0
+
+
+def test_zero_action_reward_unbiased(env):
+    """Each env starts at its OWN operator's equilibrium: a zero-action
+    first step must give a near-zero reward for jets AND rotary scenarios
+    (pre-fix, rotary warmed up under the jets operator and opened with a
+    spurious drag transient, reward ~ -2.8)."""
+    st_b, _ = env.reset_batch(["cyl_re100", "cyl_re100_rotary"])
+    vstep = jax.jit(jax.vmap(env.env_step))
+    st_b, out = vstep(st_b, jnp.zeros(2, jnp.float32))
+    assert np.abs(np.asarray(out.reward)).max() < 0.5, out.reward
+
+
+def test_single_env_rotary_warmup_unbiased():
+    """The single-env path (EnvConfig.for_scenario -> reset) must also warm
+    up under its own actuation operator (pre-fix: jets warmup gave the
+    rotary env a zero-action first reward of ~ -5.4)."""
+    cfg = EnvConfig.for_scenario("cyl_re100_rotary", grid=GRID,
+                                 steps_per_action=4, warmup_time=2.0)
+    env2 = CylinderEnv(cfg)
+    st0, _ = env2.reset()
+    assert float(st0.scn.act_mode) == 1.0
+    _, out = jax.jit(env2.env_step)(st0, jnp.float32(0.0))
+    assert abs(float(out.reward)) < 0.5, float(out.reward)
+
+
+def test_assign_envs_rejects_dropped_scenarios():
+    with pytest.raises(ValueError, match="n_envs=1 < 2"):
+        S.assign_envs(["cyl_re100", "cyl_re200"], 1)
+
+
+def test_round_robin_assignment():
+    scns = S.assign_envs(["cyl_re100", "cyl_re200"], 5)
+    assert [s.name for s in scns] == ["cyl_re100", "cyl_re200", "cyl_re100",
+                                      "cyl_re200", "cyl_re100"]

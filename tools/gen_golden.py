@@ -1,0 +1,69 @@
+"""Generate the golden physics reference for the regression tests.
+
+Runs the uncontrolled Re=100 cylinder to developed vortex shedding, then
+measures Strouhal number, mean C_D and C_L oscillation amplitude over a
+fixed window, and stores BOTH the developed flow state and the reference
+stats in ``tests/golden/``.  The test restarts from the stored state and
+re-measures the same window, so it stays fast (~1k solver steps) while
+pinning the solver's physics.
+
+Update procedure (after an INTENTIONAL physics change — see README):
+
+    PYTHONPATH=src python tools/gen_golden.py
+    git add tests/golden/cyl_re100_res8.npz
+    # quote old -> new St / C_D / amplitude in the commit message
+"""
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from repro.cfd import solver
+from repro.cfd.grid import GridConfig, build_geometry
+from repro.cfd.validation import measure_shedding, run_uncontrolled
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "tests" / "golden" \
+    / "cyl_re100_res8.npz"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--res", type=int, default=8)
+    ap.add_argument("--dt", type=float, default=0.01)
+    ap.add_argument("--poisson-iters", type=int, default=60)
+    ap.add_argument("--develop", type=float, default=60.0,
+                    help="t.u. of uncontrolled flow before the window")
+    ap.add_argument("--measure", type=float, default=10.0,
+                    help="t.u. of the measurement window (stored in the npz)")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cfg = GridConfig(res=args.res, dt=args.dt,
+                     poisson_iters=args.poisson_iters)
+    geom = build_geometry(cfg)
+    state = solver.init_state(cfg, geom)
+
+    n_dev = int(round(args.develop / cfg.dt))
+    print(f"developing shedding: {n_dev} steps ...")
+    state, cds, cls = run_uncontrolled(cfg, state, n_dev)
+    print(f"  tail CD={cds[-500:].mean():.4f}  "
+          f"CL range=({cls[-500:].min():+.3f}, {cls[-500:].max():+.3f})")
+
+    n_meas = int(round(args.measure / cfg.dt))
+    _, cds, cls = run_uncontrolled(cfg, state, n_meas)
+    stats = measure_shedding(cds, cls, cfg.dt)
+    print(f"  St={stats['strouhal']:.4f}  CD={stats['cd_mean']:.4f}  "
+          f"CL_amp={stats['cl_amp']:.4f}  ({stats['n_periods']:.0f} periods)")
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(
+        args.out,
+        u=np.asarray(state.u), v=np.asarray(state.v), p=np.asarray(state.p),
+        res=args.res, dt=args.dt, poisson_iters=args.poisson_iters,
+        meas_steps=n_meas, **stats)
+    print(f"golden reference -> {args.out} "
+          f"({args.out.stat().st_size / 1024:.0f} KiB)")
+
+
+if __name__ == "__main__":
+    main()

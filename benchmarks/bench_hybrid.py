@@ -1,25 +1,38 @@
 """Paper Table I / Figs 8-9 — hybrid (N_envs x N_ranks) parallelization.
 
-The calibrated cost model (fit to the paper's Table II with <10% mean error,
-tests/test_core.py) generates all three Table I blocks; the optimizer
-reproduces the paper's headline finding (N_ranks=1, N_envs=N optimal).
-Measured single-env episode cost on this host anchors an alternative
-'this-host' column.
+Two halves:
+
+  * model: the cost model calibrated to the paper's Table II (<10% mean
+    error, tests/test_core.py) generates all three Table I blocks and the
+    optimizer reproduces the paper's headline finding (N_ranks=1,
+    N_envs=N optimal).
+  * measured: ``core.autotune`` times the real components on THIS host
+    (solver step, halo exchange per feasible rank count, PPO update, sink
+    write), refits the model, and picks the executable plan.  The full
+    record lands in ``artifacts/BENCH_hybrid.json`` so the perf trajectory
+    accumulates across PRs.
+
+Standalone:  PYTHONPATH=src python benchmarks/bench_hybrid.py [--smoke]
 """
-import dataclasses
+import sys
+from pathlib import Path  # noqa: E402 — path bootstrap must precede imports
 
-import jax
-import jax.numpy as jnp
+if __name__ == "__main__":  # standalone: make benchmarks.* / repro.* importable
+    _ROOT = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_ROOT / "src"))
+    sys.path.insert(0, str(_ROOT))
 
-from benchmarks.common import emit, time_fn
-from repro.core.plan import CostModel, ParallelPlan, optimize_plan
+from benchmarks.common import emit
+from repro.core.plan import ParallelPlan, optimize_plan
 from repro.core.scaling_model import calibrate_to_paper, fig10_breakdown, \
     table1_rows
 
+ARTIFACT = Path(__file__).resolve().parent.parent / "artifacts" \
+    / "BENCH_hybrid.json"
 
-def run(smoke: bool = False) -> None:
-    # pure cost-model evaluation — already cheap; smoke changes nothing
-    del smoke
+
+def run(smoke: bool = False, artifact: str = str(ARTIFACT)) -> None:
+    # ---- cost-model half (pure evaluation — cheap at any size) ------------
     m = calibrate_to_paper()
     for r in table1_rows(m):
         if r["n_envs"] in (1, 2, 10, 30, 60) or \
@@ -42,6 +55,37 @@ def run(smoke: bool = False) -> None:
              f"cfd_s={r['cfd_s']:.0f};io_s={r['io_s']:.1f};"
              f"drl_s={r['drl_s']:.1f}")
 
+    # ---- measured half: autotune this host --------------------------------
+    from repro.cfd.grid import GridConfig
+    from repro.core.autotune import autotune, validate_artifact
+
+    grid = GridConfig(res=4 if smoke else 8, dt=0.01,
+                      poisson_iters=20 if smoke else 50)
+    rp = autotune(grid=grid, smoke=smoke, artifact=artifact)
+    rec = rp.measurements
+    validate_artifact(rec)
+    for r, t in sorted(rec["measured"]["t_step_ranks"].items(),
+                       key=lambda kv: int(kv[0])):
+        err = rec["predicted"]["rel_err_t_step"][r]
+        emit(f"autotune_t_step_r{r}", float(t) * 1e6,
+             f"predicted_us={rec['predicted']['t_step_ranks'][r]*1e6:.1f};"
+             f"rel_err={err:+.3f}")
+    emit("autotune_t_update", rec["measured"]["t_update"] * 1e6, "")
+    emit("autotune_io_write",
+         rec["measured"]["io"]["write_seconds"] * 1e6,
+         f"bytes_per_act={rec['measured']['io']['bytes_per_actuation']:.0f};"
+         f"stream_bw={rec['measured']['io']['stream_bandwidth']:.3g}")
+    emit("autotune_plan", 0.0,
+         f"n_envs={rp.n_envs};n_ranks={rp.n_ranks};backend={rp.backend};"
+         f"util={rp.plan.utilization:.2f};artifact={artifact}")
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid, 1 timing iteration (CI)")
+    ap.add_argument("--artifact", default=str(ARTIFACT))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, artifact=args.artifact)

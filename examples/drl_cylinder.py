@@ -35,6 +35,12 @@ def main() -> None:
                          "single Re=100 jets case")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="print the scenario registry and exit")
+    ap.add_argument("--plan", default=None,
+                    help="hybrid placement: 'auto' (measure this host and "
+                         "optimize, core.autotune) or 'N_ENVSxN_RANKS' "
+                         "(e.g. '2x2' = 2 envs x 2 spatial CFD shards, "
+                         "runs the halo Poisson backend); default: plain "
+                         "single-host vmap")
     ap.add_argument("--spill", default="none",
                     choices=["none", "memory", "binary", "zstd"],
                     help="trajectory sink: spill each episode's trajectories"
@@ -51,6 +57,11 @@ def main() -> None:
                   f"{s.probes:9s} {s.description}")
         return
 
+    plan = args.plan
+    if plan and plan != "auto":
+        n_envs, n_ranks = (int(v) for v in plan.lower().split("x"))
+        plan = (n_envs, n_ranks)
+
     cfg = TrainConfig(
         env=EnvConfig(
             grid=GridConfig(res=args.res, dt=0.01, poisson_iters=50),
@@ -65,6 +76,7 @@ def main() -> None:
         scenarios=(tuple(s.strip() for s in args.scenarios.split(",")
                          if s.strip())
                    if args.scenarios else None),
+        plan=plan,
     )
     sink = make_sink(args.spill, args.spill_dir)
     hist, params = train(cfg, sink=sink)

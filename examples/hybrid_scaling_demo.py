@@ -1,7 +1,20 @@
 """The paper's contribution as a 5-minute demo: given a worker budget, the
 hybrid planner picks (N_envs, N_ranks), shows why, and maps it to a TPU mesh.
 
+Two modes:
+
+    # paper mode — cost model calibrated to the paper's Table II
     PYTHONPATH=src python examples/hybrid_scaling_demo.py --workers 60
+
+    # measured mode — time THIS host's solver/halo/PPO/sink components,
+    # refit the model, and pick the executable plan (JSON artifact included);
+    # force a multi-device CPU host to see the halo candidates:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/hybrid_scaling_demo.py --auto
+
+The chosen plan is directly executable:  ``train(TrainConfig(plan="auto"))``
+builds the mesh, picks the Poisson backend ("halo" when n_ranks > 1) and
+runs it — see README "Choosing a parallel plan".
 """
 import argparse
 
@@ -10,37 +23,81 @@ from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
 from repro.core.scaling_model import calibrate_to_paper
 
 
+def show_lattice(m: CostModel, workers: int, episodes: int,
+                 io_bytes: float) -> ParallelPlan:
+    print(f"\nall full-utilization splits of {workers} workers "
+          f"({episodes} episodes, io={io_bytes / 1e6:.1f} MB):")
+    print(f"  {'n_envs':>7s} {'n_ranks':>8s} {'T_hours':>9s} "
+          f"{'speedup':>8s} {'eff':>6s}")
+    ref = m.t_training(ParallelPlan(1, 1, 1), episodes, io_bytes)
+    for p in enumerate_plans(workers):
+        if p.utilization < 1.0:
+            continue
+        t = m.t_training(p, episodes, io_bytes)
+        print(f"  {p.n_envs:7d} {p.n_ranks:8d} {t / 3600:9.1f} "
+              f"{ref / t:8.1f} {ref / t / workers * 100:5.1f}%")
+    best = optimize_plan(workers, m, episodes, io_bytes)
+    print(f"\noptimal: n_envs={best.n_envs}, n_ranks={best.n_ranks} "
+          f"(utilization {best.utilization:.0%})")
+    print(f"TPU mesh mapping: data axis = {best.n_envs} (env batch), "
+          f"model axis = {best.n_ranks} (spatial CFD shards)")
+    return best
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=60)
     ap.add_argument("--episodes", type=int, default=3000)
-    ap.add_argument("--io-bytes", type=float, default=5.0e6,
-                    help="interface bytes per env per actuation")
+    ap.add_argument("--io-bytes", type=float, default=None,
+                    help="interface bytes per env per actuation "
+                         "(default: paper baseline 5.0 MB; in --auto mode "
+                         "the measured per-actuation volume)")
+    ap.add_argument("--auto", action="store_true",
+                    help="measure this host (core.autotune) instead of "
+                         "using the paper-calibrated constants; the worker "
+                         "budget becomes the host's device count")
+    ap.add_argument("--artifact", default="artifacts/autotune_demo.json",
+                    help="--auto mode: measured-vs-predicted JSON record")
     args = ap.parse_args()
 
+    if args.auto:
+        from repro.core.autotune import autotune
+        rp = autotune(n_episodes=args.episodes,
+                      io_bytes=args.io_bytes, artifact=args.artifact)
+        rec = rp.measurements
+        print("measured on this host (median of 3):")
+        for r, t in sorted(rec["measured"]["t_step_ranks"].items(),
+                           key=lambda kv: int(kv[0])):
+            pred = rec["predicted"]["t_step_ranks"][r]
+            err = rec["predicted"]["rel_err_t_step"][r]
+            print(f"  t_step(n_ranks={r}) = {t * 1e3:7.2f} ms   "
+                  f"refit model: {pred * 1e3:7.2f} ms ({err:+.1%})")
+        print(f"  t_update = {rec['measured']['t_update'] * 1e3:.1f} ms   "
+              f"sink write = "
+              f"{rec['measured']['io']['write_seconds'] * 1e3:.2f} ms")
+        io_bytes = (args.io_bytes if args.io_bytes is not None
+                    else rp.model.io_bytes_per_actuation)
+        best = show_lattice(rp.model, rec["plan"]["n_total"], args.episodes,
+                            io_bytes)
+        print(f"\n{rp.describe()}")
+        print(f"artifact -> {args.artifact}")
+        print("execute it:  train(TrainConfig(plan='auto', ...))  "
+              "or plan=ParallelPlan"
+              f"({best.n_total}, {best.n_envs}, {best.n_ranks})")
+        return
+
     m = calibrate_to_paper()
-    print(f"cost model (calibrated to the paper's Table II):")
-    print(f"  t_step(1) = {m.t_step_1*1e3:.1f} ms   "
-          f"CFD eff @16 ranks = {m.cfd_efficiency(16)*100:.0f}%")
-    print(f"\nall splits of {args.workers} workers "
-          f"({args.episodes} episodes, io={args.io_bytes/1e6:.1f} MB):")
-    print(f"  {'n_envs':>7s} {'n_ranks':>8s} {'T_hours':>9s} "
-          f"{'speedup':>8s} {'eff':>6s}")
-    ref = m.t_training(ParallelPlan(1, 1, 1), args.episodes, args.io_bytes)
-    plans = [p for p in enumerate_plans(args.workers)
-             if p.n_envs * p.n_ranks == args.workers]
-    for p in plans:
-        t = m.t_training(p, args.episodes, args.io_bytes)
-        print(f"  {p.n_envs:7d} {p.n_ranks:8d} {t/3600:9.1f} "
-              f"{ref/t:8.1f} {ref/t/args.workers*100:5.1f}%")
-    best = optimize_plan(args.workers, m, args.episodes, args.io_bytes)
-    print(f"\noptimal: n_envs={best.n_envs}, n_ranks={best.n_ranks} "
-          f"(paper: 60 x 1)")
-    print(f"TPU mesh mapping: data axis = {best.n_envs} (env batch), "
-          f"model axis = {best.n_ranks} (spatial CFD shards)")
+    io_bytes = 5.0e6 if args.io_bytes is None else args.io_bytes
+    print("cost model (calibrated to the paper's Table II):")
+    print(f"  t_step(1) = {m.t_step_1 * 1e3:.1f} ms   "
+          f"CFD eff @16 ranks = {m.cfd_efficiency(16) * 100:.0f}%")
+    best = show_lattice(m, args.workers, args.episodes, io_bytes)
+    print(f"paper: 60 x 1 — matches" if (best.n_envs, best.n_ranks)
+          == (60, 1) and args.workers == 60 else "")
     opt = m.t_training(best, args.episodes, io_bytes=1.2e6)
-    print(f"with optimized 1.2 MB interface: {opt/3600:.1f} h "
-          f"({ref/opt:.1f}x vs single worker; paper: 47x)")
+    ref = m.t_training(ParallelPlan(1, 1, 1), args.episodes, io_bytes)
+    print(f"with optimized 1.2 MB interface: {opt / 3600:.1f} h "
+          f"({ref / opt:.1f}x vs single worker; paper: 47x)")
 
 
 if __name__ == "__main__":

@@ -8,22 +8,73 @@ red-black SOR sweeps locally (same block-Jacobi semantics as the Pallas
 kernel), then exchanges one halo column with each neighbour — one
 collective-permute pair per outer iteration, which is exactly the message
 pattern whose cost the paper's Fig. 7 measures.
+
+``decomposed_solve`` is the traceable entry point (usable inside jit / vmap /
+scan — it is the ``backend="halo"`` path of ``cfd.poisson.solve`` and runs
+inside the vmapped env step when a plan picks ``n_ranks > 1``);
+``make_decomposed_poisson`` wraps it as a standalone jit'd solver.
+
+Only the *neighbour* halos are frozen between exchanges (block-Jacobi); the
+domain-edge ghosts (Neumann at the inlet shard, Dirichlet at the outlet
+shard) are recomputed from the live local columns every sweep, exactly like
+the monolithic reference — so at ``n_shards == 1`` with ``inner_iters == 1``
+this reproduces ``poisson.solve`` sweep for sweep.
+
+jax 0.4.x caveat: the result keeps its mesh sharding, and *eager* op-by-op
+math on such an array can be silently wrong on the forced-multi-device CPU
+backend (observed with concatenate on a ("data">1, "model">1) mesh).  Every
+production path here consumes the result inside jit — whole-program
+partitioning is correct; ad-hoc analysis code should ``np.asarray`` the
+output first.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 
 
-def _local_sweeps(p, rhs, left, right, *, dx, dy, omega, inner_iters,
-                  col_offset):
-    """inner_iters red-black SOR sweeps on a local slab with fixed halos."""
+def validate_decomposition(mesh, nx: int, axis: str = "model") -> int:
+    """Number of x-slabs for ``mesh``/``axis``, with actionable errors.
+
+    Raises ``ValueError`` (not assert — asserts vanish under ``python -O``)
+    when the axis is missing from the mesh or the grid width does not divide
+    into equal slabs.  Works on abstract meshes too (shape-only check).
+    """
+    axes = tuple(mesh.shape.keys()) if hasattr(mesh.shape, "keys") \
+        else tuple(mesh.axis_names)
+    if axis not in axes:
+        raise ValueError(
+            f"mesh has no {axis!r} axis (axes: {axes}); build it with a "
+            f"spatial axis — e.g. launch.mesh.mesh_for_plan(plan) or "
+            f"make_debug_mesh(n_data, n_model) — or pass axis=<name>")
+    n_shards = mesh.shape[axis]
+    if nx % n_shards:
+        lo, hi = nx - nx % n_shards, nx + (-nx) % n_shards
+        raise ValueError(
+            f"grid width nx={nx} does not split into {n_shards} equal "
+            f"x-slabs over mesh axis {axis!r}; use a grid with "
+            f"nx % n_ranks == 0 (e.g. nx={lo} or nx={hi}) or a plan whose "
+            f"n_ranks divides {nx}")
+    return n_shards
+
+
+def _local_sweeps(p, rhs, left_h, right_h, *, idx, n_shards, dx, dy, omega,
+                  inner_iters, sweep0, n_sor, n_pairs, col_offset):
+    """``inner_iters`` red-black sweep pairs on a local slab.
+
+    ``left_h``/``right_h`` are the exchanged neighbour halos, frozen for the
+    whole call; the domain-edge ghosts come from the live local columns.
+    ``sweep0`` is the global index of this call's first sweep pair — pairs
+    past ``n_sor`` run un-relaxed (the reference solver's Gauss-Seidel
+    polish tail), and pairs past ``n_pairs`` are masked to no-ops so the
+    total sweep count matches the caller's ``iters`` exactly even when
+    ``inner_iters`` does not divide it.
+    """
     ny, bx = p.shape
     dx2, dy2 = dx * dx, dy * dy
     inv_diag = 1.0 / (2.0 / dx2 + 2.0 / dy2)
@@ -31,58 +82,93 @@ def _local_sweeps(p, rhs, left, right, *, dx, dy, omega, inner_iters,
     ii = jax.lax.broadcasted_iota(jnp.int32, (ny, bx), 1) + col_offset
     red = ((ii + jj) % 2 == 0)
 
-    def sweep(p, mask):
+    def sweep(p, mask, om):
+        left = jnp.where(idx == 0, p[:, :1], left_h)          # Neumann inlet
+        right = jnp.where(idx == n_shards - 1, -p[:, -1:],    # Dirichlet out
+                          right_h)
         pp = jnp.concatenate([left, p, right], axis=1)
-        pp = jnp.concatenate([pp[:1], pp, pp[-1:]], axis=0)  # Neumann walls
+        pp = jnp.concatenate([pp[:1], pp, pp[-1:]], axis=0)   # Neumann walls
         nb = ((pp[1:-1, :-2] + pp[1:-1, 2:]) / dx2
               + (pp[:-2, 1:-1] + pp[2:, 1:-1]) / dy2)
-        return jnp.where(mask, (1 - omega) * p + omega * (nb - rhs)
-                         * inv_diag, p)
+        p_gs = (nb - rhs) * inv_diag
+        return jnp.where(mask, (1 - om) * p + om * p_gs, p)
 
-    def body(_, p):
-        p = sweep(p, red)
-        return sweep(p, ~red)
+    def body(j, p):
+        om = jnp.where(sweep0 + j < n_sor, omega, 1.0)
+        active = sweep0 + j < n_pairs
+        p = sweep(p, red & active, om)
+        return sweep(p, ~red & active, om)
 
     return jax.lax.fori_loop(0, inner_iters, body, p)
 
 
-def make_decomposed_poisson(mesh: Mesh, nx: int, *, axis: str = "model",
-                            dx: float, dy: float, omega: float = 1.7,
-                            inner_iters: int = 4):
-    """Returns a jit'd (rhs, p0, iters is static) -> p solver where the grid
-    is decomposed into x-slabs over ``axis`` with explicit halo exchange."""
-    n_shards = mesh.shape[axis]
-    assert nx % n_shards == 0, (nx, n_shards)
-    bx = nx // n_shards
+def decomposed_solve(rhs, p0=None, *, mesh: Mesh, axis: str = "model",
+                     dx: float, dy: float, omega: float = 1.7,
+                     iters: int = 60, inner_iters: int = 4,
+                     polish: int = 10):
+    """x-slab + ppermute halo-exchange pressure solve (traceable).
 
-    def solve_local(p, rhs, *, outer_iters):
+    Exactly ``iters`` red-black sweep pairs run (matching the reference
+    solver's work at equal ``iters``), grouped into outer rounds of
+    ``inner_iters`` local sweeps each with one halo-column exchange (two
+    ppermutes — the MPI message pair) per round; when ``inner_iters`` does
+    not divide ``iters`` the tail of the last round is masked off.  The
+    last ``polish`` pairs run with omega = 1, mirroring ``poisson.solve``'s
+    Gauss-Seidel tail.
+    """
+    n_shards = validate_decomposition(mesh, rhs.shape[-1], axis)
+    bx = rhs.shape[-1] // n_shards
+    p0 = jnp.zeros_like(rhs) if p0 is None else p0
+    outer = -(-iters // inner_iters)
+    n_sor = iters - min(polish, iters // 2)
+
+    def solve_local(p, rhs):
         idx = jax.lax.axis_index(axis)
 
-        def outer(_, p):
+        def outer_body(i, p):
             # halo exchange: my rightmost column -> right neighbour's left
             # halo, my leftmost -> left neighbour's right halo (2 ppermutes
             # per outer iteration == 2 MPI messages per rank pair)
-            right_from_left = jax.lax.ppermute(
-                p[:, -1:], axis, [(i, i + 1) for i in range(n_shards - 1)])
-            left_from_right = jax.lax.ppermute(
-                p[:, :1], axis, [(i + 1, i) for i in range(n_shards - 1)])
-            left = jnp.where(idx == 0, p[:, :1], right_from_left)   # Neumann
-            right = jnp.where(idx == n_shards - 1, -p[:, -1:],      # outlet
-                              left_from_right)
-            return _local_sweeps(p, rhs, left, right, dx=dx, dy=dy,
-                                 omega=omega, inner_iters=inner_iters,
-                                 col_offset=idx * bx)
+            if n_shards > 1:
+                from_left = jax.lax.ppermute(
+                    p[:, -1:], axis,
+                    [(k, k + 1) for k in range(n_shards - 1)])
+                from_right = jax.lax.ppermute(
+                    p[:, :1], axis,
+                    [(k + 1, k) for k in range(n_shards - 1)])
+            else:                      # single shard: edge ghosts cover both
+                from_left = from_right = jnp.zeros_like(p[:, :1])
+            return _local_sweeps(p, rhs, from_left, from_right, idx=idx,
+                                 n_shards=n_shards, dx=dx, dy=dy, omega=omega,
+                                 inner_iters=inner_iters,
+                                 sweep0=i * inner_iters, n_sor=n_sor,
+                                 n_pairs=iters, col_offset=idx * bx)
 
-        return jax.lax.fori_loop(0, outer_iters, outer, p)
+        return jax.lax.fori_loop(0, outer, outer_body, p)
+
+    # check_vma=True (check_rep on jax 0.4.x) is load-bearing, not a debug
+    # aid: with the replication of unmentioned mesh axes UNchecked, jax
+    # 0.4.37's partitioner miscompiles this shard_map when it is embedded in
+    # a larger jitted program on a mesh whose "data" axis is > 1 (state
+    # corruption growing over a lax.scan).  Verified replication makes the
+    # same program correct on every mesh shape.
+    fn = shard_map(solve_local, mesh=mesh,
+                   in_specs=(P(None, axis), P(None, axis)),
+                   out_specs=P(None, axis), check_vma=True)
+    return fn(p0, rhs)
+
+
+def make_decomposed_poisson(mesh: Mesh, nx: int, *, axis: str = "model",
+                            dx: float, dy: float, omega: float = 1.7,
+                            inner_iters: int = 4, polish: int = 10):
+    """Returns a jit'd (rhs, p0, iters is static) -> p solver where the grid
+    is decomposed into x-slabs over ``axis`` with explicit halo exchange."""
+    validate_decomposition(mesh, nx, axis)
 
     @functools.partial(jax.jit, static_argnames=("iters",))
     def solve(rhs, p0=None, *, iters: int = 60):
-        p = jnp.zeros_like(rhs) if p0 is None else p0
-        outer = -(-iters // inner_iters)
-        fn = shard_map(
-            functools.partial(solve_local, outer_iters=outer),
-            mesh=mesh, in_specs=(P(None, axis), P(None, axis)),
-            out_specs=P(None, axis), check_vma=False)
-        return fn(p, rhs)
+        return decomposed_solve(rhs, p0, mesh=mesh, axis=axis, dx=dx, dy=dy,
+                                omega=omega, iters=iters,
+                                inner_iters=inner_iters, polish=polish)
 
     return solve

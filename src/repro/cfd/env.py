@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cfd import poisson
 from repro.cfd import probes as probes_mod
 from repro.cfd import scenarios as scn_mod
 from repro.cfd import solver
@@ -94,10 +95,29 @@ class CylinderEnv:
 
     The geometry (masks, actuation target fields, inlet profile) is built
     once and closed over; ``env_step`` reads all per-scenario physics from
-    ``state.scn``, so one CylinderEnv serves an arbitrary scenario mix."""
+    ``state.scn``, so one CylinderEnv serves an arbitrary scenario mix.
 
-    def __init__(self, cfg: EnvConfig = EnvConfig()):
+    ``backend``/``mesh`` select the Poisson backend for the env steps
+    training integrates.  ``backend="halo"`` with a ("data", "model") mesh
+    runs each env's pressure solve as explicit x-slabs over the "model"
+    axis (the plan's n_ranks).  Warmup always runs the un-decomposed
+    backend: its group batch is too small to tile the mesh "data" axis
+    (see decomp's jax 0.4.x caveat), and the two backends solve the same
+    equations — the halo path's block-Jacobi boundary lag is a solver
+    tolerance, not a different operator, so the developed flow and C_D0
+    transfer."""
+
+    def __init__(self, cfg: EnvConfig = EnvConfig(), *,
+                 backend: Optional[str] = None, mesh=None):
         self.cfg = cfg
+        self.backend = poisson.resolve_backend(backend)
+        self.mesh = mesh
+        if self.backend == "halo":
+            from repro.cfd.decomp import validate_decomposition
+            if mesh is None:
+                raise ValueError("backend='halo' needs mesh= (e.g. "
+                                 "launch.mesh.mesh_for_plan(plan))")
+            validate_decomposition(mesh, cfg.grid.nx)
         self.geom = build_geometry(cfg.grid)
         self.geom_arrays = solver.geom_to_arrays(self.geom)
         self._reset_flow = None
@@ -123,9 +143,12 @@ class CylinderEnv:
         return solver.FlowState(*jax.tree.map(jnp.asarray, flow))
 
     def _run_steps(self, n, flow, jet_vel, re=None, act_mode=None):
+        # warmup path: un-decomposed backend (see class docstring)
+        backend = "reference" if self.backend == "halo" else self.backend
         def body(flow, _):
             flow, out = solver.step(self.cfg.grid, self.geom_arrays, flow,
-                                    jet_vel, re=re, act_mode=act_mode)
+                                    jet_vel, re=re, act_mode=act_mode,
+                                    backend=backend)
             return flow, (out.cd, out.cl)
         return jax.lax.scan(body, flow, None, length=n)
 
@@ -210,7 +233,8 @@ class CylinderEnv:
 
         def body(flow, _):
             flow, out = solver.step(cfg.grid, self.geom_arrays, flow, jet,
-                                    re=st.scn.re, act_mode=st.scn.act_mode)
+                                    re=st.scn.re, act_mode=st.scn.act_mode,
+                                    backend=self.backend, mesh=self.mesh)
             return flow, (out.cd, out.cl)
 
         flow, (cds, cls) = jax.lax.scan(body, st.flow, None,

@@ -2,17 +2,54 @@
 
 BCs: Neumann (dp/dn = 0) at inlet and walls, Dirichlet (p = 0) at the outlet.
 This is the CFD hot spot (the paper attributes >95% of wall time to CFD; within
-our fractional-step solver the pressure solve dominates) — kernels/poisson
-provides the Pallas TPU version of the sweep; this module is the jnp reference
-and the CPU execution path.
+our fractional-step solver the pressure solve dominates).  ``solve`` fans out
+over three interchangeable backends:
+
+  "reference"  the jnp sweep below — the CPU execution path and the oracle
+  "pallas"     kernels/poisson's TPU slab smoother (block-Jacobi slabs)
+  "halo"       cfd/decomp's explicit x-slab domain decomposition with
+               shard_map + ppermute halo exchange over a mesh axis — the
+               paper's N_ranks parallelism, executable inside the vmapped
+               env step
+
+``use_pallas=`` is kept as a deprecated alias for backend selection.
 """
 from __future__ import annotations
 
 import functools
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+BACKENDS = ("reference", "pallas", "halo")
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    use_pallas: Optional[bool] = None) -> str:
+    """Normalize the (backend, legacy use_pallas) pair to a BACKENDS member.
+
+    ``use_pallas`` is a deprecated alias: True -> "pallas", False ->
+    "reference".  Passing both a backend and a conflicting alias is an error.
+    """
+    if use_pallas is not None:
+        alias = "pallas" if use_pallas else "reference"
+        if backend is not None and backend != alias:
+            raise ValueError(
+                f"conflicting solver selection: backend={backend!r} vs "
+                f"use_pallas={use_pallas} (alias for {alias!r}); drop the "
+                f"deprecated use_pallas= argument")
+        warnings.warn("use_pallas= is deprecated; pass backend='pallas' "
+                      "(or 'reference') instead", DeprecationWarning,
+                      stacklevel=3)
+        backend = alias
+    backend = backend or "reference"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown Poisson backend {backend!r}; "
+                         f"choose from {BACKENDS}")
+    return backend
 
 
 def _pad_pressure(p):
@@ -32,10 +69,13 @@ def residual(p, rhs, dx, dy):
     return lap - rhs
 
 
-@functools.partial(jax.jit, static_argnames=("dx", "dy", "iters",
-                                             "use_pallas", "polish"))
+@functools.partial(jax.jit, static_argnames=("dx", "dy", "iters", "backend",
+                                             "use_pallas", "polish", "mesh",
+                                             "halo_axis", "halo_inner"))
 def solve(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7,
-          p0=None, use_pallas: bool = False, polish: int = 10):
+          p0=None, backend: Optional[str] = None,
+          use_pallas: Optional[bool] = None, polish: int = 10,
+          mesh=None, halo_axis: str = "model", halo_inner: int = 4):
     """Red-black SOR.  rhs: (ny, nx).  Returns p with mean-free gauge handled
     by the outlet Dirichlet condition.
 
@@ -44,13 +84,30 @@ def solve(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7,
     amplified high-frequency residual, which a few unrelaxed smoothing
     sweeps remove (~4x lower residual norm at equal total iterations).
 
-    ``use_pallas`` requires an even nx (checkerboard slab parity); odd
-    widths silently fall back to the jnp path so callers never crash on
-    unusual grids."""
+    ``backend="pallas"`` requires an even nx (checkerboard slab parity); odd
+    widths silently fall back to the reference path so callers never crash
+    on unusual grids.  ``backend="halo"`` runs cfd/decomp's explicit x-slab
+    decomposition over ``mesh``'s ``halo_axis`` (``halo_inner`` local sweeps
+    per halo exchange) and is traceable under vmap — the paper's N_ranks > 1
+    configuration."""
+    backend = resolve_backend(backend, use_pallas)
     ny, nx = rhs.shape
-    if nx % 2:
-        use_pallas = False
+    if backend == "pallas" and nx % 2:
+        backend = "reference"
     p = jnp.zeros_like(rhs) if p0 is None else p0
+
+    if backend == "halo":
+        if mesh is None:
+            raise ValueError(
+                "backend='halo' needs a mesh with a spatial axis; pass "
+                "mesh= (e.g. launch.mesh.mesh_for_plan(plan)) or choose "
+                "backend='reference'")
+        from repro.cfd import decomp
+        return decomp.decomposed_solve(rhs, p, mesh=mesh, axis=halo_axis,
+                                       dx=dx, dy=dy, omega=omega,
+                                       iters=iters, inner_iters=halo_inner,
+                                       polish=polish)
+
     jj, ii = jnp.meshgrid(jnp.arange(ny), jnp.arange(nx), indexing="ij")
     red = ((ii + jj) % 2 == 0)
     inv_diag = 1.0 / (2.0 / dx ** 2 + 2.0 / dy ** 2)
@@ -65,7 +122,7 @@ def solve(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7,
     n_polish = min(polish, iters // 2)
     n_sor = iters - n_polish
 
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels.poisson import ops as poisson_ops
         p = poisson_ops.rb_sor(rhs, dx, dy, iters=n_sor, omega=omega, p0=p)
 

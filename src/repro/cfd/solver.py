@@ -158,10 +158,12 @@ def divergence(u, v, cfg: GridConfig):
 # one time step
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "use_pallas",
+                                             "mesh", "halo_inner"))
 def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
-         *, re=None, act_mode=None,
-         use_pallas: bool = False) -> Tuple[FlowState, StepOutputs]:
+         *, re=None, act_mode=None, backend: str = None,
+         use_pallas: bool = None, mesh=None, halo_inner: int = 1
+         ) -> Tuple[FlowState, StepOutputs]:
     """Advance one dt.
 
     jet_vel: scalar actuation amplitude — jet velocity (jet1 = +, jet2 = -)
@@ -171,7 +173,17 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
     act_mode: actuation blend in [0, 1] — 0 = synthetic jets, 1 = rotary
     cylinder control; traced when given, else jets.  Intermediate values
     blend the two target fields (only 0/1 are physical scenarios).
+    backend: Poisson backend ("reference" | "pallas" | "halo"); "halo" needs
+    ``mesh`` and runs the pressure solve as explicit x-slabs with ppermute
+    halo exchange over the mesh "model" axis — the paper's N_ranks > 1
+    spatial decomposition.  ``use_pallas`` is a deprecated alias.
+    halo_inner: local sweeps per halo exchange on the "halo" backend.  The
+    default 1 exchanges every red-black pair (the MPI-per-iteration pattern
+    whose cost the paper's Fig. 7 measures); looser coupling leaves
+    slab-boundary pressure error that the projection feedback amplifies
+    over hundreds of steps.
     """
+    backend = poisson.resolve_backend(backend, use_pallas)
     ga = GeomArrays(*geom_arrays)
     chi_u, chi_v, inlet_u = ga.chi_u, ga.chi_v, ga.inlet_u
     dt = cfg.dt
@@ -218,7 +230,8 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
     # 4. projection
     rhs = divergence(u_star, v_star, cfg) / dt
     p = poisson.solve(rhs, cfg.dx, cfg.dy, iters=cfg.poisson_iters,
-                      omega=cfg.poisson_omega, p0=p, use_pallas=use_pallas)
+                      omega=cfg.poisson_omega, p0=p, backend=backend,
+                      mesh=mesh, halo_inner=halo_inner)
     u_new = u_star.at[:, 1:-1].add(-dt * (p[:, 1:] - p[:, :-1]) / cfg.dx)
     v_new = v_star.at[1:-1, :].add(-dt * (p[1:, :] - p[:-1, :]) / cfg.dy)
     u_new = _apply_bc_u(u_new, inlet_u)

@@ -16,14 +16,20 @@ from repro.cfd import solver
 from repro.cfd.grid import GridConfig, build_geometry
 
 
-def run_uncontrolled(cfg: GridConfig, state: solver.FlowState, n: int
+def run_uncontrolled(cfg: GridConfig, state: solver.FlowState, n: int,
+                     *, backend: str = None, mesh=None
                      ) -> Tuple[solver.FlowState, np.ndarray, np.ndarray]:
     """Advance ``n`` uncontrolled (jet_vel = 0) steps; returns (state, cds,
-    cls) with force-coefficient time series as numpy arrays."""
+    cls) with force-coefficient time series as numpy arrays.
+
+    ``backend``/``mesh`` select the Poisson backend (see ``cfd.poisson``),
+    so the golden physics window can be re-measured through e.g. the
+    ``"halo"`` domain-decomposed path."""
     geom_arrays = solver.geom_to_arrays(build_geometry(cfg))
 
     def body(flow, _):
-        flow, out = solver.step(cfg, geom_arrays, flow, jnp.float32(0.0))
+        flow, out = solver.step(cfg, geom_arrays, flow, jnp.float32(0.0),
+                                backend=backend, mesh=mesh)
         return flow, (out.cd, out.cl)
 
     state, (cds, cls) = jax.jit(

@@ -1,0 +1,409 @@
+"""Measured autotuning: turn the paper's advisory cost model into a plan
+chosen from timings on THIS host.
+
+The paper picks the hybrid split ``n_total = n_envs x n_ranks`` from
+constants calibrated to its own cluster (Tables I/II, Fig. 7).  This module
+re-measures those constants where the code actually runs and makes the
+result executable:
+
+  1. ``measure_components`` times the real building blocks — one single-env
+     solver step (reference backend), the halo-backend step at each feasible
+     ``n_ranks``, policy inference, one PPO update, one trajectory-sink
+     write.
+  2. ``refit_cost_model`` refits ``CostModel``'s constants to those
+     measurements with the same least-squares machinery that calibrates to
+     the paper (``scaling_model.least_squares_fit``).
+  3. ``optimize_plan`` brute-forces the divisor lattice on the refit model.
+  4. The result is a ``ResolvedPlan`` — (n_envs, n_ranks, mesh shape,
+     Poisson backend) — plus a JSON artifact (schema ``repro.autotune/v1``)
+     of measured-vs-predicted component times, the host analogue of the
+     paper's Table I / Fig. 7 columns.
+
+``resolve_plan`` is the single entry point engines and training loops use to
+accept ``plan="auto" | ParallelPlan | ResolvedPlan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
+    optimize_plan
+
+AUTOTUNE_SCHEMA = "repro.autotune/v1"
+
+
+# ---------------------------------------------------------------------------
+# resolved plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ResolvedPlan:
+    """An executable hybrid configuration: the chosen split, the Poisson
+    backend that realizes its n_ranks, and the cost model behind the
+    choice.  ``measurements`` carries the JSON-artifact dict when the plan
+    came from ``autotune``."""
+    plan: ParallelPlan
+    backend: str                       # "reference" | "pallas" | "halo"
+    model: CostModel = field(default_factory=CostModel)
+    source: str = "explicit"           # "explicit" | "auto"
+    measurements: Optional[Dict[str, Any]] = None
+
+    @property
+    def n_envs(self) -> int:
+        return self.plan.n_envs
+
+    @property
+    def n_ranks(self) -> int:
+        return self.plan.n_ranks
+
+    @property
+    def mesh_shape(self) -> Tuple[int, int]:
+        return self.plan.mesh_shape
+
+    def build_mesh(self, devices=None):
+        from repro.launch.mesh import mesh_for_plan
+        return mesh_for_plan(self.plan, devices=devices)
+
+    def describe(self) -> str:
+        return (f"plan[{self.source}]: n_envs x n_ranks = "
+                f"{self.n_envs} x {self.n_ranks} of {self.plan.n_total} "
+                f"workers (utilization {self.plan.utilization:.0%}), "
+                f"poisson backend '{self.backend}', mesh "
+                f"(data, model) = {self.mesh_shape}")
+
+
+def default_backend(n_ranks: int, nx: Optional[int] = None) -> str:
+    """Poisson backend implied by a split: n_ranks > 1 needs the explicit
+    halo decomposition; single-rank runs use the Pallas kernel on TPU (even
+    widths) and the jnp reference elsewhere.  With ``nx`` unknown (no grid
+    in scope — e.g. engine-side resolution) the conservative "reference"
+    is chosen: it is correct on every grid."""
+    import jax
+    if n_ranks > 1:
+        return "halo"
+    if nx is not None and jax.default_backend() == "tpu" and nx % 2 == 0:
+        return "pallas"
+    return "reference"
+
+
+def resolve_plan(plan, *, n_total: Optional[int] = None, grid=None,
+                 **autotune_kw) -> ResolvedPlan:
+    """Normalize any plan spelling to a ResolvedPlan.
+
+    plan: "auto" (measure + optimize on this host), a ParallelPlan, an
+    (n_envs, n_ranks) tuple, or an existing ResolvedPlan (passed through).
+    ``grid``/``autotune_kw`` parameterize the "auto" measurement; with no
+    grid in scope the backend choice is conservative (never "pallas",
+    whose even-nx requirement can't be checked).
+    """
+    if isinstance(plan, ResolvedPlan):
+        return plan
+    if isinstance(plan, str):
+        if plan != "auto":
+            raise ValueError(f"unknown plan spec {plan!r}; expected 'auto', "
+                             f"a ParallelPlan, or an (n_envs, n_ranks) pair")
+        return autotune(n_total=n_total, grid=grid, **autotune_kw)
+    if isinstance(plan, (tuple, list)):
+        n_envs, n_ranks = plan
+        plan = ParallelPlan(n_total or n_envs * n_ranks, n_envs, n_ranks)
+    if not isinstance(plan, ParallelPlan):
+        raise ValueError(f"cannot resolve plan from {plan!r}")
+    nx = grid.nx if grid is not None else None
+    return ResolvedPlan(plan=plan,
+                        backend=default_backend(plan.n_ranks, nx),
+                        source="explicit")
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _time(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time (s) of a jitted callable (same protocol as
+    benchmarks/common.time_fn, importable from the package)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def candidate_ranks(n_total: int, nx: int, n_devices: int) -> List[int]:
+    """Rank counts worth timing: divide the worker budget AND the grid
+    width, and fit on the host's devices."""
+    return [r for r in range(1, n_total + 1)
+            if n_total % r == 0 and nx % r == 0 and r <= n_devices]
+
+
+def measure_components(grid=None, *, n_total: Optional[int] = None,
+                       ppo_cfg=None, horizon: int = 32, n_envs_probe: int = 4,
+                       iters: int = 3, seed: int = 0,
+                       sink_dir: Optional[str] = None) -> Dict[str, Any]:
+    """Time the real components of one training episode on this host.
+
+    Returns a dict with per-component times (seconds):
+      t_step_ranks   {n_ranks: solver-step time}; n_ranks=1 is the
+                     reference backend, >1 the halo backend on a (1, r)
+                     mesh — the paper's Fig. 7 measurement
+      t_policy       one policy inference (single obs)
+      t_update       one PPO update on an (n_envs_probe * horizon) batch
+      io             bytes + seconds for one episode spill through the
+                     binary TrajectorySink -> per-actuation volume and
+                     single-stream bandwidth
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.cfd import solver
+    from repro.cfd.grid import GridConfig, build_geometry
+    from repro.cfd.probes import layout_size
+    from repro.drl import networks
+    from repro.drl.engine import FileSink
+    from repro.drl.ppo import Batch, PPOConfig, make_optimizer, ppo_update
+    from repro.drl.rollout import Trajectory
+    from repro.launch.mesh import mesh_for_plan
+
+    grid = grid or GridConfig()
+    n_devices = len(jax.devices())
+    n_total = n_total or n_devices
+    ppo_cfg = ppo_cfg or PPOConfig()
+    geom = build_geometry(grid)
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(grid, geom)
+    key = jax.random.PRNGKey(seed)
+
+    # -- CFD solver step per rank count (Fig. 7's axis).  Each rank count is
+    # timed with the backend a plan with that n_ranks would actually
+    # execute (default_backend), so t_step_1 on TPU measures the Pallas
+    # kernel, not the reference path the plan would never run.
+    t_step_ranks: Dict[int, float] = {}
+    step_backends: Dict[int, str] = {}
+    for r in candidate_ranks(n_total, grid.nx, n_devices):
+        backend = default_backend(r, grid.nx)
+        mesh_r = mesh_for_plan((1, r)) if r > 1 else None
+        fn = lambda s, b=backend, m=mesh_r: solver.step(
+            grid, ga, s, jnp.float32(0.0), backend=b, mesh=m)
+        t_step_ranks[r] = _time(lambda f=fn: f(st), iters=iters)
+        step_backends[r] = backend
+
+    # -- policy inference + PPO update --------------------------------------
+    obs_dim = layout_size("ring149")
+    pcfg = networks.PolicyConfig(obs_dim=obs_dim)
+    params = networks.init_actor_critic(pcfg, key)
+    obs = jnp.zeros((obs_dim,))
+    t_policy = _time(jax.jit(lambda p, o, k: networks.sample_action(p, o, k)),
+                     params, obs, key, iters=iters)
+
+    n_rows = n_envs_probe * horizon
+    batch = Batch(obs=jnp.zeros((n_rows, obs_dim)),
+                  act=jnp.zeros((n_rows, 1)),
+                  logp_old=jnp.zeros((n_rows,)),
+                  adv=jnp.ones((n_rows,)),
+                  ret=jnp.zeros((n_rows,)))
+    optimizer = make_optimizer(ppo_cfg)
+    opt_state = optimizer.init(params)
+    upd = jax.jit(lambda p, o, b, k: ppo_update(ppo_cfg, optimizer, p, o, b,
+                                                k, jnp.int32(0)))
+    t_update = _time(upd, params, opt_state, batch, key, iters=iters)
+
+    # -- trajectory spill (the paper's file-interface axis) ------------------
+    import tempfile
+    own_dir = sink_dir is None
+    root = sink_dir or tempfile.mkdtemp(prefix="autotune_io_")
+    sink = FileSink(root, codec="binary")
+    traj = Trajectory(obs=np.zeros((n_envs_probe, horizon, obs_dim),
+                                   np.float32),
+                      act=np.zeros((n_envs_probe, horizon, 1), np.float32),
+                      logp=np.zeros((n_envs_probe, horizon), np.float32),
+                      reward=np.zeros((n_envs_probe, horizon), np.float32),
+                      cd=np.zeros((n_envs_probe, horizon), np.float32),
+                      cl=np.zeros((n_envs_probe, horizon), np.float32),
+                      last_obs=np.zeros((n_envs_probe, obs_dim), np.float32))
+    t0 = time.perf_counter()
+    nbytes = sink.write(0, traj)
+    t_io = max(time.perf_counter() - t0, 1e-9)
+    if own_dir:
+        sink.cleanup()
+
+    return {
+        "n_total": n_total,
+        "n_devices": n_devices,
+        "grid": {"res": grid.res, "nx": grid.nx, "ny": grid.ny},
+        "horizon": horizon,
+        "n_envs_probe": n_envs_probe,
+        "t_step_ranks": t_step_ranks,
+        "t_step_backends": step_backends,
+        "t_policy": t_policy,
+        "t_update": t_update,
+        "io": {"bytes_per_episode_env": nbytes / n_envs_probe,
+               "bytes_per_actuation": nbytes / (n_envs_probe * horizon),
+               "stream_bandwidth": nbytes / t_io,
+               "write_seconds": t_io},
+    }
+
+
+# ---------------------------------------------------------------------------
+# refit
+# ---------------------------------------------------------------------------
+
+def refit_cost_model(measured: Dict[str, Any],
+                     base: Optional[CostModel] = None) -> CostModel:
+    """CostModel with constants refit to host measurements.
+
+    The CFD scaling constants (t_step_1, serial_frac, comm_frac_log2) come
+    from a least-squares fit of the Amdahl + halo-cost shape to the measured
+    per-rank step times — the same machinery ``calibrate_to_paper`` uses on
+    the paper's tables (``scaling_model.least_squares_fit``).  Directly
+    measured components (t_policy, t_update, I/O volume and stream
+    bandwidth) replace their constants outright; the aggregate disk
+    bandwidth and the per-episode management overhead — unmeasurable from
+    one probe — keep the paper-calibrated *ratios*, scaled by the measured
+    stream bandwidth and update time respectively.
+    """
+    from repro.core.scaling_model import least_squares_fit
+
+    base = base or CostModel()
+    steps = {int(k): float(v) for k, v in measured["t_step_ranks"].items()}
+    t1 = steps.get(1, base.t_step_1)
+
+    if len(steps) >= 3:
+        def resid(x):
+            t1_, s, c = np.abs(x)
+            s = min(s, 0.9)
+            m = dataclasses.replace(base, t_step_1=t1_, serial_frac=s,
+                                    comm_frac_log2=c)
+            return [m.t_step(r) / t - 1.0 for r, t in steps.items()]
+        x0 = [t1, base.serial_frac, base.comm_frac_log2]
+        t1_f, s_f, c_f = least_squares_fit(resid, x0)
+        fit = dict(t_step_1=float(t1_f),
+                   serial_frac=float(min(s_f, 0.9)),
+                   comm_frac_log2=float(c_f))
+    elif len(steps) == 2:
+        # two points: pin serial_frac, solve the comm coefficient exactly
+        r2 = max(r for r in steps if r > 1)
+        m1 = dataclasses.replace(base, t_step_1=t1)
+        comm = max(0.0, (steps[r2] - m1.t_step(r2)) / (t1 * np.log2(r2))
+                   + base.comm_frac_log2)
+        fit = dict(t_step_1=t1, serial_frac=base.serial_frac,
+                   comm_frac_log2=float(comm))
+    else:
+        fit = dict(t_step_1=t1)
+
+    io = measured["io"]
+    bw_scale = io["stream_bandwidth"] / base.io_stream_bandwidth
+    mgmt_scale = measured["t_update"] / base.t_update
+    return dataclasses.replace(
+        base,
+        t_policy=measured["t_policy"],
+        t_update=measured["t_update"],
+        io_bytes_per_actuation=io["bytes_per_actuation"],
+        io_stream_bandwidth=io["stream_bandwidth"],
+        io_bandwidth=base.io_bandwidth * bw_scale,
+        mgmt_log_s=base.mgmt_log_s * mgmt_scale,
+        **fit)
+
+
+# ---------------------------------------------------------------------------
+# the autotuner
+# ---------------------------------------------------------------------------
+
+def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
+             n_episodes: int = 3000, io_bytes: Optional[float] = None,
+             horizon: int = 32, iters: int = 3, seed: int = 0,
+             artifact: Optional[str] = None, base: Optional[CostModel] = None,
+             smoke: bool = False) -> ResolvedPlan:
+    """Measure -> refit -> optimize -> ResolvedPlan (+ JSON artifact).
+
+    ``n_total`` defaults to the host's device count (the executable budget).
+    ``artifact`` writes the measured-vs-predicted record; ``smoke`` shrinks
+    the probe (1 timing iteration, short horizon) for CI.
+    """
+    from repro.cfd.grid import GridConfig
+
+    grid = grid or GridConfig(res=6)
+    if smoke:
+        iters, horizon = 1, 8
+    measured = measure_components(grid, n_total=n_total, ppo_cfg=ppo_cfg,
+                                  horizon=horizon, iters=iters, seed=seed)
+    n_total = measured["n_total"]
+    model = refit_cost_model(measured, base=base)
+    # optimize over the EXECUTABLE lattice only: a rank count that was not
+    # measurable (does not divide nx, or exceeds the host's devices) cannot
+    # be run by the halo backend either, so picking it would crash at
+    # execution time no matter how good the model thinks it is.
+    feasible = set(candidate_ranks(n_total, grid.nx,
+                                   measured["n_devices"]))
+    plans = [p for p in enumerate_plans(n_total) if p.n_ranks in feasible]
+    best = min(plans, key=lambda p: (model.t_training(p, n_episodes,
+                                                      io_bytes),
+                                     -p.utilization, p.n_ranks))
+    backend = default_backend(best.n_ranks, grid.nx)
+
+    steps = {int(k): float(v) for k, v in measured["t_step_ranks"].items()}
+    predicted = {r: model.t_step(r) for r in steps}
+    record = {
+        "schema": AUTOTUNE_SCHEMA,
+        "measured": measured,
+        "fitted": {f.name: getattr(model, f.name)
+                   for f in dataclasses.fields(model)},
+        "predicted": {
+            "t_step_ranks": predicted,
+            "rel_err_t_step": {r: predicted[r] / steps[r] - 1.0
+                               for r in steps},
+            "t_episode_s": model.t_episode(best, io_bytes),
+        },
+        "plan": {
+            "n_total": n_total,
+            "n_envs": best.n_envs,
+            "n_ranks": best.n_ranks,
+            "mesh_shape": list(best.mesh_shape),
+            "utilization": best.utilization,
+            "backend": backend,
+        },
+        "candidates": [
+            {"n_envs": p.n_envs, "n_ranks": p.n_ranks,
+             "utilization": p.utilization,
+             "t_training_s": model.t_training(p, n_episodes, io_bytes)}
+            for p in plans
+        ],
+    }
+    if artifact:
+        path = Path(artifact)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(record, indent=1, default=float))
+    return ResolvedPlan(plan=best, backend=backend, model=model,
+                        source="auto", measurements=record)
+
+
+def validate_artifact(record: Dict[str, Any]) -> None:
+    """Raise ValueError unless ``record`` matches the v1 artifact schema
+    (used by the CI autotune smoke and the benchmark harness)."""
+    if record.get("schema") != AUTOTUNE_SCHEMA:
+        raise ValueError(f"bad schema tag: {record.get('schema')!r} != "
+                         f"{AUTOTUNE_SCHEMA!r}")
+    for key in ("measured", "fitted", "predicted", "plan", "candidates"):
+        if key not in record:
+            raise ValueError(f"artifact missing {key!r}")
+    for key in ("t_step_ranks", "t_policy", "t_update", "io"):
+        if key not in record["measured"]:
+            raise ValueError(f"artifact.measured missing {key!r}")
+    plan = record["plan"]
+    for key in ("n_total", "n_envs", "n_ranks", "mesh_shape", "utilization",
+                "backend"):
+        if key not in plan:
+            raise ValueError(f"artifact.plan missing {key!r}")
+    if plan["n_envs"] * plan["n_ranks"] > plan["n_total"]:
+        raise ValueError(f"over-subscribed plan in artifact: {plan}")
+    if not record["candidates"]:
+        raise ValueError("artifact has no candidate plans")

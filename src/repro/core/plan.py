@@ -26,12 +26,24 @@ class ParallelPlan:
     n_ranks: int
 
     def __post_init__(self):
-        assert self.n_envs * self.n_ranks <= self.n_total, self
+        if min(self.n_total, self.n_envs, self.n_ranks) < 1:
+            raise ValueError(f"ParallelPlan fields must all be >= 1: {self}")
+        if self.n_envs * self.n_ranks > self.n_total:
+            raise ValueError(
+                f"over-subscribed plan: n_envs * n_ranks = "
+                f"{self.n_envs * self.n_ranks} exceeds the worker budget "
+                f"n_total = {self.n_total}: {self}")
 
     @property
     def mesh_shape(self) -> Tuple[int, int]:
         """(data, model) axis sizes on a TPU mesh."""
         return (self.n_envs, self.n_ranks)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the worker budget actually busy (1.0 = no idle
+        workers; < 1 when n_ranks does not divide n_total)."""
+        return self.n_envs * self.n_ranks / self.n_total
 
 
 @dataclass(frozen=True)
@@ -132,16 +144,21 @@ class CostModel:
 
 
 def enumerate_plans(n_total: int) -> List[ParallelPlan]:
-    out = []
-    for n_ranks in range(1, n_total + 1):
-        n_envs = n_total // n_ranks
-        if n_envs >= 1:
-            out.append(ParallelPlan(n_total, n_envs, n_ranks))
+    """All (n_envs = n_total // n_ranks, n_ranks) splits of the budget,
+    ordered full-utilization first (then by n_ranks) so that downstream
+    stable min()/sort() calls resolve cost ties toward busy workers."""
+    out = [ParallelPlan(n_total, n_total // r, r)
+           for r in range(1, n_total + 1)]
+    out.sort(key=lambda p: (-p.utilization, p.n_ranks))
     return out
 
 
 def optimize_plan(n_total: int, model: CostModel, n_episodes: int = 3000,
                   io_bytes: Optional[float] = None) -> ParallelPlan:
-    """Brute-force the (n_envs, n_ranks) divisor lattice; minimize train time."""
+    """Brute-force the (n_envs, n_ranks) divisor lattice; minimize train
+    time, breaking exact cost ties toward full utilization (no idle
+    workers), then toward fewer ranks per env (the paper's default axis)."""
     plans = enumerate_plans(n_total)
-    return min(plans, key=lambda p: model.t_training(p, n_episodes, io_bytes))
+    return min(plans, key=lambda p: (model.t_training(p, n_episodes,
+                                                      io_bytes),
+                                     -p.utilization, p.n_ranks))

@@ -29,6 +29,18 @@ PAPER_TABLE2 = {1: (225.2, 193.1, 200.0), 2: (123.7, 104.7, 103.8),
                 60: (7.6, 4.8, 4.8)}
 
 
+def least_squares_fit(resid, x0):
+    """Shared fitting backend for ``calibrate_to_paper`` and
+    ``core.autotune.refit_cost_model``: Levenberg-Marquardt least squares on
+    an |x|-parameterization (all CostModel constants are non-negative).
+    Returns the fitted |x| vector."""
+    import numpy as np
+    from scipy.optimize import least_squares
+
+    sol = least_squares(resid, x0, method="lm")
+    return np.abs(sol.x)
+
+
 def calibrate_to_paper(model: Optional[CostModel] = None) -> CostModel:
     """Least-squares fit of the CostModel constants to the paper's Table II
     (33 data points: baseline / io-disabled / optimized x 11 env counts).
@@ -38,7 +50,6 @@ def calibrate_to_paper(model: Optional[CostModel] = None) -> CostModel:
       Table II io-disabled at 1 env isolates t_step_1.
     """
     import numpy as np
-    from scipy.optimize import least_squares
 
     m = model or CostModel()
     ep_noio = PAPER_TABLE2[1][1] * 3600 / 3000         # 231.7 s
@@ -64,8 +75,7 @@ def calibrate_to_paper(model: Optional[CostModel] = None) -> CostModel:
         return out
 
     x0 = [t1_seed, 20.0, 2.0e7, 2.0e8, 1.0]
-    sol = least_squares(resid, x0, method="lm")
-    fitted, _ = build(np.abs(sol.x))
+    fitted, _ = build(least_squares_fit(resid, x0))
     return fitted
 
 

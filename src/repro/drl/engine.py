@@ -170,21 +170,28 @@ def env_state_specs(mesh: Mesh) -> Tuple[P, P]:
     return P(dp), P(dp, None, "model")
 
 
-def is_grid_field(a) -> bool:
+def is_grid_field(a, n_ranks: int = 1) -> bool:
     """Heuristic for (N, ny, nx) grid arrays vs. small per-env tables.
 
     Scenario batches carry (N, P, 2) probe coordinates in the env state;
     only genuine grid fields (trailing dim = nx, always >> 4) should have
-    their x dim sharded over "model"."""
-    return a.ndim == 3 and a.shape[-1] > 4
+    their x dim sharded over "model" — and only when that dim divides into
+    the n_ranks x-slabs (staggered u fields are nx+1 wide and stay
+    batch-sharded; GSPMD re-shards around them)."""
+    return a.ndim == 3 and a.shape[-1] > 4 and a.shape[-1] % n_ranks == 0
 
 
 def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
-    """device_put a batched env-state pytree with engine shardings."""
+    """device_put a batched env-state pytree with engine shardings.
+
+    Placing the batch on the mesh BEFORE the first collect is load-bearing
+    for the halo backend on jax 0.4.x: a batch left replicated over a
+    "data" axis of size > 1 trips the same partitioner miscompile the
+    decomp module documents."""
     batch, batch_space = env_state_specs(mesh)
 
     def spec_of(a):
-        if n_ranks > 1 and is_grid_field(a):
+        if n_ranks > 1 and is_grid_field(a, n_ranks):
             return NamedSharding(mesh, batch_space)
         return NamedSharding(mesh, P(batch[0]))
 
@@ -203,6 +210,12 @@ class EngineConfig:
     lam: float = 0.95
     n_ranks: int = 1          # grid shards per env over the "model" axis
     donate: bool = True       # donate opt_state to the async-mode update
+    # hybrid placement: "auto" (measure + optimize via core.autotune), a
+    # core.plan.ParallelPlan / (n_envs, n_ranks) pair, a ResolvedPlan, or
+    # None (explicit mesh= / single-host).  When set and no mesh is passed,
+    # the engine builds its mesh from the resolved plan and adopts the
+    # plan's n_ranks.
+    plan: Any = None
 
 
 class RolloutEngine:
@@ -218,6 +231,17 @@ class RolloutEngine:
                  mesh: Optional[Mesh] = None,
                  sink: Optional[TrajectorySink] = None):
         self.env_step_fn = env_step_fn
+        self.resolved_plan = None
+        if cfg.plan is not None:
+            from repro.core.autotune import resolve_plan
+            # smoke probe: engine construction must not block on a
+            # full-resolution timing sweep (ignored for explicit plans)
+            self.resolved_plan = resolve_plan(cfg.plan, smoke=True)
+            if mesh is None:
+                mesh = self.resolved_plan.build_mesh()
+            if self.resolved_plan.n_ranks != cfg.n_ranks:
+                import dataclasses as _dc
+                cfg = _dc.replace(cfg, n_ranks=self.resolved_plan.n_ranks)
         self.cfg = cfg
         self.mesh = mesh
         self.sink = sink
@@ -251,7 +275,7 @@ class RolloutEngine:
                 batch_spec, batch_space = env_state_specs(mesh)
 
                 def constrain(a):
-                    if cfg.n_ranks > 1 and is_grid_field(a):
+                    if cfg.n_ranks > 1 and is_grid_field(a, cfg.n_ranks):
                         return jax.lax.with_sharding_constraint(
                             a, NamedSharding(mesh, batch_space))
                     return jax.lax.with_sharding_constraint(
@@ -275,7 +299,15 @@ class RolloutEngine:
 
     def collect(self, params, st_b, obs_b, key, *, record: bool = True
                 ) -> Tuple[Batch, Trajectory]:
-        """One episode round of all N_envs environments."""
+        """One episode round of all N_envs environments.
+
+        With a mesh, the env batch is pre-placed on it (a no-op when the
+        caller already did) — leaving a batch replicated over a "data" axis
+        of size > 1 trips the jax 0.4.x partitioner miscompile documented
+        in ``shard_env_batch``, so the engine owns the guard rather than
+        trusting every caller."""
+        if self.mesh is not None:
+            st_b = shard_env_batch(self.mesh, st_b, self.cfg.n_ranks)
         batch, traj = self._collect(params, st_b, obs_b, key)
         if record and self.sink is not None:
             self.sink.write(self.episode, traj)

@@ -3,8 +3,11 @@
 This is the paper's training loop (Fig. 4): N_envs environments roll out one
 episode each in parallel, trajectories are batched, and PPO updates the shared
 policy.  Collection itself — the vmap/shard path, GAE and flattening — is the
-``RolloutEngine``'s single implementation (drl/engine.py); this module only
-owns the episode loop, logging and the optional CFD<->DRL file interface hook.
+``RolloutEngine``'s single implementation (drl/engine.py); this module owns
+the episode loop, logging, the optional CFD<->DRL file interface hook, and
+the hybrid-plan resolution: ``TrainConfig(plan="auto" | ParallelPlan)`` turns
+the paper's n_envs x n_ranks split into a mesh + Poisson backend and executes
+it (see ``repro.core.autotune``).
 """
 from __future__ import annotations
 
@@ -12,13 +15,16 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.cfd.env import CylinderEnv, EnvConfig
 from repro.drl import networks
 from repro.drl.engine import (EngineConfig, RolloutEngine, TrajectorySink,
-                              broadcast_env_state)
+                              broadcast_env_state, env_state_specs,
+                              shard_env_batch)
 from repro.drl.ppo import PPOConfig
 
 
@@ -32,26 +38,61 @@ class TrainConfig:
     # scenario names (repro.cfd.scenarios) assigned round-robin over the env
     # batch; None = the single case described by ``env`` (historical default)
     scenarios: Optional[Tuple[str, ...]] = None
+    # hybrid placement: None (single-host vmap, historical default),
+    # "auto" (measure this host and optimize via core.autotune), a
+    # core.plan.ParallelPlan / (n_envs, n_ranks) pair, or a ResolvedPlan.
+    # train() builds the mesh from the resolved plan, selects the matching
+    # Poisson backend, and logs the chosen split.
+    plan: Any = None
+    # extra kwargs for the plan="auto" measurement (core.autotune.autotune),
+    # e.g. {"smoke": False, "iters": 5} for a careful median-of-5 probe.
+    # Default: a quick single-iteration smoke probe.
+    plan_args: Optional[Dict[str, Any]] = None
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
           interface=None, sink: Optional[TrajectorySink] = None,
           ) -> Tuple[Dict[str, np.ndarray], Any]:
     """Returns (history dict of per-episode arrays, trained params)."""
-    env = CylinderEnv(cfg.env)
+    resolved = mesh = None
+    backend = None
+    n_envs = cfg.n_envs
+    if cfg.plan is not None:
+        from repro.core.autotune import resolve_plan
+        resolved = resolve_plan(cfg.plan, grid=cfg.env.grid,
+                                **{"smoke": True, **(cfg.plan_args or {})})
+        mesh = resolved.build_mesh()
+        backend = resolved.backend
+        if n_envs % resolved.n_envs:
+            # batch must tile the mesh "data" axis; round up, never down
+            n_envs += resolved.n_envs - n_envs % resolved.n_envs
+        if log_fn:
+            log_fn(resolved.describe())
+            if n_envs != cfg.n_envs:
+                log_fn(f"n_envs {cfg.n_envs} -> {n_envs} (rounded up to a "
+                       f"multiple of the mesh data axis {resolved.n_envs})")
+
+    env = CylinderEnv(cfg.env, backend=backend, mesh=mesh)
     if cfg.scenarios:
         # mixed-scenario batch: per-env physics, one vmapped program
-        st_b, obs_b = env.reset_batch(cfg.scenarios, cfg.n_envs)
+        st_b, obs_b = env.reset_batch(cfg.scenarios, n_envs)
     else:
         st0, obs0 = env.reset()       # warms up + calibrates CD0
-        st_b, obs_b = broadcast_env_state(st0, obs0, cfg.n_envs)
+        st_b, obs_b = broadcast_env_state(st0, obs0, n_envs)
     pcfg = networks.PolicyConfig(obs_dim=int(obs_b.shape[-1]))
 
     engine = RolloutEngine.for_env(
-        env, EngineConfig(n_envs=cfg.n_envs,
+        env, EngineConfig(n_envs=n_envs,
                           horizon=cfg.env.actions_per_episode,
-                          gamma=cfg.ppo.gamma, lam=cfg.ppo.lam),
-        sink=sink)
+                          gamma=cfg.ppo.gamma, lam=cfg.ppo.lam,
+                          n_ranks=resolved.n_ranks if resolved else 1),
+        mesh=mesh, sink=sink)
+    if mesh is not None:
+        # pre-place the batch on the mesh (see shard_env_batch's docstring —
+        # required for correctness of the halo backend on jax 0.4.x)
+        st_b = shard_env_batch(mesh, st_b, engine.cfg.n_ranks)
+        obs_b = jax.device_put(obs_b,
+                               NamedSharding(mesh, env_state_specs(mesh)[0]))
     params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo, cfg.seed)
 
     hist = {"reward": [], "cd": [], "cl": [], "wall": []}

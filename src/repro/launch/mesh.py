@@ -48,3 +48,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many devices exist (tests / examples)."""
     return _make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_for_plan(plan, devices=None):
+    """The executable form of a ``core.plan.ParallelPlan``: a ("data",
+    "model") mesh shaped (n_envs, n_ranks) over the first ``n_total``
+    devices.  Unlike ``jax.make_mesh`` this tolerates a plan smaller than
+    the host (the remaining devices simply idle — the plan's utilization
+    already accounts for them)."""
+    import numpy as np
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n_envs, n_ranks = plan.mesh_shape if hasattr(plan, "mesh_shape") \
+        else tuple(plan)
+    n = n_envs * n_ranks
+    if n > len(devices):
+        raise ValueError(
+            f"plan needs n_envs * n_ranks = {n} devices but this host has "
+            f"{len(devices)}; shrink the plan or force more host devices "
+            f"(XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+    arr = np.asarray(devices[:n], dtype=object).reshape(n_envs, n_ranks)
+    return jax.sharding.Mesh(arr, ("data", "model"))

@@ -1,0 +1,191 @@
+"""core.autotune: plan resolution, measured refit, artifact schema — plus
+the decomposition validation errors the halo backend relies on."""
+import json
+
+import pytest
+
+from repro.cfd.decomp import validate_decomposition
+from repro.cfd.grid import GridConfig
+from repro.core.autotune import (AUTOTUNE_SCHEMA, ResolvedPlan, autotune,
+                                 default_backend, refit_cost_model,
+                                 resolve_plan, validate_artifact)
+from repro.core.plan import CostModel, ParallelPlan, optimize_plan
+from repro.launch.mesh import make_abstract_mesh
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_explicit_parallel_plan():
+    rp = resolve_plan(ParallelPlan(4, 2, 2))
+    assert isinstance(rp, ResolvedPlan)
+    assert rp.source == "explicit"
+    assert rp.backend == "halo"               # n_ranks > 1 => decomposed
+    assert rp.mesh_shape == (2, 2)
+    assert rp.n_envs == 2 and rp.n_ranks == 2
+
+
+def test_resolve_single_rank_plan_has_undecomposed_backend():
+    rp = resolve_plan(ParallelPlan(4, 4, 1))
+    assert rp.backend in ("reference", "pallas")
+    assert rp.n_ranks == 1
+
+
+def test_resolve_tuple_convenience():
+    rp = resolve_plan((3, 2))
+    assert rp.plan == ParallelPlan(6, 3, 2)
+
+
+def test_resolve_passthrough_and_errors():
+    rp = resolve_plan(ParallelPlan(2, 2, 1))
+    assert resolve_plan(rp) is rp
+    with pytest.raises(ValueError, match="unknown plan spec"):
+        resolve_plan("fastest")
+    with pytest.raises(ValueError, match="cannot resolve plan"):
+        resolve_plan(3.14)
+
+
+def test_default_backend_ranks():
+    assert default_backend(2, 88) == "halo"
+    assert default_backend(1, 88) in ("reference", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# refit: synthetic measurements from a known model are recovered
+# ---------------------------------------------------------------------------
+
+def _synthetic_measured(truth: CostModel, ranks=(1, 2, 4)):
+    horizon, n_envs = 32, 4
+    vol = truth.io_bytes_per_actuation * n_envs * horizon
+    return {
+        "n_total": max(ranks),
+        "n_devices": max(ranks),
+        "t_step_ranks": {r: truth.t_step(r) for r in ranks},
+        "t_policy": truth.t_policy,
+        "t_update": truth.t_update,
+        "io": {"bytes_per_episode_env": vol / n_envs,
+               "bytes_per_actuation": truth.io_bytes_per_actuation,
+               "stream_bandwidth": truth.io_stream_bandwidth,
+               "write_seconds": vol / truth.io_stream_bandwidth},
+    }
+
+
+def test_refit_recovers_step_scaling():
+    truth = CostModel()
+    fit = refit_cost_model(_synthetic_measured(truth, ranks=(1, 2, 4, 8)))
+    for r in (1, 2, 4, 8, 16):
+        assert fit.t_step(r) == pytest.approx(truth.t_step(r), rel=0.05), r
+    assert fit.t_update == pytest.approx(truth.t_update)
+    assert fit.t_policy == pytest.approx(truth.t_policy)
+    assert fit.io_bytes_per_actuation == pytest.approx(
+        truth.io_bytes_per_actuation)
+
+
+def test_refit_two_point_fallback():
+    truth = CostModel()
+    fit = refit_cost_model(_synthetic_measured(truth, ranks=(1, 2)))
+    assert fit.t_step(1) == pytest.approx(truth.t_step(1), rel=1e-6)
+    assert fit.t_step(2) == pytest.approx(truth.t_step(2), rel=0.05)
+
+
+def test_refit_preserves_paper_optimum():
+    """Acceptance: optimize_plan on the refit model still lands on the
+    paper's 'n_ranks = 1 until I/O saturates' optimum."""
+    truth = CostModel()
+    fit = refit_cost_model(_synthetic_measured(truth))
+    best = optimize_plan(60, fit)
+    assert best.n_ranks == 1 and best.n_envs == 60
+
+
+def test_refit_single_rank_only():
+    truth = CostModel()
+    measured = _synthetic_measured(truth, ranks=(1,))
+    fit = refit_cost_model(measured)
+    assert fit.t_step_1 == pytest.approx(truth.t_step_1)
+    # unmeasurable scaling constants fall back to the base model's
+    assert fit.serial_frac == truth.serial_frac
+
+
+# ---------------------------------------------------------------------------
+# the measured autotune on this (1-device) host + artifact schema
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tuned(tmp_path_factory):
+    out = tmp_path_factory.mktemp("autotune") / "artifact.json"
+    rp = autotune(grid=GridConfig(res=4, dt=0.01, poisson_iters=20),
+                  smoke=True, seed=0, artifact=str(out))
+    return rp, json.loads(out.read_text())
+
+
+def test_autotune_resolves_executable_plan(tuned):
+    rp, rec = tuned
+    assert rp.source == "auto"
+    assert rp.plan.n_envs * rp.plan.n_ranks <= rec["plan"]["n_total"]
+    assert rp.plan.utilization == 1.0
+    mesh = rp.build_mesh()
+    assert dict(mesh.shape) == {"data": rp.n_envs, "model": rp.n_ranks}
+
+
+def test_autotune_artifact_schema(tuned):
+    _, rec = tuned
+    validate_artifact(rec)
+    assert rec["schema"] == AUTOTUNE_SCHEMA
+    assert "1" in rec["measured"]["t_step_ranks"] \
+        or 1 in rec["measured"]["t_step_ranks"]
+    assert all(v > 0 for v in rec["measured"]["t_step_ranks"].values())
+    # measured-vs-predicted present for every measured rank
+    assert set(rec["predicted"]["t_step_ranks"]) \
+        == set(rec["measured"]["t_step_ranks"])
+    # only EXECUTABLE candidates compete: every rank divides the grid and
+    # fits the host (an unmeasurable rank can't run either)
+    nx, n_dev = rec["measured"]["grid"]["nx"], rec["measured"]["n_devices"]
+    for c in rec["candidates"]:
+        assert nx % c["n_ranks"] == 0 and c["n_ranks"] <= n_dev, c
+
+
+def test_autotune_artifact_rejects_corruption(tuned):
+    _, rec = tuned
+    bad = dict(rec)
+    bad["schema"] = "repro.autotune/v0"
+    with pytest.raises(ValueError, match="bad schema"):
+        validate_artifact(bad)
+    bad = {k: v for k, v in rec.items() if k != "candidates"}
+    with pytest.raises(ValueError, match="candidates"):
+        validate_artifact(bad)
+    bad = json.loads(json.dumps(rec))
+    bad["plan"]["n_envs"] = 10 ** 6
+    with pytest.raises(ValueError, match="over-subscribed"):
+        validate_artifact(bad)
+
+
+def test_resolve_auto_goes_through_autotune(tmp_path):
+    rp = resolve_plan("auto", grid=GridConfig(res=4, dt=0.01,
+                                              poisson_iters=20), smoke=True)
+    assert rp.source == "auto"
+    assert rp.measurements is not None
+
+
+# ---------------------------------------------------------------------------
+# decomposition validation (ValueError, not assert: survives python -O)
+# ---------------------------------------------------------------------------
+
+def test_validate_decomposition_wrong_axis():
+    mesh = make_abstract_mesh((2, 2), ("data", "model"))
+    with pytest.raises(ValueError, match="no 'spatial' axis"):
+        validate_decomposition(mesh, 88, axis="spatial")
+
+
+def test_validate_decomposition_indivisible_width():
+    mesh = make_abstract_mesh((1, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="does not split"):
+        validate_decomposition(mesh, 89)
+    # the error carries the fix
+    with pytest.raises(ValueError, match="nx=88 or nx=92"):
+        validate_decomposition(mesh, 89)
+
+
+def test_validate_decomposition_ok():
+    mesh = make_abstract_mesh((1, 4), ("data", "model"))
+    assert validate_decomposition(mesh, 88) == 4

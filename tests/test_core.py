@@ -43,6 +43,37 @@ def test_more_io_never_faster(n_envs, io):
     assert m.t_episode(p, io_bytes=io) >= m.t_episode(p, io_bytes=0.0) - 1e-9
 
 
+def test_plan_utilization_and_validation():
+    assert ParallelPlan(6, 6, 1).utilization == 1.0
+    assert ParallelPlan(6, 1, 4).utilization == pytest.approx(4 / 6)
+    with pytest.raises(ValueError, match="over-subscribed"):
+        ParallelPlan(4, 4, 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        ParallelPlan(4, 0, 1)
+
+
+def test_enumerate_plans_orders_full_utilization_first():
+    plans = enumerate_plans(6)
+    utils = [p.utilization for p in plans]
+    assert utils == sorted(utils, reverse=True)
+    assert plans[0].utilization == 1.0
+    # the partial plans are still enumerated (n_ranks = 4 -> 1 env idle 2)
+    assert any(p.utilization < 1.0 for p in plans)
+
+
+def test_optimize_plan_prefers_full_utilization_on_ties():
+    """A degenerate zero-cost model makes every split cost 0.0: the
+    tie-break must pick a no-idle-workers plan (and the paper's default
+    n_ranks = 1 among those)."""
+    free = CostModel(t_step_1=0.0, t_update=0.0, t_policy=0.0,
+                     io_bytes_per_actuation=0.0, mgmt_log_s=0.0)
+    for n_total in (4, 6, 12, 30):
+        best = optimize_plan(n_total, free)
+        assert free.t_training(best, 300) == 0.0
+        assert best.utilization == 1.0, (n_total, best)
+        assert best.n_ranks == 1
+
+
 def test_paper_finding_nranks1_optimal():
     """The paper's central claim: at 60 workers the optimum is 60 x 1."""
     m = calibrate_to_paper()

@@ -1,0 +1,53 @@
+"""CI smoke for the measured autotuner: tiny shapes, fixed seed, forced
+4-device CPU host, hard assertions on the JSON artifact schema.
+
+    python tools/autotune_smoke.py [--out artifacts/autotune_smoke.json]
+
+Forces the device count BEFORE importing jax so the halo backend is
+exercised (candidate ranks 2 and 4) even on a single-core CI runner.
+"""
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="/tmp/autotune_smoke.json")
+    args = ap.parse_args()
+
+    import jax
+    from repro.cfd.grid import GridConfig
+    from repro.core.autotune import AUTOTUNE_SCHEMA, autotune, \
+        validate_artifact
+
+    n_dev = len(jax.devices())
+    assert n_dev == 4, f"expected 4 forced host devices, got {n_dev}"
+
+    grid = GridConfig(res=4, dt=0.01, poisson_iters=20)   # nx=88: 2|4 slabs
+    rp = autotune(grid=grid, smoke=True, seed=0, artifact=args.out)
+    rec = json.loads(Path(args.out).read_text())
+    validate_artifact(rec)
+
+    assert rec["schema"] == AUTOTUNE_SCHEMA
+    ranks = sorted(int(r) for r in rec["measured"]["t_step_ranks"])
+    assert ranks == [1, 2, 4], f"expected halo ranks 1/2/4 measured: {ranks}"
+    assert all(v > 0 for v in rec["measured"]["t_step_ranks"].values())
+    assert rec["plan"]["n_envs"] * rec["plan"]["n_ranks"] <= 4
+    assert rec["plan"]["utilization"] == 1.0, rec["plan"]
+    assert len(rec["candidates"]) >= 3
+    print(f"autotune smoke OK: {rp.describe()}")
+    print(f"artifact -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

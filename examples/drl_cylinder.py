@@ -46,6 +46,21 @@ def main() -> None:
                     help="trajectory sink: spill each episode's trajectories"
                          " via the engine's TrajectorySink (paper §IV I/O)")
     ap.add_argument("--spill-dir", default="artifacts/traj_spill")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory: save the full TrainState "
+                         "(params, optimizer, PRNG carry, env batch, "
+                         "history) every --ckpt-every episodes with async "
+                         "background writes; required for --resume")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain only the newest N checkpoints")
+    ap.add_argument("--resume", nargs="?", const="auto", default=None,
+                    help="resume training: bare --resume restarts from the "
+                         "latest valid checkpoint in --ckpt-dir (fresh run "
+                         "when none exists yet); or pass an explicit .ckpt "
+                         "path / checkpoint directory.  --episodes is the "
+                         "TOTAL target, so an interrupted run rerun with "
+                         "the same flags just continues")
     ap.add_argument("--out", default="artifacts/drl_cylinder.json")
     args = ap.parse_args()
 
@@ -77,6 +92,10 @@ def main() -> None:
                          if s.strip())
                    if args.scenarios else None),
         plan=plan,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        ckpt_keep=args.ckpt_keep,
+        resume=args.resume,
     )
     sink = make_sink(args.spill, args.spill_dir)
     hist, params = train(cfg, sink=sink)

@@ -1,14 +1,36 @@
 """Checkpointing: msgpack(+zstd) pytree save/restore, no orbax dependency.
 
 Layout: one file per checkpoint containing a manifest (tree structure, shapes,
-dtypes) followed by raw array buffers.  Restore validates the manifest against
-the target tree structure.  Large arrays stream in chunks to bound memory.
+dtypes, per-leaf crc32) followed by raw array buffers.  Restore validates the
+manifest against the target tree structure AND dtypes, streams large arrays in
+bounded chunks, and can place leaves directly onto shardings.  All load-time
+failures raise ``CheckpointError`` (a ``ValueError``) naming the offending
+leaf — never a garbage tree.
+
+Directory layout (``save_step`` / ``latest_checkpoint`` / ``AsyncCheckpointer``):
+
+    ckpt_dir/
+      step_00000010.ckpt     one file per retained step
+      step_00000020.ckpt
+      LATEST                 name of the newest complete checkpoint
+
+Writes are crash-atomic: data lands in ``<path>.tmp`` and is ``os.replace``d
+into place, and the ``LATEST`` pointer is updated the same way — a SIGKILL
+mid-save leaves at most a stray ``.tmp``, never a truncated ``.ckpt``.
+``latest_checkpoint`` still validates candidates (newest first) so an
+externally-corrupted file is skipped, not loaded.
+
+``AsyncCheckpointer`` snapshots device arrays to host (``jax.device_get``)
+and writes on a background thread, so a save overlaps the next episode's
+collection the same way the engine's double-buffered update does.
 """
 from __future__ import annotations
 
 import os
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +43,13 @@ except ImportError:  # pragma: no cover
     zstd = None
 
 MAGIC = b"REPRO_CKPT_V1"
+LATEST_NAME = "LATEST"
+_CHUNK = 1 << 20          # streaming-restore granularity (1 MiB)
+
+
+class CheckpointError(ValueError):
+    """A checkpoint could not be read/matched; the message names the file
+    and (when applicable) the offending leaf path."""
 
 
 def _flatten_with_paths(tree):
@@ -33,16 +62,48 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _byte_view(a: np.ndarray):
+    """Zero-copy byte buffer of a C-contiguous array (crc + file write).
+    Routed through a uint8 ndarray view: ml_dtypes leaves (bfloat16) do not
+    export the buffer protocol themselves, and memoryview.cast chokes on
+    shapes containing 0."""
+    return b"" if a.nbytes == 0 else a.reshape(-1).view(np.uint8).data
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string (ml_dtypes names like 'bfloat16'
+    resolve once jax/ml_dtypes registered them)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
          metadata: Optional[Dict] = None) -> int:
-    """Write a checkpoint; returns bytes written."""
+    """Write a checkpoint atomically; returns bytes written.
+
+    ``metadata`` must be msgpack-serializable (plain dict/list/str/num); it
+    rides in the manifest and comes back from ``restore``/``read_manifest``.
+    ``compress`` silently degrades to raw when zstandard is missing (the
+    manifest records which was used, so restore never guesses).
+    """
+    def _host(v):
+        a = np.asarray(v)
+        # NB: np.ascontiguousarray would silently promote 0-d to (1,)
+        return a if a.flags["C_CONTIGUOUS"] else np.ascontiguousarray(a)
+
     leaves = _flatten_with_paths(tree)
+    arrays = {k: _host(v) for k, v in leaves.items()}
+    # crc over the array's own buffer — no tobytes copy of large leaves
     manifest = {
         "step": step,
         "metadata": metadata or {},
-        "arrays": {k: {"shape": list(np.shape(v)),
-                       "dtype": str(np.asarray(v).dtype)}
-                   for k, v in leaves.items()},
+        "arrays": {k: {"shape": list(a.shape),
+                       "dtype": str(a.dtype),
+                       "crc32": zlib.crc32(_byte_view(a))}
+                   for k, a in arrays.items()},
         "compressed": bool(compress and zstd),
     }
     tmp = Path(str(path) + ".tmp")
@@ -55,8 +116,8 @@ def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
         f.write(len(mb).to_bytes(8, "little"))
         f.write(mb)
         n = len(MAGIC) + 8 + len(mb)
-        for k in sorted(leaves):
-            buf = np.ascontiguousarray(np.asarray(leaves[k])).tobytes()
+        for k in sorted(arrays):
+            buf = _byte_view(arrays[k])     # zero-copy
             if cctx:
                 buf = cctx.compress(buf)
             f.write(len(buf).to_bytes(8, "little"))
@@ -66,47 +127,318 @@ def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
     return n
 
 
-def restore(path: str, target: Any = None) -> Any:
-    """Load a checkpoint.  With ``target``, validates structure and returns a
-    tree of the same structure; without, returns {path: array} dict."""
+def _read_exact(f, n: int, path, what: str) -> bytes:
+    buf = f.read(n)
+    if len(buf) != n:
+        raise CheckpointError(
+            f"truncated checkpoint {path}: wanted {n} bytes for {what}, "
+            f"file ended after {len(buf)}")
+    return buf
+
+
+def _read_header(f, path):
+    if f.read(len(MAGIC)) != MAGIC:
+        raise CheckpointError(f"not a repro checkpoint: {path}")
+    mlen = int.from_bytes(_read_exact(f, 8, path, "manifest length"),
+                          "little")
+    try:
+        manifest = msgpack.unpackb(_read_exact(f, mlen, path, "manifest"))
+    except Exception as e:
+        raise CheckpointError(
+            f"corrupted checkpoint {path}: manifest unreadable ({e})") from e
+    if not isinstance(manifest, dict) or "arrays" not in manifest:
+        raise CheckpointError(
+            f"corrupted checkpoint {path}: manifest has no array table")
+    return manifest
+
+
+def _read_leaf(f, path, key: str, spec: Dict, compressed: bool, dctx
+               ) -> np.ndarray:
+    """Read one array segment, streaming uncompressed data in chunks
+    directly into the destination buffer (bounded memory for large leaves)."""
+    blen = int.from_bytes(_read_exact(f, 8, path, f"length of {key!r}"),
+                          "little")
+    shape = tuple(spec["shape"])
+    dtype = _np_dtype(spec["dtype"])
+    nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    arr = np.empty(shape, dtype)
+    dst = memoryview(arr.reshape(-1).view(np.uint8))
+    if compressed:
+        if dctx is None:
+            raise CheckpointError(
+                f"checkpoint {path} is zstd-compressed but zstandard is "
+                f"not installed")
+        raw = _read_exact(f, blen, path, f"data of {key!r}")
+        try:
+            buf = dctx.decompress(raw, max_output_size=max(nbytes, 1))
+        except Exception as e:
+            raise CheckpointError(
+                f"corrupted checkpoint {path}: leaf {key!r} fails to "
+                f"decompress ({e})") from e
+        if len(buf) != nbytes:
+            raise CheckpointError(
+                f"corrupted checkpoint {path}: leaf {key!r} decompressed "
+                f"to {len(buf)} bytes, manifest says {nbytes}")
+        dst[:] = buf
+    else:
+        if blen != nbytes:
+            raise CheckpointError(
+                f"corrupted checkpoint {path}: leaf {key!r} holds {blen} "
+                f"bytes, manifest shape/dtype need {nbytes}")
+        off = 0
+        while off < nbytes:
+            got = f.readinto(dst[off:off + _CHUNK])
+            if not got:
+                raise CheckpointError(
+                    f"truncated checkpoint {path}: leaf {key!r} ended "
+                    f"after {off}/{nbytes} bytes")
+            off += got
+    crc = spec.get("crc32")
+    if crc is not None and zlib.crc32(dst) != crc:   # buffer view, no copy
+        raise CheckpointError(
+            f"corrupted checkpoint {path}: leaf {key!r} fails its crc32 "
+            f"integrity check")
+    return arr
+
+
+def read_manifest(path: str) -> Dict:
+    """Header-only read: the manifest dict (step, metadata, array table)."""
+    with open(path, "rb") as f:
+        return _read_header(f, path)
+
+
+def validate(path: str, *, deep: bool = False) -> Dict:
+    """Raise ``CheckpointError`` unless ``path`` is a complete checkpoint.
+
+    Shallow (default): header parses and every array segment is fully
+    present (length bookkeeping vs. file size).  ``deep=True`` additionally
+    reads every leaf and verifies its crc32.  Returns the manifest."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        manifest = _read_header(f, path)
+        compressed = bool(manifest.get("compressed"))
+        dctx = zstd.ZstdDecompressor() if (compressed and zstd) else None
+        for k in sorted(manifest["arrays"]):
+            if deep:
+                _read_leaf(f, path, k, manifest["arrays"][k], compressed,
+                           dctx)
+                continue
+            blen = int.from_bytes(
+                _read_exact(f, 8, path, f"length of {k!r}"), "little")
+            end = f.seek(blen, os.SEEK_CUR)
+            if end > size:
+                raise CheckpointError(
+                    f"truncated checkpoint {path}: leaf {k!r} extends past "
+                    f"end of file")
+    return manifest
+
+
+def restore(path: str, target: Any = None, *, cast: bool = False,
+            shardings: Any = None) -> Any:
+    """Load a checkpoint.
+
+    Without ``target``: returns ``(arrays, manifest)`` where ``arrays`` maps
+    flattened leaf paths to host ndarrays.
+
+    With ``target``: validates structure, per-leaf shape AND dtype against
+    the target tree and returns a tree of the same structure.  A dtype
+    mismatch raises ``CheckpointError`` naming the leaf unless ``cast=True``
+    (explicit opt-in to convert).  ``shardings`` (a pytree of
+    ``jax.sharding.Sharding`` / None matching ``target``) places each leaf
+    straight onto its sharding as it streams in, instead of a host->default
+    device hop."""
     dctx = zstd.ZstdDecompressor() if zstd else None
     with open(path, "rb") as f:
-        assert f.read(len(MAGIC)) == MAGIC, "not a repro checkpoint"
-        mlen = int.from_bytes(f.read(8), "little")
-        manifest = msgpack.unpackb(f.read(mlen))
+        manifest = _read_header(f, path)
+        compressed = bool(manifest.get("compressed"))
         arrays = {}
         for k in sorted(manifest["arrays"]):
-            spec = manifest["arrays"][k]
-            blen = int.from_bytes(f.read(8), "little")
-            buf = f.read(blen)
-            if manifest["compressed"] and dctx:
-                buf = dctx.decompress(buf)
-            arrays[k] = np.frombuffer(buf, dtype=spec["dtype"]).reshape(
-                spec["shape"])
+            arrays[k] = _read_leaf(f, path, k, manifest["arrays"][k],
+                                   compressed, dctx)
     if target is None:
         return arrays, manifest
     tgt_leaves = _flatten_with_paths(target)
     missing = set(tgt_leaves) - set(arrays)
     extra = set(arrays) - set(tgt_leaves)
     if missing or extra:
-        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
-                         f"extra={sorted(extra)[:5]}")
-    flat, tdef = jax.tree_util.tree_flatten(target)
+        raise CheckpointError(
+            f"checkpoint {path} does not match the target tree: "
+            f"missing={sorted(missing)[:5]} extra={sorted(extra)[:5]}")
+    _, tdef = jax.tree_util.tree_flatten(target)
     kp_flat = jax.tree_util.tree_flatten_with_path(target)[0]
+    if shardings is None:
+        shard_flat = [None] * len(kp_flat)
+    elif isinstance(shardings, jax.sharding.Sharding):
+        shard_flat = [shardings] * len(kp_flat)   # one sharding for all
+    else:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None)[0]
+    if len(shard_flat) != len(kp_flat):
+        raise ValueError(
+            f"shardings tree has {len(shard_flat)} leaves, target has "
+            f"{len(kp_flat)}")
     out = []
-    for (kp, leaf) in kp_flat:
+    for (kp, leaf), sh in zip(kp_flat, shard_flat):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in kp)
         arr = arrays[key]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
-        out.append(jnp.asarray(arr, dtype=np.asarray(leaf).dtype))
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise CheckpointError(
+                f"checkpoint {path}: leaf {key!r} has shape "
+                f"{tuple(arr.shape)}, target wants {tuple(want.shape)}")
+        if arr.dtype != want.dtype:
+            if not cast:
+                raise CheckpointError(
+                    f"checkpoint {path}: leaf {key!r} has dtype "
+                    f"{arr.dtype}, target wants {want.dtype} "
+                    f"(pass cast=True to convert)")
+            arr = arr.astype(want.dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            dev = jnp.asarray(arr)
+            # with jax_enable_x64 off, jnp.asarray would demote 64-bit
+            # leaves; keep the host array rather than lose bits silently
+            out.append(dev if dev.dtype == arr.dtype else arr)
     return tdef.unflatten(out)
 
 
-def latest_step(ckpt_dir: str) -> Optional[str]:
+# ---------------------------------------------------------------------------
+# directory layout: step files + LATEST pointer + retention
+# ---------------------------------------------------------------------------
+
+def step_path(ckpt_dir: str, step: int) -> Path:
+    return Path(ckpt_dir) / f"step_{step:08d}.ckpt"
+
+
+def _point_latest(ckpt_dir: Path, name: str) -> None:
+    tmp = ckpt_dir / (LATEST_NAME + ".tmp")
+    tmp.write_text(name + "\n")
+    os.replace(tmp, ckpt_dir / LATEST_NAME)
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any, *,
+              keep: Optional[int] = None, compress: bool = True,
+              metadata: Optional[Dict] = None) -> str:
+    """Write ``step_<step>.ckpt`` under ``ckpt_dir``, repoint ``LATEST``,
+    and (with ``keep``) delete all but the newest ``keep`` step files.
+    Returns the checkpoint path."""
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    path = step_path(ckpt_dir, step)
+    save(str(path), tree, step=step, compress=compress, metadata=metadata)
+    _point_latest(d, path.name)
+    if keep is not None and keep > 0:
+        for old in sorted(d.glob("step_*.ckpt"))[:-keep]:
+            if old != path:
+                old.unlink(missing_ok=True)
+    return str(path)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Path of the newest checkpoint that validates, or None.
+
+    Step files are tried newest-first (their zero-padded names sort
+    chronologically), so a crash in ``save_step``'s window between writing
+    the step file and repointing ``LATEST`` still resumes from the newest
+    complete checkpoint.  The pointer is only a fallback hint for files the
+    ``step_*`` glob cannot see.  Candidates get a deep (crc-verifying)
+    validation — a resume happens once per restart, and falling back past a
+    bit-flipped file beats aborting on it."""
     d = Path(ckpt_dir)
     if not d.exists():
         return None
-    cands = sorted(d.glob("step_*.ckpt"))
-    return str(cands[-1]) if cands else None
+    cands = sorted(d.glob("step_*.ckpt"), reverse=True)
+    ptr = d / LATEST_NAME
+    if ptr.exists():
+        try:
+            p = d / ptr.read_text().strip()
+            if p.exists() and p not in cands:
+                cands.append(p)
+        except OSError:  # pragma: no cover - unreadable pointer
+            pass
+    for c in cands:
+        try:
+            validate(str(c), deep=True)
+            return str(c)
+        except (CheckpointError, OSError):
+            continue
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[str]:
+    """Back-compat alias: newest *valid* checkpoint path (or None)."""
+    return latest_checkpoint(ckpt_dir)
+
+
+# ---------------------------------------------------------------------------
+# async saves: host snapshot now, disk write in the background
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Periodic checkpoint writer whose disk I/O hides behind compute.
+
+    ``save(step, tree)`` blocks only for (a) the previous write to finish
+    (at most one in flight, bounding host memory to one snapshot) and
+    (b) ``jax.device_get`` — the device->host snapshot, which must complete
+    before training mutates the arrays.  Serialization + disk write then run
+    on a single worker thread while the caller dispatches the next episode's
+    collection, mirroring the engine's double-buffered update overlap.
+
+    A failed background write surfaces as an exception from the NEXT
+    ``save``/``wait``/``close`` call — never silently dropped.
+    """
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3,
+                 compress: bool = True, background: bool = True):
+        self.dir = Path(ckpt_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.compress = compress
+        self._pool = (ThreadPoolExecutor(max_workers=1,
+                                         thread_name_prefix="ckpt")
+                      if background else None)
+        self._inflight: Optional[Future] = None
+        self.saves = 0
+        self.bytes_written = 0
+        self.time_blocked = 0.0      # caller-visible stall (snapshot + waits)
+
+    def save(self, step: int, tree: Any,
+             metadata: Optional[Dict] = None) -> None:
+        import time
+        t0 = time.perf_counter()
+        self.wait()                        # <=1 write in flight; raise errors
+        host = jax.device_get(tree)        # snapshot before training mutates
+        if self._pool is not None:
+            self._inflight = self._pool.submit(self._write, step, host,
+                                               metadata)
+        else:
+            self._write(step, host, metadata)
+        self.time_blocked += time.perf_counter() - t0
+        self.saves += 1
+
+    def _write(self, step: int, host_tree: Any,
+               metadata: Optional[Dict]) -> None:
+        path = save_step(str(self.dir), step, host_tree, keep=self.keep,
+                         compress=self.compress, metadata=metadata)
+        self.bytes_written += os.path.getsize(path)
+
+    def wait(self) -> None:
+        """Block until the in-flight write lands; re-raises its error."""
+        if self._inflight is not None:
+            fut, self._inflight = self._inflight, None
+            fut.result()
+
+    def close(self) -> None:
+        try:
+            self.wait()
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -21,10 +21,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.cfd.env import CylinderEnv
 from repro.cfd.solver import FlowState
 from repro.drl.engine import (EngineConfig, RolloutEngine, env_state_specs,
-                              shard_env_batch)
+                              place_env_batch, shard_env_batch)
 
-__all__ = ["env_state_specs", "shard_env_batch", "make_distributed_collect",
-           "make_sharded_cfd_step"]
+__all__ = ["env_state_specs", "shard_env_batch", "place_env_batch",
+           "make_distributed_collect", "make_sharded_cfd_step",
+           "restore_env_batch"]
+
+
+def restore_env_batch(mesh, host_state, n_ranks: int = 1):
+    """Place a checkpoint-restored (host-array) env batch onto ``mesh``.
+
+    The cross-plan resume primitive: a ``TrainState`` saved under one
+    ``ParallelPlan`` holds plain host ndarrays, and this re-shards them for
+    whatever mesh/backend the resuming run resolved — the same
+    ``shard_env_batch`` rules the engine applies to a fresh batch (grid
+    fields x-sharded over "model" when ``n_ranks > 1``, everything else
+    batch-sharded over "data")."""
+    return place_env_batch(mesh, host_state, n_ranks)
 
 
 def make_distributed_collect(env: CylinderEnv, mesh: Mesh, n_envs: int,

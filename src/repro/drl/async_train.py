@@ -18,27 +18,92 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt_mod
 from repro.core.plan import CostModel, ParallelPlan
 from repro.drl import networks
+from repro.drl import train_state as ts_mod
 from repro.drl.engine import EngineConfig, RolloutEngine
-from repro.drl.ppo import PPOConfig
+from repro.drl.ppo import PPOConfig, make_optimizer
 
 
 def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
                 st0_b, obs0_b, *, n_envs: int, horizon: int, episodes: int,
-                seed: int = 0, sink=None):
+                seed: int = 0, sink=None, ckpt_dir: Optional[str] = None,
+                ckpt_every: int = 10, ckpt_keep: int = 3, resume=None):
     """Stale-gradient PPO: updates always consume the PREVIOUS episode's
-    trajectories (collected under the then-current policy)."""
+    trajectories (collected under the then-current policy).
+
+    Fault tolerance mirrors ``train()``: ``ckpt_dir`` enables periodic
+    ``AsyncCheckpointer`` saves of the TrainState every ``ckpt_every``
+    episodes (without breaking the collect/update overlap — the one
+    in-flight update is not part of the snapshot, see
+    ``RolloutEngine.run_async``), and ``resume`` restarts from a checkpoint
+    path / directory / "auto".  ``episodes`` is the TOTAL target."""
     engine = RolloutEngine(
         env_step_fn,
         EngineConfig(n_envs=n_envs, horizon=horizon,
                      gamma=ppo_cfg.gamma, lam=ppo_cfg.lam),
         sink=sink)
-    params, optimizer, opt_state, key = engine.init(pcfg, ppo_cfg, seed)
-    params, _, returns = engine.run_async(params, opt_state, ppo_cfg,
-                                          optimizer, st0_b, obs0_b, key,
-                                          episodes)
-    return params, returns
+    src = ts_mod.resolve_resume(resume, ckpt_dir)
+    step = None
+    rewards: list = []
+    if src is None:
+        params, optimizer, opt_state, key = engine.init(pcfg, ppo_cfg, seed)
+    else:
+        optimizer = make_optimizer(ppo_cfg)
+        ts, meta = ts_mod.load_train_state(src)
+        mismatch = [f"{k}: checkpoint={meta[k]!r} current={v!r}"
+                    for k, v in (("n_envs", n_envs), ("horizon", horizon))
+                    if meta.get(k) is not None and meta[k] != v]
+        if mismatch:
+            raise ckpt_mod.CheckpointError(
+                "checkpoint is incompatible with this train_async call:\n  "
+                + "\n  ".join(mismatch))
+        params = jax.tree.map(jnp.asarray, ts.params)
+        opt_state = jax.tree.map(jnp.asarray, ts.opt_state)
+        key, step = jnp.asarray(ts.key), ts.step
+        if ts.env_state is not None:
+            st0_b = jax.tree.map(jnp.asarray, ts.env_state)
+        if ts.obs is not None:
+            obs0_b = jnp.asarray(ts.obs)
+        rewards = [float(x) for x in np.asarray(
+            ts.history.get("reward", ()))]
+        engine.episode = int(ts.episode)
+
+    remaining = episodes - engine.episode
+    if remaining <= 0:
+        return params, np.asarray(rewards)
+
+    ckpter = (ckpt_mod.AsyncCheckpointer(ckpt_dir, keep=ckpt_keep)
+              if ckpt_dir else None)
+
+    def on_episode(traj, _):
+        rewards.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
+
+    def on_state(carry):
+        done = engine.episode         # episodes collected so far
+        snap = ts_mod.TrainState(
+            params=carry.params, opt_state=carry.opt_state, key=carry.key,
+            step=carry.step, episode=jnp.int32(done), env_state=st0_b,
+            obs=obs0_b, history={"reward": np.asarray(rewards)})
+        ckpter.save(done, ts_mod.to_tree(snap),
+                    metadata=ts_mod.state_metadata(
+                        snap, {"n_envs": n_envs, "horizon": horizon}))
+
+    try:
+        params, _, _ = engine.run_async(
+            params, opt_state, ppo_cfg, optimizer, st0_b, obs0_b, key,
+            remaining, step=step, on_episode=on_episode,
+            on_state=on_state if ckpter is not None else None,
+            state_every=ckpt_every)
+    finally:
+        if ckpter is not None:
+            ckpter.close()
+    return params, np.asarray(rewards)
 
 
 def async_speedup(model: CostModel, plan: ParallelPlan,

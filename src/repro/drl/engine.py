@@ -29,7 +29,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +115,9 @@ class FileSink(TrajectorySink):
 
     def __init__(self, root: str, codec: str = "binary"):
         super().__init__()
-        assert codec in ("binary", "zstd"), codec
+        if codec not in ("binary", "zstd"):
+            raise ValueError(f"unknown trajectory-sink codec {codec!r}; "
+                             f"choose 'binary' or 'zstd'")
         if codec == "zstd" and zstd is None:
             codec = "binary"
         self.codec = codec
@@ -151,7 +153,11 @@ def make_sink(mode: str, root: Optional[str] = None) -> Optional[TrajectorySink]
         return None
     if mode == "memory":
         return MemorySink()
-    assert root is not None, "file sinks need a root directory"
+    if mode not in ("binary", "zstd"):
+        raise ValueError(f"unknown sink mode {mode!r}; choose 'none', "
+                         f"'memory', 'binary' or 'zstd'")
+    if root is None:
+        raise ValueError(f"file sink {mode!r} needs a root directory")
     return FileSink(root, codec=mode)
 
 
@@ -198,9 +204,31 @@ def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
     return jax.tree.map(lambda a: jax.device_put(a, spec_of(a)), st_b)
 
 
+def place_env_batch(mesh: Optional[Mesh], st_b, n_ranks: int = 1):
+    """Place a (possibly host/checkpoint-restored) env batch for the engine.
+
+    With a mesh this is ``shard_env_batch`` — the cross-plan resume path:
+    a TrainState checkpointed under one ParallelPlan round-trips through
+    host arrays and is re-sharded here onto whatever mesh the *current*
+    plan resolved to.  Without a mesh it is a plain device transfer."""
+    if mesh is not None:
+        return shard_env_batch(mesh, st_b, n_ranks)
+    return jax.tree.map(jnp.asarray, st_b)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+
+class TrainCarry(NamedTuple):
+    """The loop-carried tuple the training loops expose to ``on_state``
+    after each episode: exactly what a checkpoint must persist for a
+    bitwise resume (the env batch and history live with the caller)."""
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray     # PPO minibatch counter (Adam bias correction)
+    key: jnp.ndarray      # PRNG carry BEFORE the next episode's splits
+
 
 @dataclass(frozen=True)
 class EngineConfig:
@@ -337,12 +365,19 @@ class RolloutEngine:
     # -- training loops ------------------------------------------------------
 
     def run_sync(self, params, opt_state, ppo_cfg: PPOConfig, optimizer,
-                 st_b, obs_b, key, episodes: int, *,
+                 st_b, obs_b, key, episodes: int, *, step=None,
                  on_batch: Optional[Callable] = None,
-                 on_episode: Optional[Callable] = None):
-        """Sequential [collect] -> [update] (the paper's Fig. 4 loop)."""
+                 on_episode: Optional[Callable] = None,
+                 on_state: Optional[Callable] = None):
+        """Sequential [collect] -> [update] (the paper's Fig. 4 loop).
+
+        ``step`` seeds the PPO minibatch counter (resume passes the stored
+        one so Adam bias correction continues, fresh runs leave it None);
+        ``on_state(TrainCarry)`` fires after every fully-applied episode —
+        checkpointing that carry and re-entering with it reproduces the
+        remaining episodes bit for bit."""
         update = self.make_update(ppo_cfg, optimizer)
-        step = jnp.int32(0)
+        step = jnp.int32(0) if step is None else jnp.asarray(step, jnp.int32)
         returns = []
         for _ in range(episodes):
             key, kr, ku = jax.random.split(key, 3)
@@ -354,24 +389,40 @@ class RolloutEngine:
             returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
             if on_episode is not None:
                 on_episode(traj, metrics)
+            if on_state is not None:
+                on_state(TrainCarry(params, opt_state, step, key))
         return params, opt_state, np.asarray(returns)
 
     def run_async(self, params, opt_state, ppo_cfg: PPOConfig, optimizer,
-                  st_b, obs_b, key, episodes: int, *, drain: bool = True,
-                  on_episode: Optional[Callable] = None):
+                  st_b, obs_b, key, episodes: int, *, step=None,
+                  drain: bool = True,
+                  on_episode: Optional[Callable] = None,
+                  on_state: Optional[Callable] = None,
+                  state_every: int = 1):
         """Double-buffered stale-gradient PPO.
 
         Episode *e* is collected with the params as of episode *e-1* while
         the update consuming episode *e-1*'s trajectories is dispatched; JAX
         async dispatch lets both programs be in flight together (on 1 CPU
         device they serialize — the algorithmic semantics are what the tests
-        pin down; ``async_speedup`` models the systems half)."""
+        pin down; ``async_speedup`` models the systems half).
+
+        ``on_state(TrainCarry)`` fires every ``state_every`` episodes with
+        the carry as visible at that point — the one in-flight batch (the
+        episode just collected, whose update has not been dispatched yet)
+        is deliberately NOT part of it, so an async checkpoint never blocks
+        the overlap.  A resume from such a checkpoint therefore drops that
+        single in-flight update (its episode stays logged); PPO absorbs the
+        gap the same way it absorbs the one-step staleness.  One final
+        ``on_state`` fires after the drain — that carry has no in-flight
+        work, so checkpointing it loses nothing.  Only the sync loop offers
+        bitwise resume."""
         update = self.make_update(ppo_cfg, optimizer, donate=True)
-        step = jnp.int32(0)
+        step = jnp.int32(0) if step is None else jnp.asarray(step, jnp.int32)
         pending: Optional[Batch] = None   # awaits its (overlapped) update
         spill = None                      # (episode, traj) awaiting the sink
         returns = []
-        for _ in range(episodes):
+        for i in range(episodes):
             key, kr, ku = jax.random.split(key, 3)
             ep_id = self.episode
             # both dispatches below can execute concurrently: collect uses
@@ -391,12 +442,18 @@ class RolloutEngine:
             returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
             if on_episode is not None:
                 on_episode(traj, None)
+            if on_state is not None and (i + 1) % max(1, state_every) == 0:
+                on_state(TrainCarry(params, opt_state, step, key))
         if drain and pending is not None:
             key, ku = jax.random.split(key)
             params, opt_state, step, _ = update(params, opt_state, pending,
                                                 ku, step)
         if self.sink is not None and spill is not None:
             self.sink.write(*spill)
+        if on_state is not None and episodes > 0:
+            # final carry AFTER the drain: the one state with no in-flight
+            # update, so a checkpoint of it loses nothing
+            on_state(TrainCarry(params, opt_state, step, key))
         return params, opt_state, np.asarray(returns)
 
     # -- convenience ---------------------------------------------------------

@@ -4,10 +4,20 @@ This is the paper's training loop (Fig. 4): N_envs environments roll out one
 episode each in parallel, trajectories are batched, and PPO updates the shared
 policy.  Collection itself — the vmap/shard path, GAE and flattening — is the
 ``RolloutEngine``'s single implementation (drl/engine.py); this module owns
-the episode loop, logging, the optional CFD<->DRL file interface hook, and
-the hybrid-plan resolution: ``TrainConfig(plan="auto" | ParallelPlan)`` turns
-the paper's n_envs x n_ranks split into a mesh + Poisson backend and executes
-it (see ``repro.core.autotune``).
+the episode loop, logging, the optional CFD<->DRL file interface hook, the
+hybrid-plan resolution (``TrainConfig(plan="auto" | ParallelPlan)``, see
+``repro.core.autotune``), and **fault tolerance**: with ``ckpt_dir`` set,
+an ``AsyncCheckpointer`` persists the full ``TrainState`` (params, optimizer
+moments, PRNG carry, PPO step, env batch, history) every ``ckpt_every``
+episodes, with the disk write hidden behind the next episode's collection.
+``resume=`` restarts from the latest valid checkpoint — bitwise-identically
+under the same plan, and across plans by re-sharding the host-round-tripped
+env batch onto the new mesh.
+
+Fresh and resumed runs share one code path: both build a ``TrainState``
+first (fresh from ``engine.init``, resumed from the checkpoint) and the loop
+only ever reads that state — the PRNG key lives in the state, never
+re-derived from ``cfg.seed`` mid-run.
 """
 from __future__ import annotations
 
@@ -21,11 +31,14 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.ckpt import checkpoint as ckpt_mod
 from repro.drl import networks
+from repro.drl import train_state as ts_mod
 from repro.drl.engine import (EngineConfig, RolloutEngine, TrajectorySink,
                               broadcast_env_state, env_state_specs,
-                              shard_env_batch)
-from repro.drl.ppo import PPOConfig
+                              place_env_batch)
+from repro.drl.ppo import PPOConfig, make_optimizer
+from repro.drl.train_state import HISTORY_FIELDS, TrainState
 
 
 @dataclass
@@ -48,6 +61,20 @@ class TrainConfig:
     # e.g. {"smoke": False, "iters": 5} for a careful median-of-5 probe.
     # Default: a quick single-iteration smoke probe.
     plan_args: Optional[Dict[str, Any]] = None
+    # fault tolerance: with ckpt_dir set, the TrainState is saved every
+    # ckpt_every episodes (and at the final one) via an AsyncCheckpointer
+    # (keep newest ckpt_keep; background write unless ckpt_async=False).
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    ckpt_compress: bool = True
+    # resume: None (fresh run) | True / "latest" (latest valid checkpoint in
+    # ckpt_dir — error when none) | "auto" (same, but fresh when the dir has
+    # none yet: the preemptible-job idiom) | an explicit path (.ckpt file or
+    # a checkpoint directory).  ``episodes`` is the TOTAL target: resuming a
+    # 40-episode checkpoint with episodes=100 runs 60 more.
+    resume: Any = None
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
@@ -73,7 +100,17 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                        f"multiple of the mesh data axis {resolved.n_envs})")
 
     env = CylinderEnv(cfg.env, backend=backend, mesh=mesh)
-    if cfg.scenarios:
+
+    ts: Optional[TrainState] = None
+    src = ts_mod.resolve_resume(cfg.resume, cfg.ckpt_dir)
+    if src is not None:
+        ts, ckpt_meta = ts_mod.load_train_state(src)
+
+    if ts is not None:
+        # resume: the checkpointed env batch IS the developed flow — no
+        # warmup, no reset; arrays are host ndarrays until placed below.
+        st_b, obs_b = ts.env_state, ts.obs
+    elif cfg.scenarios:
         # mixed-scenario batch: per-env physics, one vmapped program
         st_b, obs_b = env.reset_batch(cfg.scenarios, n_envs)
     else:
@@ -87,15 +124,61 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                           gamma=cfg.ppo.gamma, lam=cfg.ppo.lam,
                           n_ranks=resolved.n_ranks if resolved else 1),
         mesh=mesh, sink=sink)
+
+    run_meta = ts_mod.run_metadata(
+        n_envs=n_envs, obs_dim=pcfg.obs_dim, seed=cfg.seed,
+        grid=cfg.env.grid, horizon=cfg.env.actions_per_episode,
+        steps_per_action=cfg.env.steps_per_action, scenarios=cfg.scenarios,
+        plan={"n_envs": resolved.n_envs, "n_ranks": resolved.n_ranks,
+              "backend": resolved.backend} if resolved else None)
+    if ts is not None:
+        for note in ts_mod.check_resume_compatible(ckpt_meta, run_meta):
+            if log_fn:
+                log_fn(note)
+        if log_fn:
+            log_fn(f"resume: {src} @ episode {int(ts.episode)}")
+
+    # pre-place the batch on the mesh (see shard_env_batch's docstring —
+    # required for correctness of the halo backend on jax 0.4.x).  For a
+    # resumed run this is the cross-plan re-sharding step.
+    st_b = place_env_batch(mesh, st_b, engine.cfg.n_ranks)
     if mesh is not None:
-        # pre-place the batch on the mesh (see shard_env_batch's docstring —
-        # required for correctness of the halo backend on jax 0.4.x)
-        st_b = shard_env_batch(mesh, st_b, engine.cfg.n_ranks)
         obs_b = jax.device_put(obs_b,
                                NamedSharding(mesh, env_state_specs(mesh)[0]))
-    params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo, cfg.seed)
+    else:
+        obs_b = jnp.asarray(obs_b)
 
-    hist = {"reward": [], "cd": [], "cl": [], "wall": []}
+    if ts is None:
+        params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo,
+                                                        cfg.seed)
+        ts = TrainState(params=params, opt_state=opt_state, key=key,
+                        step=jnp.int32(0), episode=jnp.int32(0),
+                        env_state=st_b, obs=obs_b,
+                        history={f: np.zeros((0,)) for f in HISTORY_FIELDS})
+    else:
+        optimizer = make_optimizer(cfg.ppo)
+        ts = ts._replace(
+            params=jax.tree.map(jnp.asarray, ts.params),
+            opt_state=jax.tree.map(jnp.asarray, ts.opt_state),
+            key=jnp.asarray(ts.key), env_state=st_b, obs=obs_b)
+
+    hist = {f: [float(x) for x in np.asarray(ts.history.get(f, ()))]
+            for f in HISTORY_FIELDS}
+    ep0 = int(ts.episode)
+    engine.episode = ep0              # sink episode ids continue, not restart
+    remaining = cfg.episodes - ep0
+    if remaining <= 0:
+        if log_fn:
+            log_fn(f"checkpoint already has {ep0} episodes >= target "
+                   f"{cfg.episodes}; nothing to train")
+        return {k: np.asarray(v) for k, v in hist.items()}, ts.params
+
+    ckpter = None
+    if cfg.ckpt_dir:
+        ckpter = ckpt_mod.AsyncCheckpointer(
+            cfg.ckpt_dir, keep=cfg.ckpt_keep, compress=cfg.ckpt_compress,
+            background=cfg.ckpt_async)
+
     t_ep = [time.time()]
 
     def on_batch(batch):
@@ -118,7 +201,34 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
             log_fn(f"ep {ep:4d}  return {r:+8.3f}  CD(tail) {cd:.3f}  "
                    f"|CL| {cl:.3f}  {hist['wall'][-1]:.1f}s")
 
-    params, _, _ = engine.run_sync(params, opt_state, cfg.ppo, optimizer,
-                                   st_b, obs_b, key, cfg.episodes,
-                                   on_batch=on_batch, on_episode=on_episode)
+    def on_state(carry):
+        if ckpter is None:
+            return
+        done = len(hist["reward"])    # episodes completed, incl. resumed
+        if done % max(1, cfg.ckpt_every) and done != cfg.episodes:
+            return
+        snap = TrainState(params=carry.params, opt_state=carry.opt_state,
+                          key=carry.key, step=carry.step,
+                          episode=jnp.int32(done), env_state=st_b,
+                          obs=obs_b,
+                          history={f: np.asarray(hist[f])
+                                   for f in HISTORY_FIELDS})
+        ckpter.save(done, ts_mod.to_tree(snap),
+                    metadata=ts_mod.state_metadata(snap, run_meta))
+
+    try:
+        params, _, _ = engine.run_sync(ts.params, ts.opt_state, cfg.ppo,
+                                       optimizer, ts.env_state, ts.obs,
+                                       ts.key, remaining, step=ts.step,
+                                       on_batch=on_batch,
+                                       on_episode=on_episode,
+                                       on_state=on_state)
+    finally:
+        if ckpter is not None:
+            ckpter.close()            # drain the in-flight write
+            if log_fn and ckpter.saves:
+                log_fn(f"checkpoints: {ckpter.saves} saves, "
+                       f"{ckpter.bytes_written / 1e6:.2f} MB -> "
+                       f"{cfg.ckpt_dir} ({ckpter.time_blocked:.2f}s "
+                       f"caller-visible)")
     return {k: np.asarray(v) for k, v in hist.items()}, params

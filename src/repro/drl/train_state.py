@@ -1,0 +1,265 @@
+"""Resumable training state: the one bundle ``train()``/``train_async()``
+checkpoint and restore.
+
+A ``TrainState`` carries everything a crash would otherwise lose: policy
+params, optimizer moments, the PRNG key *carry* (so the stream continues
+exactly where it stopped), the PPO minibatch step (Adam bias correction),
+the episode counter, the batched env state + observations (so resume skips
+the warmup entirely and restarts from the same bits), and the per-episode
+history arrays.
+
+Serialization goes through ``repro.ckpt.checkpoint`` as a *plain dict tree*
+(NamedTuples like ``EnvState``/``FlowState``/``ScenarioParams`` are converted
+to dicts and rebuilt on load), so a checkpoint can be restored without first
+constructing a matching target pytree — the manifest alone rebuilds the
+state.  That is what makes **cross-plan resume** possible: arrays come back
+as host ndarrays and the training loop re-places them onto whatever mesh the
+*current* plan resolves to (``engine.place_env_batch``), so a run
+checkpointed under one ``ParallelPlan`` restores onto a different
+mesh/backend.
+
+The manifest metadata records the run fingerprint (grid, scenarios, n_envs,
+horizon, plan); ``check_resume_compatible`` raises an actionable
+``CheckpointError`` on any mismatch that would silently change the physics,
+while plan changes are explicitly allowed (and reported to the caller).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cfd.env import EnvState
+from repro.cfd.scenarios import ScenarioParams
+from repro.cfd.solver import FlowState
+from repro.ckpt import checkpoint as ckpt
+
+TRAIN_STATE_SCHEMA = "repro.train_state/v1"
+HISTORY_FIELDS = ("reward", "cd", "cl", "wall")
+
+# metadata fields that must match bit-for-bit between checkpoint and config;
+# "plan" is deliberately absent (cross-plan resume re-shards the env batch)
+RESUME_STRICT_FIELDS = ("n_envs", "obs_dim", "grid", "horizon",
+                        "steps_per_action", "scenarios")
+
+
+class TrainState(NamedTuple):
+    params: Any                       # policy/value network pytree
+    opt_state: Any                    # optimizer moments (mirrors params)
+    key: jnp.ndarray                  # PRNG carry BEFORE the next episode
+    step: jnp.ndarray                 # int32 PPO minibatch counter
+    episode: jnp.ndarray              # int32 episodes completed
+    env_state: Any                    # batched EnvState (or None)
+    obs: Optional[jnp.ndarray]        # batched observations (or None)
+    history: Dict[str, np.ndarray]    # per-episode logs, length == episode
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization
+# ---------------------------------------------------------------------------
+
+def _key_data(key):
+    """Raw uint32 view of a PRNG key (typed keys unwrapped for storage)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return jnp.asarray(key)
+
+
+def to_tree(ts: TrainState) -> Dict[str, Any]:
+    """TrainState -> pure dict tree (msgpack-manifest friendly paths)."""
+    tree: Dict[str, Any] = {
+        "params": ts.params,
+        "opt_state": ts.opt_state,
+        "key": _key_data(ts.key),
+        "step": jnp.asarray(ts.step, jnp.int32),
+        "episode": jnp.asarray(ts.episode, jnp.int32),
+        "history": {k: np.asarray(v) for k, v in ts.history.items()},
+    }
+    if ts.env_state is not None:
+        st = ts.env_state
+        if isinstance(st, EnvState):
+            tree["env_state"] = {
+                "flow": dict(st.flow._asdict()),
+                "jet_vel": st.jet_vel,
+                "t": st.t,
+                "scn": dict(st.scn._asdict()),
+            }
+        else:
+            # engine-level loops (toy envs, tests) carry arbitrary pytrees
+            tree["env_state"] = st
+    if ts.obs is not None:
+        tree["obs"] = ts.obs
+    return tree
+
+
+def _nest(arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    """'a/b/0/c' path keys -> nested dicts; all-integer levels -> lists."""
+    root: Dict[str, Any] = {}
+    for path, arr in arrays.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def conv(n):
+        if not isinstance(n, dict):
+            return n
+        out = {k: conv(v) for k, v in n.items()}
+        if out and all(k.isdigit() for k in out):
+            idx = sorted(out, key=int)
+            if [int(i) for i in idx] == list(range(len(idx))):
+                return [out[i] for i in idx]
+        return out
+
+    return conv(root)
+
+
+def from_tree(tree: Dict[str, Any], *, typed_key: bool = False) -> TrainState:
+    """Rebuild a TrainState (host arrays) from a ``to_tree`` dict."""
+    env_state = None
+    if "env_state" in tree:
+        st = tree["env_state"]
+        if isinstance(st, dict) and set(st) == {"flow", "jet_vel", "t",
+                                                "scn"}:
+            env_state = EnvState(flow=FlowState(**st["flow"]),
+                                 jet_vel=st["jet_vel"], t=st["t"],
+                                 scn=ScenarioParams(**st["scn"]))
+        else:
+            env_state = st
+    key = tree["key"]
+    if typed_key:
+        key = jax.random.wrap_key_data(jnp.asarray(key))
+    return TrainState(params=tree["params"], opt_state=tree["opt_state"],
+                      key=key, step=tree["step"], episode=tree["episode"],
+                      env_state=env_state, obs=tree.get("obs"),
+                      history={k: np.asarray(v)
+                               for k, v in tree.get("history", {}).items()})
+
+
+def state_metadata(ts: TrainState,
+                   extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Manifest metadata for one TrainState save."""
+    meta = {"schema": TRAIN_STATE_SCHEMA,
+            "episode": int(ts.episode),
+            "typed_key": bool(jnp.issubdtype(ts.key.dtype,
+                                             jax.dtypes.prng_key))}
+    meta.update(extra or {})
+    return meta
+
+
+def save_train_state(path: str, ts: TrainState, *,
+                     metadata: Optional[Dict[str, Any]] = None,
+                     compress: bool = True) -> int:
+    """One-shot synchronous save (training loops use ``AsyncCheckpointer``
+    with ``to_tree``/``state_metadata`` instead)."""
+    return ckpt.save(path, to_tree(ts), step=int(ts.episode),
+                     compress=compress, metadata=state_metadata(ts, metadata))
+
+
+def load_train_state(path: str) -> Tuple[TrainState, Dict[str, Any]]:
+    """-> (TrainState of host arrays, manifest metadata).
+
+    The caller re-places arrays onto the current plan's mesh
+    (``engine.place_env_batch``) — that host round trip is what makes the
+    checkpoint portable across plans/backends."""
+    arrays, manifest = ckpt.restore(path)
+    meta = manifest.get("metadata", {})
+    if meta.get("schema") != TRAIN_STATE_SCHEMA:
+        raise ckpt.CheckpointError(
+            f"{path} is not a train-state checkpoint (metadata schema "
+            f"{meta.get('schema')!r} != {TRAIN_STATE_SCHEMA!r}); it may be "
+            f"a raw pytree checkpoint — load it with ckpt.restore instead")
+    ts = from_tree(_nest(arrays), typed_key=bool(meta.get("typed_key")))
+    return ts, meta
+
+
+def resolve_resume(resume: Any, ckpt_dir: Optional[str] = None
+                   ) -> Optional[str]:
+    """Resolve a resume spec to a checkpoint file path (None = fresh run).
+
+    ``True`` / ``"latest"``: the latest valid checkpoint under ``ckpt_dir``
+    (error when there is none, or no ``ckpt_dir``).  ``"auto"``: the same,
+    but a fresh run when the directory holds no checkpoint yet (the
+    preemptible-job idiom).  Anything else: an explicit ``.ckpt`` path or a
+    checkpoint directory.  Shared by ``train()`` and ``train_async()`` so
+    the two never drift."""
+    if not resume:
+        return None
+    if resume is True or resume in ("latest", "auto"):
+        if not ckpt_dir:
+            raise ValueError(f"resume={resume!r} needs ckpt_dir to be set "
+                             f"(or pass an explicit checkpoint path)")
+        path = ckpt.latest_checkpoint(ckpt_dir)
+        if path is None:
+            if resume == "auto":
+                return None               # nothing to resume yet: fresh run
+            raise ckpt.CheckpointError(
+                f"resume={resume!r} but no valid checkpoint under "
+                f"{ckpt_dir!r}")
+        return path
+    p = Path(str(resume))
+    if p.is_dir():
+        path = ckpt.latest_checkpoint(str(p))
+        if path is None:
+            raise ckpt.CheckpointError(
+                f"no valid checkpoint under directory {p}")
+        return path
+    if not p.exists():
+        raise ckpt.CheckpointError(f"resume checkpoint not found: {p}")
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# run fingerprint + compatibility
+# ---------------------------------------------------------------------------
+
+def run_metadata(*, n_envs: int, obs_dim: int, seed: int, grid,
+                 horizon: int, steps_per_action: int,
+                 scenarios: Optional[Tuple[str, ...]],
+                 plan: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    """The run fingerprint stored beside every checkpoint: everything that
+    must match for a bitwise resume (strict fields) plus the plan actually
+    executed (informational — resume may change it)."""
+    return {
+        "n_envs": int(n_envs),
+        "obs_dim": int(obs_dim),
+        "seed": int(seed),
+        "grid": {"res": int(grid.res), "nx": int(grid.nx),
+                 "ny": int(grid.ny), "dt": float(grid.dt)},
+        "horizon": int(horizon),
+        "steps_per_action": int(steps_per_action),
+        "scenarios": list(scenarios) if scenarios else None,
+        "plan": plan or {"n_envs": int(n_envs), "n_ranks": 1,
+                         "backend": "single-host"},
+    }
+
+
+def check_resume_compatible(meta: Dict[str, Any], current: Dict[str, Any]
+                            ) -> List[str]:
+    """Raise ``CheckpointError`` listing every strict-field mismatch between
+    a checkpoint's metadata and the current run's fingerprint; returns
+    human-readable notes for allowed differences (plan / seed)."""
+    errs = []
+    for f in RESUME_STRICT_FIELDS:
+        if meta.get(f) != current.get(f):
+            errs.append(f"{f}: checkpoint={meta.get(f)!r} "
+                        f"current={current.get(f)!r}")
+    if errs:
+        raise ckpt.CheckpointError(
+            "checkpoint is incompatible with the current TrainConfig "
+            "(these change the physics or batch layout, so resuming would "
+            "not continue the same run):\n  " + "\n  ".join(errs))
+    notes = []
+    if meta.get("plan") != current.get("plan"):
+        notes.append(f"cross-plan resume: checkpoint ran {meta.get('plan')}, "
+                     f"resuming onto {current.get('plan')} (env batch "
+                     f"re-sharded from host arrays)")
+    if meta.get("seed") != current.get("seed"):
+        notes.append(f"seed differs (checkpoint {meta.get('seed')}, config "
+                     f"{current.get('seed')}) — ignored: the restored PRNG "
+                     f"key carry is authoritative")
+    return notes

@@ -1,0 +1,348 @@
+"""Checkpointer: property-based pytree roundtrips (structure, dtype, bits),
+manifest validation errors, corruption/truncation handling, the on-disk
+step/LATEST/retention layout, and the AsyncCheckpointer overlap semantics."""
+import dataclasses
+import os
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from tests._prop import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# random pytrees: bf16/f32/int32/bool leaves, 0-d and 0-length arrays,
+# dict/tuple/list/dataclass nesting
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Block:
+    w: Any
+    b: Any
+
+
+_DTYPES = (np.dtype(np.float32), np.dtype(np.int32), np.dtype(np.bool_),
+           np.dtype(ml_dtypes.bfloat16))
+_SHAPES = ((), (1,), (3,), (0,), (2, 3), (4, 1, 2))
+
+
+def _rand_leaf(rng: np.random.Generator):
+    dt = _DTYPES[rng.integers(len(_DTYPES))]
+    shape = _SHAPES[rng.integers(len(_SHAPES))]
+    if dt == np.bool_:
+        return rng.integers(0, 2, size=shape).astype(np.bool_)
+    if np.issubdtype(dt, np.integer):
+        return rng.integers(-1000, 1000, size=shape).astype(dt)
+    return rng.standard_normal(size=shape).astype(dt)
+
+
+def _rand_tree(rng: np.random.Generator, depth: int = 0):
+    kind = rng.integers(5 if depth < 2 else 1)
+    if kind == 1:
+        return {f"k{i}": _rand_tree(rng, depth + 1)
+                for i in range(rng.integers(1, 4))}
+    if kind == 2:
+        return tuple(_rand_tree(rng, depth + 1)
+                     for _ in range(rng.integers(1, 4)))
+    if kind == 3:
+        return [_rand_tree(rng, depth + 1)
+                for _ in range(rng.integers(1, 4))]
+    if kind == 4:
+        return Block(w=_rand_leaf(rng), b=_rand_tree(rng, depth + 1))
+    return _rand_leaf(rng)
+
+
+def _assert_same_bits(tree_a, tree_b):
+    la, ta = jax.tree_util.tree_flatten(tree_a)
+    lb, tb = jax.tree_util.tree_flatten(tree_b)
+    assert ta == tb, f"structure changed: {ta} != {tb}"
+    for a, b in zip(la, lb):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, (a.shape, b.shape)
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+        assert a.tobytes() == b.tobytes()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_roundtrip_preserves_structure_dtype_bits(seed):
+    rng = np.random.default_rng(seed)
+    tree = _rand_tree(rng)
+    path = f"/tmp/repro_ckpt_prop_{os.getpid()}.ckpt"
+    ck.save(path, tree, step=seed, compress=bool(seed % 2))
+    back = ck.restore(path, target=tree)
+    _assert_same_bits(tree, back)
+    os.unlink(path)
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_roundtrip_edge_trees(tmp_path, compress):
+    cases = {
+        "empty_dict": {},
+        "zero_d": {"x": jnp.float32(2.5), "y": np.int32(-7)},
+        "zero_len": {"x": np.zeros((0, 4), np.float32)},
+        "nested": {"a": (Block(w=np.ones((2,), ml_dtypes.bfloat16),
+                               b=[np.bool_(True), jnp.zeros(())]),),
+                   "b": {"c": np.arange(3, dtype=np.int32)}},
+    }
+    for name, tree in cases.items():
+        p = str(tmp_path / f"{name}.ckpt")
+        ck.save(p, tree, compress=compress)
+        _assert_same_bits(tree, ck.restore(p, target=tree))
+
+
+def test_restore_without_target_returns_arrays_and_manifest(tmp_path):
+    tree = {"a": np.float32([1, 2]), "b": {"c": np.int32(3)}}
+    p = str(tmp_path / "x.ckpt")
+    ck.save(p, tree, step=7, metadata={"note": "hi"})
+    arrays, manifest = ck.restore(p)
+    assert set(arrays) == {"a", "b/c"}
+    assert manifest["step"] == 7 and manifest["metadata"]["note"] == "hi"
+    assert manifest["arrays"]["a"]["dtype"] == "float32"
+    assert manifest["arrays"]["b/c"]["shape"] == []
+
+
+def test_zstd_missing_fallback(tmp_path, monkeypatch):
+    """compress=True must silently degrade to raw when zstandard is absent,
+    and the manifest must record it so restore never guesses."""
+    monkeypatch.setattr(ck, "zstd", None)
+    tree = {"a": np.arange(10, dtype=np.float32)}
+    p = str(tmp_path / "nozstd.ckpt")
+    ck.save(p, tree, compress=True)
+    arrays, manifest = ck.restore(p)
+    assert manifest["compressed"] is False
+    np.testing.assert_array_equal(arrays["a"], tree["a"])
+
+
+@pytest.mark.skipif(ck.zstd is None, reason="zstandard not installed")
+def test_compressed_checkpoint_without_zstd_errors(tmp_path, monkeypatch):
+    tree = {"a": np.zeros((64,), np.float32)}
+    p = str(tmp_path / "z.ckpt")
+    ck.save(p, tree, compress=True)
+    assert ck.read_manifest(p)["compressed"] is True
+    monkeypatch.setattr(ck, "zstd", None)
+    with pytest.raises(ck.CheckpointError, match="zstandard"):
+        ck.restore(p)
+
+
+# ---------------------------------------------------------------------------
+# validation: dtype/shape/structure mismatches, truncation, corruption
+# ---------------------------------------------------------------------------
+
+def _one(tmp_path, tree=None):
+    tree = tree if tree is not None else {
+        "w": np.float32([[1, 2], [3, 4]]), "n": np.int32(5)}
+    p = str(tmp_path / "one.ckpt")
+    ck.save(p, tree)
+    return p, tree
+
+
+def test_restore_dtype_mismatch_names_leaf(tmp_path):
+    p, tree = _one(tmp_path)
+    bad = dict(tree, n=np.float32(0))
+    with pytest.raises(ck.CheckpointError) as ei:
+        ck.restore(p, target=bad)
+    msg = str(ei.value)
+    assert "'n'" in msg and "int32" in msg and "float32" in msg
+    # explicit opt-in converts instead
+    out = ck.restore(p, target=bad, cast=True)
+    assert np.asarray(out["n"]).dtype == np.float32
+    assert float(np.asarray(out["n"])) == 5.0
+
+
+def test_restore_shape_and_structure_mismatch(tmp_path):
+    p, tree = _one(tmp_path)
+    with pytest.raises(ck.CheckpointError, match="'w'"):
+        ck.restore(p, target=dict(tree, w=np.zeros((3, 2), np.float32)))
+    with pytest.raises(ck.CheckpointError, match="missing"):
+        ck.restore(p, target=dict(tree, extra=np.zeros(1, np.float32)))
+    with pytest.raises(ck.CheckpointError, match="extra"):
+        ck.restore(p, target={"w": tree["w"]})
+
+
+def test_truncated_file_raises_clean_error(tmp_path):
+    p, tree = _one(tmp_path)
+    blob = open(p, "rb").read()
+    for frac in (0.2, 0.6, 0.95):
+        bad = str(tmp_path / f"trunc_{frac}.ckpt")
+        open(bad, "wb").write(blob[:int(len(blob) * frac)])
+        with pytest.raises(ck.CheckpointError,
+                           match="truncated|corrupted|manifest"):
+            ck.restore(bad)
+        with pytest.raises(ck.CheckpointError):
+            ck.validate(bad)
+
+
+def test_corrupted_payload_fails_crc_not_garbage(tmp_path):
+    p, tree = _one(tmp_path)
+    blob = bytearray(open(p, "rb").read())
+    blob[-2] ^= 0x5A                     # flip bits inside the last leaf
+    bad = str(tmp_path / "bitflip.ckpt")
+    open(bad, "wb").write(bytes(blob))
+    with pytest.raises(ck.CheckpointError, match="crc32"):
+        ck.restore(bad)
+    ck.validate(bad)                     # shallow: lengths still consistent
+    with pytest.raises(ck.CheckpointError, match="crc32"):
+        ck.validate(bad, deep=True)
+
+
+def test_wrong_magic(tmp_path):
+    bad = str(tmp_path / "not.ckpt")
+    open(bad, "wb").write(b"definitely not a checkpoint")
+    with pytest.raises(ck.CheckpointError, match="not a repro checkpoint"):
+        ck.restore(bad)
+
+
+def test_save_is_atomic_no_tmp_left(tmp_path):
+    p, _ = _one(tmp_path)
+    assert not list(tmp_path.glob("*.tmp"))
+    assert os.path.exists(p)
+
+
+def test_restore_onto_shardings(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_debug_mesh
+    p, tree = _one(tmp_path)
+    mesh = make_debug_mesh(1, 1)
+    sh = NamedSharding(mesh, P())
+    out = ck.restore(p, target=tree, shardings=sh)   # one sharding for all
+    _assert_same_bits(tree, out)
+    assert out["w"].sharding == sh
+
+
+# ---------------------------------------------------------------------------
+# directory layout: step files, LATEST pointer, retention
+# ---------------------------------------------------------------------------
+
+def test_save_step_latest_and_retention(tmp_path):
+    d = str(tmp_path / "run")
+    for step in (2, 4, 6, 8):
+        ck.save_step(d, step, {"x": np.int32(step)}, keep=2)
+    names = sorted(os.path.basename(f) for f in os.listdir(d)
+                   if f.endswith(".ckpt"))
+    assert names == ["step_00000006.ckpt", "step_00000008.ckpt"]
+    latest = ck.latest_checkpoint(d)
+    assert latest.endswith("step_00000008.ckpt")
+    arrays, manifest = ck.restore(latest)
+    assert int(arrays["x"]) == 8 and manifest["step"] == 8
+    assert ck.latest_step(d) == latest          # back-compat alias
+
+
+def test_latest_checkpoint_skips_corrupt_newest(tmp_path):
+    d = str(tmp_path / "run")
+    ck.save_step(d, 1, {"x": np.int32(1)})
+    good = ck.save_step(d, 2, {"x": np.int32(2)})
+    # newest gets truncated (e.g. external damage); pointer still names it
+    blob = open(good, "rb").read()
+    open(good, "wb").write(blob[:len(blob) // 2])
+    latest = ck.latest_checkpoint(d)
+    assert latest is not None and latest.endswith("step_00000001.ckpt")
+    assert int(ck.restore(latest)[0]["x"]) == 1
+
+
+def test_latest_checkpoint_skips_bitflipped_newest(tmp_path):
+    """Deep (crc) validation in latest_checkpoint: damage that preserves
+    segment lengths must still be skipped, not returned then crashed on."""
+    d = str(tmp_path / "run")
+    ck.save_step(d, 1, {"x": np.int32(1)})
+    good = ck.save_step(d, 2, {"x": np.int32(2)})
+    blob = bytearray(open(good, "rb").read())
+    blob[-2] ^= 0x5A
+    open(good, "wb").write(bytes(blob))
+    latest = ck.latest_checkpoint(d)
+    assert latest is not None and latest.endswith("step_00000001.ckpt")
+
+
+def test_latest_checkpoint_prefers_newer_step_over_stale_pointer(tmp_path):
+    """Crash window between writing step N and repointing LATEST: the newer
+    complete step file must win over the stale pointer target."""
+    d = str(tmp_path / "run")
+    ck.save_step(d, 1, {"x": np.int32(1)})
+    ck.save_step(d, 2, {"x": np.int32(2)})
+    (tmp_path / "run" / ck.LATEST_NAME).write_text("step_00000001.ckpt\n")
+    latest = ck.latest_checkpoint(d)
+    assert latest.endswith("step_00000002.ckpt")
+
+
+def test_latest_checkpoint_empty_and_missing_dir(tmp_path):
+    assert ck.latest_checkpoint(str(tmp_path / "nope")) is None
+    (tmp_path / "empty").mkdir()
+    assert ck.latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("background", [False, True])
+def test_async_checkpointer_saves_land(tmp_path, background):
+    d = str(tmp_path / "acp")
+    with ck.AsyncCheckpointer(d, keep=2, background=background) as acp:
+        for step in (1, 2, 3):
+            acp.save(step, {"p": jnp.full((4,), float(step)),
+                            "s": jnp.int32(step)},
+                     metadata={"episode": step})
+        acp.wait()
+    assert acp.saves == 3 and acp.bytes_written > 0
+    latest = ck.latest_checkpoint(d)
+    arrays, manifest = ck.restore(latest)
+    assert manifest["metadata"]["episode"] == 3
+    np.testing.assert_array_equal(arrays["p"], np.full((4,), 3.0))
+    ckpts = [f for f in os.listdir(d) if f.endswith(".ckpt")]
+    assert len(ckpts) == 2                      # retention applied
+
+
+def test_async_checkpointer_snapshot_isolated_from_training(tmp_path):
+    """save() snapshots device arrays to host before returning, so the
+    training loop may immediately rebind/donate its state without racing
+    the background write."""
+    d = str(tmp_path / "snap")
+    acp = ck.AsyncCheckpointer(d)
+    y = jnp.arange(8, dtype=jnp.float32)
+    acp.save(1, {"x": y})
+    y = y + 100.0                      # training moves on mid-write
+    acp.close()
+    arrays, _ = ck.restore(ck.latest_checkpoint(d))
+    np.testing.assert_array_equal(arrays["x"],
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_async_checkpointer_error_surfaces_on_next_call(tmp_path):
+    d = str(tmp_path / "err")
+    acp = ck.AsyncCheckpointer(d, background=True)
+    acp.save(1, {"x": np.zeros(2)}, metadata={"bad": object()})  # unpackable
+    with pytest.raises(Exception):
+        acp.save(2, {"x": np.zeros(2)})
+    acp.close()
+
+
+def test_async_checkpointer_overlaps_writer_thread(tmp_path):
+    """The write really happens off-thread: save() returns while a slow
+    (event-gated) serialization is still in flight."""
+    d = str(tmp_path / "olap")
+    acp = ck.AsyncCheckpointer(d, background=True)
+    gate = threading.Event()
+    inner = ck.save
+
+    def slow_save(*a, **kw):
+        gate.wait(timeout=30)
+        return inner(*a, **kw)
+
+    orig = ck.save
+    ck.save = slow_save
+    try:
+        acp.save(1, {"x": np.zeros(4)})
+        assert acp._inflight is not None and not acp._inflight.done()
+        gate.set()
+        acp.wait()
+    finally:
+        ck.save = orig
+        acp.close()
+    assert ck.latest_checkpoint(d) is not None

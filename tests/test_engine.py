@@ -187,6 +187,51 @@ def test_make_sink_modes(tmp_path):
     fs.cleanup()
 
 
+def test_make_sink_unknown_mode_and_missing_root(tmp_path):
+    with pytest.raises(ValueError, match="unknown sink mode"):
+        make_sink("parquet", str(tmp_path))
+    with pytest.raises(ValueError, match="root directory"):
+        make_sink("binary")                       # file sink needs a root
+
+
+def test_file_sink_unknown_codec():
+    with pytest.raises(ValueError, match="unknown trajectory-sink codec"):
+        FileSink("/tmp/never_created", codec="gzip")
+
+
+def test_file_sink_read_before_write(tmp_path):
+    sink = FileSink(str(tmp_path / "empty"))
+    with pytest.raises(KeyError, match="episode 0"):
+        sink.read(0)
+    assert sink.episodes == 0 and sink.bytes_written == 0
+
+
+def test_file_sink_cleanup_idempotent(tmp_path):
+    sink = FileSink(str(tmp_path / "c"))
+    sink.write(0, _collect_one())
+    sink.cleanup()
+    assert not sink.dir.exists()
+    sink.cleanup()                                # second cleanup: no error
+    with pytest.raises(KeyError):
+        sink.read(0)                              # spilled data is gone
+
+
+def test_memory_sink_eviction_drops_lowest_episode():
+    sink = MemorySink(keep=2)
+    traj = _collect_one()
+    for ep in (5, 3, 7):                          # out-of-order arrivals
+        sink.write(ep, traj)
+    with pytest.raises(KeyError):
+        sink.read(3)                              # lowest id evicted first
+    assert sink.read(5).obs.shape == sink.read(7).obs.shape
+    sink_one = MemorySink(keep=1)
+    sink_one.write(0, traj)
+    sink_one.write(1, traj)
+    with pytest.raises(KeyError):
+        sink_one.read(0)
+    np.testing.assert_array_equal(sink_one.read(1).obs, np.asarray(traj.obs))
+
+
 def test_broadcast_env_state():
     st = {"a": jnp.zeros((3,)), "b": jnp.float32(1.0)}
     obs = jnp.zeros((5,))

@@ -1,0 +1,424 @@
+"""Fault-tolerant resumable training: the bitwise-resume gate.
+
+Layers, cheapest first:
+  * engine-level: run_sync's TrainCarry (params/opt/step/key) is sufficient
+    state — re-entering with a mid-run carry reproduces the remainder bit
+    for bit on a toy env (no CFD).
+  * train()-level single-host: train(episodes=N) vs train(episodes=k) ->
+    resume -> episodes=N gives identical params, PRNG carry, opt state, env
+    batch and history (reward/cd/cl; wall is wall-clock and excluded).
+  * forced 4-device subprocesses (pattern of tests/test_halo_backend.py):
+    the same gate under an n_ranks=2 halo plan, plus cross-plan resume
+    (single-host ckpt -> halo mesh and back).
+  * crash injection: SIGKILL a training subprocess mid-run, resume from the
+    latest valid checkpoint in-process, and match an uninterrupted run.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd.env import EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.ckpt import checkpoint as ck
+from repro.drl import networks, train_state as ts_mod
+from repro.drl.engine import EngineConfig, RolloutEngine
+from repro.drl.ppo import PPOConfig
+from repro.drl.train import TrainConfig, train
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _tiny_cfg(episodes, ckpt_dir=None, *, resume=None, n_envs=2, res=6,
+              ckpt_every=1, plan=None, seed=0):
+    return TrainConfig(
+        env=EnvConfig(grid=GridConfig(res=res, dt=0.012, poisson_iters=30),
+                      steps_per_action=3, actions_per_episode=3,
+                      warmup_time=1.0),
+        ppo=PPOConfig(epochs=2, minibatches=2),
+        n_envs=n_envs, episodes=episodes, seed=seed, plan=plan,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, resume=resume)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# engine level: the carry IS the resume state (fast, toy env)
+# ---------------------------------------------------------------------------
+
+class _Out:
+    def __init__(self, obs, reward):
+        self.obs, self.reward = obs, reward
+        self.cd = jnp.float32(0)
+        self.cl = jnp.float32(0)
+
+
+def _toy_step(st, a):
+    new = st * 0.8 + jnp.array([0.5, 0.0, 0.0]) * a
+    return new, _Out(new, -jnp.sum(new[:1] ** 2))
+
+
+N, T = 4, 8
+PCFG = networks.PolicyConfig(obs_dim=3, act_dim=1, hidden=16)
+PPO = PPOConfig(lr=1e-3, epochs=2, minibatches=2)
+
+
+def _toy_engine():
+    return RolloutEngine(_toy_step, EngineConfig(
+        n_envs=N, horizon=T, gamma=PPO.gamma, lam=PPO.lam))
+
+
+def test_run_sync_carry_resumes_bitwise():
+    st0 = jnp.ones((N, 3)) * 2.0
+    engine = _toy_engine()
+    params, optimizer, opt_state, key = engine.init(PCFG, PPO, seed=0)
+
+    carries = []
+    p_straight, _, r_straight = engine.run_sync(
+        params, opt_state, PPO, optimizer, st0, st0, key, 6,
+        on_state=carries.append)
+    assert len(carries) == 6
+    # steps thread through: PPO does epochs*minibatches updates per episode
+    steps = [int(c.step) for c in carries]
+    assert steps == [4 * (i + 1) for i in range(6)]
+
+    # re-enter from the episode-3 carry: the remaining 3 episodes replay
+    c3 = carries[2]
+    engine2 = _toy_engine()
+    p_res, _, r_res = engine2.run_sync(
+        c3.params, c3.opt_state, PPO, optimizer, st0, st0, c3.key, 3,
+        step=c3.step)
+    _assert_trees_equal(p_straight, p_res)
+    np.testing.assert_array_equal(r_straight[3:], r_res)
+
+
+def test_run_async_on_state_cadence_and_resume():
+    st0 = jnp.ones((N, 3)) * 2.0
+    engine = _toy_engine()
+    params, optimizer, opt_state, key = engine.init(PCFG, PPO, seed=0)
+    carries = []
+    # snapshot at capture: async mode DONATES opt_state to the next update,
+    # so a live carry's buffers die as training continues — the same reason
+    # AsyncCheckpointer.save() device_gets before returning
+    engine.run_async(params, opt_state, PPO, optimizer, st0, st0, key, 7,
+                     on_state=lambda c: carries.append(jax.device_get(c)),
+                     state_every=3)
+    # episodes 3 and 6, plus the final post-drain carry (no in-flight work)
+    assert len(carries) == 3
+    assert int(carries[-1].step) > int(carries[-2].step)
+    # a resumed async run keeps learning from the carry (not bitwise: the
+    # one in-flight update is deliberately dropped — see run_async)
+    c = carries[-1]
+    engine2 = _toy_engine()
+    p2, _, r2 = engine2.run_async(c.params, c.opt_state, PPO, optimizer,
+                                  st0, st0, c.key, 2, step=c.step)
+    assert len(r2) == 2
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p2))
+
+
+def test_train_async_checkpoints_and_resumes(tmp_path):
+    from repro.drl.async_train import train_async
+    st0 = jnp.ones((N, 3)) * 2.0
+    d = str(tmp_path / "async")
+    p1, r1 = train_async(_toy_step, PCFG, PPO, st0, st0, n_envs=N,
+                         horizon=T, episodes=4, seed=0, ckpt_dir=d,
+                         ckpt_every=2)
+    assert len(r1) == 4
+    latest = ck.latest_checkpoint(d)
+    assert latest is not None
+    ts, meta = ts_mod.load_train_state(latest)
+    assert int(ts.episode) == 4 and len(ts.history["reward"]) == 4
+
+    # resume without re-supplying the env batch: the checkpoint carries it
+    p2, r2 = train_async(_toy_step, PCFG, PPO, None, None, n_envs=N,
+                         horizon=T, episodes=7, seed=0, ckpt_dir=d,
+                         ckpt_every=2, resume="auto")
+    assert len(r2) == 7
+    np.testing.assert_array_equal(r2[:4], r1)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(p2))
+    with pytest.raises(ck.CheckpointError, match="no valid checkpoint"):
+        train_async(_toy_step, PCFG, PPO, st0, st0, n_envs=N, horizon=T,
+                    episodes=2, ckpt_dir=str(tmp_path / "void"),
+                    resume=True)
+    # shape facts are validated: resuming with a different n_envs is an
+    # actionable error, not a vmap axis crash mid-collect
+    with pytest.raises(ck.CheckpointError, match="n_envs"):
+        train_async(_toy_step, PCFG, PPO, None, None, n_envs=2 * N,
+                    horizon=T, episodes=9, ckpt_dir=d, resume=True)
+
+
+# ---------------------------------------------------------------------------
+# train() level, single-host plan: the acceptance gate
+# ---------------------------------------------------------------------------
+
+def test_train_bitwise_resume_single_host(tmp_path):
+    dA, dB = str(tmp_path / "A"), str(tmp_path / "B")
+    hist_a, params_a = train(_tiny_cfg(4, dA, ckpt_every=2), log_fn=None)
+
+    hist_k, _ = train(_tiny_cfg(2, dB, ckpt_every=2), log_fn=None)
+    logs = []
+    hist_b, params_b = train(_tiny_cfg(4, dB, ckpt_every=2, resume=True),
+                             log_fn=logs.append)
+    assert any("resume:" in l for l in logs), logs
+
+    _assert_trees_equal(params_a, params_b)                 # exact equality
+    for f in ("reward", "cd", "cl"):
+        np.testing.assert_array_equal(hist_a[f], hist_b[f])
+        np.testing.assert_array_equal(hist_k[f], hist_b[f][:2])
+    assert len(hist_b["reward"]) == 4
+
+    # the full checkpointed state matches too: PRNG carry, PPO step,
+    # optimizer moments, env batch
+    ts_a, _ = ts_mod.load_train_state(ck.latest_checkpoint(dA))
+    ts_b, _ = ts_mod.load_train_state(ck.latest_checkpoint(dB))
+    np.testing.assert_array_equal(ts_a.key, ts_b.key)
+    assert int(ts_a.step) == int(ts_b.step)
+    assert int(ts_a.episode) == int(ts_b.episode) == 4
+    _assert_trees_equal(ts_a.opt_state, ts_b.opt_state)
+    _assert_trees_equal(ts_a.env_state, ts_b.env_state)
+    for f in ts_mod.HISTORY_FIELDS:
+        assert len(ts_a.history[f]) == 4
+
+
+def test_train_resume_skips_warmup_and_respects_target(tmp_path):
+    d = str(tmp_path / "c")
+    train(_tiny_cfg(2, d), log_fn=None)
+    # target already reached: returns immediately with the stored history
+    logs = []
+    hist, params = train(_tiny_cfg(2, d, resume=True), log_fn=logs.append)
+    assert len(hist["reward"]) == 2
+    assert any("nothing to train" in l for l in logs), logs
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(params))
+
+
+def test_train_resume_auto_is_fresh_when_empty(tmp_path):
+    d = str(tmp_path / "fresh")
+    # ckpt_every=0 must not divide-by-zero: treated as every episode
+    hist, _ = train(_tiny_cfg(1, d, resume="auto", ckpt_every=0),
+                    log_fn=None)
+    assert len(hist["reward"]) == 1
+    assert ck.latest_checkpoint(d) is not None
+
+
+# ---------------------------------------------------------------------------
+# resume validation: actionable errors, never silent physics changes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ckpt_run(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("ckpt_run"))
+    train(_tiny_cfg(1, d), log_fn=None)
+    return d
+
+
+def test_resume_requires_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        train(_tiny_cfg(2, None, resume=True), log_fn=None)
+
+
+def test_resume_missing_checkpoint(tmp_path):
+    with pytest.raises(ck.CheckpointError, match="no valid checkpoint"):
+        train(_tiny_cfg(2, str(tmp_path / "void"), resume=True), log_fn=None)
+    with pytest.raises(ck.CheckpointError, match="not found"):
+        train(_tiny_cfg(2, None, resume=str(tmp_path / "nope.ckpt")),
+              log_fn=None)
+
+
+def test_resume_grid_mismatch_is_actionable(ckpt_run):
+    with pytest.raises(ck.CheckpointError, match="grid"):
+        train(_tiny_cfg(2, ckpt_run, resume=True, res=8), log_fn=None)
+
+
+def test_resume_n_envs_mismatch_is_actionable(ckpt_run):
+    with pytest.raises(ck.CheckpointError, match="n_envs"):
+        train(_tiny_cfg(2, ckpt_run, resume=True, n_envs=4), log_fn=None)
+
+
+def test_resume_seed_mismatch_is_allowed_but_noted(ckpt_run):
+    logs = []
+    hist, _ = train(_tiny_cfg(2, ckpt_run, resume=True, seed=123),
+                    log_fn=logs.append)
+    assert len(hist["reward"]) == 2
+    assert any("seed differs" in l for l in logs), logs
+
+
+def test_resume_explicit_path_and_directory(ckpt_run, tmp_path):
+    path = ck.latest_checkpoint(ckpt_run)
+    d2 = str(tmp_path / "out")
+    hist, _ = train(_tiny_cfg(2, d2, resume=path), log_fn=None)
+    assert len(hist["reward"]) == 2
+    hist2, _ = train(_tiny_cfg(2, str(tmp_path / "out2"), resume=ckpt_run),
+                     log_fn=None)
+    np.testing.assert_array_equal(hist["reward"], hist2["reward"])
+
+
+# ---------------------------------------------------------------------------
+# forced 4-device host: halo-plan bitwise resume + cross-plan resume
+# ---------------------------------------------------------------------------
+
+def _run_forced(code: str, timeout: int = 420) -> str:
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+_CHILD_PRELUDE = textwrap.dedent("""
+    import tempfile
+    import jax, numpy as np
+    from repro.cfd.env import EnvConfig
+    from repro.cfd.grid import GridConfig
+    from repro.ckpt import checkpoint as ck
+    from repro.core.plan import ParallelPlan
+    from repro.drl import train_state as ts_mod
+    from repro.drl.ppo import PPOConfig
+    from repro.drl.train import TrainConfig, train
+
+    def cfg(episodes, ckpt_dir, resume=None, plan=None):
+        return TrainConfig(
+            env=EnvConfig(grid=GridConfig(res=6, dt=0.012,
+                                          poisson_iters=30),
+                          steps_per_action=3, actions_per_episode=3,
+                          warmup_time=1.0),
+            ppo=PPOConfig(epochs=2, minibatches=2),
+            n_envs=2, episodes=episodes, seed=0, plan=plan,
+            ckpt_dir=ckpt_dir, ckpt_every=1, resume=resume)
+""")
+
+
+def test_train_bitwise_resume_forced_halo_plan():
+    """Acceptance gate, hybrid half: under a forced 4-device n_ranks=2 halo
+    plan, checkpoint-at-k-then-resume equals the straight run exactly."""
+    out = _run_forced(_CHILD_PRELUDE + textwrap.dedent("""
+        plan = ParallelPlan(4, 2, 2)
+        dA, dB = tempfile.mkdtemp(), tempfile.mkdtemp()
+        hist_a, params_a = train(cfg(3, dA, plan=plan), log_fn=None)
+        train(cfg(1, dB, plan=plan), log_fn=None)
+        logs = []
+        hist_b, params_b = train(cfg(3, dB, resume=True, plan=plan),
+                                 log_fn=logs.append)
+        assert any("resume:" in l for l in logs), logs
+        for a, b in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for f in ("reward", "cd", "cl"):
+            np.testing.assert_array_equal(hist_a[f], hist_b[f])
+        ta, _ = ts_mod.load_train_state(ck.latest_checkpoint(dA))
+        tb, _ = ts_mod.load_train_state(ck.latest_checkpoint(dB))
+        np.testing.assert_array_equal(ta.key, tb.key)
+        for a, b in zip(jax.tree.leaves(ta.env_state),
+                        jax.tree.leaves(tb.env_state)):
+            np.testing.assert_array_equal(a, b)
+        print("HALO_RESUME_OK")
+    """))
+    assert "HALO_RESUME_OK" in out
+
+
+def test_train_cross_plan_resume_both_directions():
+    """A checkpoint taken under one plan restores onto another: single-host
+    -> (2 envs x 2 ranks) halo mesh, and halo -> single-host.  Physics stays
+    finite and the history simply continues (bitwise equality is only
+    promised same-plan: the halo solver is a different backend)."""
+    out = _run_forced(_CHILD_PRELUDE + textwrap.dedent("""
+        plan = ParallelPlan(4, 2, 2)
+        d = tempfile.mkdtemp()
+        train(cfg(2, d), log_fn=None)                      # single-host
+        logs = []
+        hist, params = train(cfg(4, d, resume=True, plan=plan),
+                             log_fn=logs.append)           # onto halo mesh
+        assert any("cross-plan resume" in l for l in logs), logs
+        assert len(hist["reward"]) == 4
+        assert np.isfinite(hist["reward"]).all()
+        assert np.isfinite(hist["cd"]).all()
+
+        logs2 = []
+        hist2, _ = train(cfg(6, d, resume=True), log_fn=logs2.append)
+        assert any("cross-plan resume" in l for l in logs2), logs2
+        assert len(hist2["reward"]) == 6
+        assert np.isfinite(hist2["reward"]).all()
+        print("CROSS_PLAN_OK")
+    """))
+    assert "CROSS_PLAN_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# crash injection: SIGKILL mid-run, resume from the latest valid checkpoint
+# ---------------------------------------------------------------------------
+
+def test_crash_injection_resume_matches_uninterrupted(tmp_path):
+    d = str(tmp_path / "crash")
+    # the child trains "forever" with a checkpoint every episode; the parent
+    # SIGKILLs it once >= 2 checkpoints exist (mid-episode, mid-write —
+    # wherever the kill lands, atomic tmp+replace keeps every *.ckpt valid)
+    child = textwrap.dedent(f"""
+        from repro.cfd.env import EnvConfig
+        from repro.cfd.grid import GridConfig
+        from repro.drl.ppo import PPOConfig
+        from repro.drl.train import TrainConfig, train
+        train(TrainConfig(
+            env=EnvConfig(grid=GridConfig(res=6, dt=0.012,
+                                          poisson_iters=30),
+                          steps_per_action=3, actions_per_episode=3,
+                          warmup_time=1.0),
+            ppo=PPOConfig(epochs=2, minibatches=2),
+            n_envs=2, episodes=1000, seed=0,
+            ckpt_dir={d!r}, ckpt_every=1), log_fn=None)
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    # stderr to a file, not a pipe: an undrained pipe could block a chatty
+    # child (jax warnings) before it ever writes a checkpoint
+    errlog = tmp_path / "child_stderr.log"
+    with open(errlog, "wb") as errf:
+        proc = subprocess.Popen([sys.executable, "-c", child], env=env,
+                                stdout=subprocess.DEVNULL, stderr=errf)
+        try:
+            deadline = time.time() + 300
+            while time.time() < deadline:
+                if len(list(Path(d).glob("step_*.ckpt"))) >= 2:
+                    break
+                if proc.poll() is not None:
+                    raise AssertionError(
+                        "training child exited early:\n"
+                        + errlog.read_text()[-2000:])
+                time.sleep(0.1)
+            else:
+                raise AssertionError("no checkpoints appeared within 300s")
+        finally:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+
+    latest = ck.latest_checkpoint(d)
+    assert latest is not None, sorted(os.listdir(d))
+    _, meta = ts_mod.load_train_state(latest)
+    k = meta["episode"]
+    assert k >= 2
+    target = k + 2
+
+    # resume past the crash ...
+    hist_r, params_r = train(_tiny_cfg(target, d, resume=True), log_fn=None)
+    assert len(hist_r["reward"]) == target
+    # ... and it matches a run that never crashed
+    hist_s, params_s = train(_tiny_cfg(target, str(tmp_path / "straight"),
+                                       ckpt_every=max(1, target)),
+                             log_fn=None)
+    _assert_trees_equal(params_s, params_r)
+    for f in ("reward", "cd", "cl"):
+        np.testing.assert_array_equal(hist_s[f], hist_r[f])

@@ -1,0 +1,120 @@
+"""CI resume smoke: train -> SIGKILL mid-run -> resume -> bitwise match.
+
+Launches a training child that checkpoints every episode, kills it once a
+few checkpoints exist (wherever the signal lands — mid-episode, mid-write),
+resumes in this process from the latest valid checkpoint, and asserts the
+resumed run's final params and history are EXACTLY those of a run that was
+never interrupted.  Exits non-zero on any mismatch.
+
+    PYTHONPATH=src python tools/resume_smoke.py
+"""
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+sys.path.insert(0, SRC)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax                                                  # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.ckpt import checkpoint as ck                     # noqa: E402
+from repro.drl import train_state as ts_mod                 # noqa: E402
+
+_CHILD = """
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+from repro.cfd.env import EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl.ppo import PPOConfig
+from repro.drl.train import TrainConfig, train
+train(TrainConfig(
+    env=EnvConfig(grid=GridConfig(res=6, dt=0.012, poisson_iters=30),
+                  steps_per_action=3, actions_per_episode=3,
+                  warmup_time=1.0),
+    ppo=PPOConfig(epochs=2, minibatches=2),
+    n_envs=2, episodes=10**6, seed=0,
+    ckpt_dir={ckpt_dir!r}, ckpt_every=1), log_fn=None)
+"""
+
+
+def _cfg(episodes, ckpt_dir, resume=None, ckpt_every=1):
+    from repro.cfd.env import EnvConfig
+    from repro.cfd.grid import GridConfig
+    from repro.drl.ppo import PPOConfig
+    from repro.drl.train import TrainConfig
+    return TrainConfig(
+        env=EnvConfig(grid=GridConfig(res=6, dt=0.012, poisson_iters=30),
+                      steps_per_action=3, actions_per_episode=3,
+                      warmup_time=1.0),
+        ppo=PPOConfig(epochs=2, minibatches=2),
+        n_envs=2, episodes=episodes, seed=0,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, resume=resume)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-ckpts", type=int, default=3,
+                    help="checkpoints to wait for before the kill")
+    ap.add_argument("--extra-episodes", type=int, default=3,
+                    help="episodes to train past the crash point")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args()
+    from repro.drl.train import train
+
+    d = tempfile.mkdtemp(prefix="resume_smoke_")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    # stderr to a file, NOT a pipe: an undrained pipe would block a chatty
+    # child (jax warnings) before it ever reaches the first checkpoint
+    errlog = Path(d) / "child_stderr.log"
+    with open(errlog, "wb") as errf:
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _CHILD.format(ckpt_dir=d)], env=env,
+            stdout=subprocess.DEVNULL, stderr=errf)
+        try:
+            deadline = time.time() + args.timeout
+            while len(list(Path(d).glob("step_*.ckpt"))) < args.min_ckpts:
+                if proc.poll() is not None:
+                    sys.exit("child exited early:\n"
+                             + errlog.read_text()[-3000:])
+                if time.time() > deadline:
+                    sys.exit(f"no {args.min_ckpts} checkpoints in "
+                             f"{args.timeout}s")
+                time.sleep(0.1)
+        finally:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+    print(f"killed training child after "
+          f"{len(list(Path(d).glob('step_*.ckpt')))} checkpoints")
+
+    latest = ck.latest_checkpoint(d)
+    assert latest is not None, "no valid checkpoint survived the kill"
+    _, meta = ts_mod.load_train_state(latest)
+    k = meta["episode"]
+    target = k + args.extra_episodes
+    print(f"latest valid checkpoint: {latest} (episode {k}); "
+          f"resuming to {target}")
+
+    hist_r, params_r = train(_cfg(target, d, resume=True), log_fn=None)
+    assert len(hist_r["reward"]) == target, len(hist_r["reward"])
+
+    straight_dir = tempfile.mkdtemp(prefix="resume_smoke_straight_")
+    hist_s, params_s = train(_cfg(target, straight_dir, ckpt_every=target),
+                             log_fn=None)
+
+    for a, b in zip(jax.tree.leaves(params_s), jax.tree.leaves(params_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for f in ("reward", "cd", "cl"):
+        np.testing.assert_array_equal(hist_s[f], hist_r[f])
+    print(f"RESUME_SMOKE_OK: {target} episodes, params + history bitwise "
+          f"equal to the uninterrupted run")
+
+
+if __name__ == "__main__":
+    main()

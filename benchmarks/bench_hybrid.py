@@ -29,9 +29,12 @@ from repro.core.scaling_model import calibrate_to_paper, fig10_breakdown, \
 
 ARTIFACT = Path(__file__).resolve().parent.parent / "artifacts" \
     / "BENCH_hybrid.json"
+# smoke runs must not clobber the committed full measurement (see
+# bench_kernels.ARTIFACT_SMOKE for the same split)
+ARTIFACT_SMOKE = ARTIFACT.with_name("BENCH_hybrid_smoke.json")
 
 
-def run(smoke: bool = False, artifact: str = str(ARTIFACT)) -> None:
+def run(smoke: bool = False, artifact: str = None) -> None:
     # ---- cost-model half (pure evaluation — cheap at any size) ------------
     m = calibrate_to_paper()
     for r in table1_rows(m):
@@ -59,6 +62,8 @@ def run(smoke: bool = False, artifact: str = str(ARTIFACT)) -> None:
     from repro.cfd.grid import GridConfig
     from repro.core.autotune import autotune, validate_artifact
 
+    if artifact is None:
+        artifact = str(ARTIFACT_SMOKE if smoke else ARTIFACT)
     grid = GridConfig(res=4 if smoke else 8, dt=0.01,
                       poisson_iters=20 if smoke else 50)
     rp = autotune(grid=grid, smoke=smoke, artifact=artifact)
@@ -85,7 +90,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid, 1 timing iteration (CI)")
-    ap.add_argument("--artifact", default=str(ARTIFACT))
+    ap.add_argument("--artifact", default=None,
+                    help="default: BENCH_hybrid.json, or "
+                         "BENCH_hybrid_smoke.json under --smoke")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke, artifact=args.artifact)

@@ -1,5 +1,23 @@
 """Pallas kernel microbenchmarks (interpret mode = correctness-oriented
-timing on CPU; the TPU-target numbers come from the roofline analysis)."""
+timing on CPU; the TPU-target numbers come from the roofline analysis).
+
+The Poisson section is the PR-5 hot-path measurement: packed-checkerboard
+vs full-grid sweep storage at equal iterations on the production grid, plus
+the halo backend's per-exchange message volume.  It lands in
+``artifacts/BENCH_poisson.json`` so the perf trajectory accumulates across
+PRs (aggregate with ``tools/bench_report.py``).
+
+Standalone:  PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke]
+"""
+import json
+import sys
+from pathlib import Path
+
+if __name__ == "__main__":  # standalone: make benchmarks.* / repro.* importable
+    _ROOT = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_ROOT / "src"))
+    sys.path.insert(0, str(_ROOT))
+
 import jax
 import jax.numpy as jnp
 
@@ -11,10 +29,84 @@ from repro.kernels.poisson import ops as poisson_ops
 from repro.kernels.rwkv6 import ops as rwkv_ops
 from repro.models.ssm import wkv6_scan
 
+_ART_DIR = Path(__file__).resolve().parent.parent / "artifacts"
+ARTIFACT = _ART_DIR / "BENCH_poisson.json"
+# smoke runs land in a separate file: the committed BENCH_poisson.json is a
+# full res-8 measurement (the perf-trajectory record README cites) and must
+# not be clobbered by every CI smoke pass
+ARTIFACT_SMOKE = _ART_DIR / "BENCH_poisson_smoke.json"
+
+POISSON_SCHEMA = "repro.bench_poisson/v1"
+
+
+def bench_poisson_layouts(smoke: bool = False, artifact: str = None) -> dict:
+    """Packed vs full-grid sweep storage on the production pressure grid.
+
+    Equal iteration counts and (up to ulp noise) equal residuals — the
+    speedup is pure layout: no masked half-updates, no full-grid padding,
+    half the touched bytes.  Also records the halo backend's per-exchange
+    message volume (single-parity half column vs legacy full column).
+    """
+    from repro.cfd.decomp import halo_exchange_values
+    from repro.cfd.grid import GridConfig
+
+    if artifact is None:
+        artifact = str(ARTIFACT_SMOKE if smoke else ARTIFACT)
+    grid = GridConfig(res=4 if smoke else 8)
+    iters = 40 if smoke else 120
+    t_iters = 2 if smoke else 7
+    rhs = jax.random.normal(jax.random.PRNGKey(0), (grid.ny, grid.nx))
+
+    times, residuals, sols = {}, {}, {}
+    backends = ("full", "packed", "pallas")
+    for backend in backends:
+        fn = lambda r, b=backend: poisson.solve(r, grid.dx, grid.dy,
+                                                iters=iters, backend=b)
+        times[backend] = time_fn(fn, rhs, iters=t_iters)
+        sols[backend] = fn(rhs)
+        residuals[backend] = float(jnp.linalg.norm(
+            poisson.residual(sols[backend], rhs, grid.dx, grid.dy)))
+        emit(f"poisson_{backend}_{iters}it", times[backend] * 1e6,
+             f"{grid.ny}x{grid.nx};res={residuals[backend]:.4g}")
+
+    speedup = times["full"] / times["packed"]
+    max_diff = float(jnp.max(jnp.abs(sols["packed"] - sols["full"])))
+    emit("poisson_packed_speedup", 0.0,
+         f"packed_vs_full={speedup:.2f}x;max_abs_diff={max_diff:.3g}")
+
+    record = {
+        "schema": POISSON_SCHEMA,
+        "grid": {"res": grid.res, "ny": grid.ny, "nx": grid.nx,
+                 "smoke": smoke},
+        "iters": iters,
+        "timing_iters": t_iters,
+        "t_us": {b: times[b] * 1e6 for b in backends},
+        "speedup_packed_vs_full": speedup,
+        "residual_norm": residuals,
+        "max_abs_diff_packed_vs_full": max_diff,
+        "halo_exchange": {
+            "values_per_message_packed": halo_exchange_values(grid.ny),
+            "values_per_message_full": halo_exchange_values(grid.ny,
+                                                            packed=False),
+            "note": "inner_iters=1 packed halos ship one parity per "
+                    "half-sweep: bytes per ppermute halved vs the legacy "
+                    "full-column exchange",
+        },
+    }
+    if artifact:
+        path = Path(artifact)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(record, indent=1))
+    return record
+
 
 def run(smoke: bool = False) -> None:
     it_ref, it_ker = (1, 1) if smoke else (5, 3)
-    # poisson: jnp global SOR vs pallas slab kernel (same iteration count)
+    # poisson: packed vs full-grid jnp sweeps + pallas slab kernel, with the
+    # BENCH_poisson.json artifact
+    bench_poisson_layouts(smoke)
+    # legacy CSV rows: jnp global SOR vs pallas slab kernel (same iteration
+    # count, interpret mode)
     p_it = 20 if smoke else 100
     rhs = jax.random.normal(jax.random.PRNGKey(0), (48, 256))
     t_ref = time_fn(lambda r: poisson.solve(r, 0.05, 0.05, iters=p_it), rhs,
@@ -57,4 +149,15 @@ def run(smoke: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 timing iteration (CI smoke)")
+    ap.add_argument("--only-poisson", action="store_true",
+                    help="run just the Poisson layout bench + artifact")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.only_poisson:
+        bench_poisson_layouts(args.smoke)
+    else:
+        run(smoke=args.smoke)

@@ -3,22 +3,36 @@ lax.ppermute halo exchange — the literal TPU translation of OpenFOAM's MPI
 ranks (the paper's N_ranks axis), as opposed to letting GSPMD auto-partition
 the global stencil (core/runner.make_sharded_cfd_step).
 
-Each device owns an x-slab of the pressure grid, runs ``inner_iters``
-red-black SOR sweeps locally (same block-Jacobi semantics as the Pallas
-kernel), then exchanges one halo column with each neighbour — one
-collective-permute pair per outer iteration, which is exactly the message
-pattern whose cost the paper's Fig. 7 measures.
+Each device owns an x-slab of the pressure grid held in packed-checkerboard
+storage (red/black planes, see cfd/poisson.py), so local sweeps touch only
+the points they update.  Packing also halves the exchange volume: a colored
+half-sweep needs only the *opposite*-parity entries of the neighbour's edge
+column, so every ppermute ships a half-width (ceil(ny/2)) halo instead of a
+full column — the per-message comm cost the paper's Fig. 7 measures, halved.
+
+Two coupling schedules:
+
+  ``inner_iters == 1``  exchange before EVERY colored half-sweep (two
+        half-width ppermute pairs per red+black pair).  The black sweep then
+        sees fresh red values across rank boundaries, which makes the
+        decomposed iteration *exactly* the monolithic red-black sweep — at
+        any rank count, not just n_shards == 1.  Same bytes per sweep pair
+        as the old full-column exchange, half the bytes per message.
+  ``inner_iters > 1``   classic block-Jacobi: one full-edge exchange (both
+        parities, packed into one message pair) per outer round, halos
+        frozen for ``inner_iters`` local sweep pairs — the loose-coupling
+        end of the comm/convergence trade.
 
 ``decomposed_solve`` is the traceable entry point (usable inside jit / vmap /
 scan — it is the ``backend="halo"`` path of ``cfd.poisson.solve`` and runs
 inside the vmapped env step when a plan picks ``n_ranks > 1``);
-``make_decomposed_poisson`` wraps it as a standalone jit'd solver.
+``make_decomposed_poisson`` wraps it as a standalone jit'd solver.  Grids
+whose slab width or height is odd fall back to the legacy full-grid sweeps
+(``packed=False`` forces that path; it keeps the old frozen-halo semantics).
 
-Only the *neighbour* halos are frozen between exchanges (block-Jacobi); the
-domain-edge ghosts (Neumann at the inlet shard, Dirichlet at the outlet
-shard) are recomputed from the live local columns every sweep, exactly like
-the monolithic reference — so at ``n_shards == 1`` with ``inner_iters == 1``
-this reproduces ``poisson.solve`` sweep for sweep.
+The domain-edge ghosts (Neumann at the inlet shard, Dirichlet at the outlet
+shard) are recomputed from the live local planes every sweep, exactly like
+the monolithic reference.
 
 jax 0.4.x caveat: the result keeps its mesh sharding, and *eager* op-by-op
 math on such an array can be silently wrong on the forced-multi-device CPU
@@ -35,6 +49,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.cfd import poisson
 from repro.compat import shard_map
 
 
@@ -63,9 +78,47 @@ def validate_decomposition(mesh, nx: int, axis: str = "model") -> int:
     return n_shards
 
 
+def halo_exchange_values(ny: int, packed: bool = True) -> int:
+    """Scalars shipped per ppermute message: a full edge column for the
+    legacy path, a single-parity half column for the packed path."""
+    return -(-ny // 2) if packed else ny
+
+
+def ppermute_message_shapes(fn, *args, **kw):
+    """Trace ``fn(*args, **kw)`` and return the operand shape of every
+    ``ppermute`` in the jaxpr (recursing through scans / shard_map / cond
+    bodies).  The halo tests use this to pin the exchanged byte count."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kw))(*args)
+    shapes = []
+
+    def sub_jaxprs(v):
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from sub_jaxprs(item)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                shapes.extend(tuple(v.aval.shape) for v in eqn.invars)
+            for v in eqn.params.values():
+                for sub in sub_jaxprs(v):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# legacy full-grid path (odd slab width / height fallback + oracle)
+# ---------------------------------------------------------------------------
+
 def _local_sweeps(p, rhs, left_h, right_h, *, idx, n_shards, dx, dy, omega,
                   inner_iters, sweep0, n_sor, n_pairs, col_offset):
-    """``inner_iters`` red-black sweep pairs on a local slab.
+    """``inner_iters`` full-grid red-black sweep pairs on a local slab.
 
     ``left_h``/``right_h`` are the exchanged neighbour halos, frozen for the
     whole call; the domain-edge ghosts come from the live local columns.
@@ -102,23 +155,10 @@ def _local_sweeps(p, rhs, left_h, right_h, *, idx, n_shards, dx, dy, omega,
     return jax.lax.fori_loop(0, inner_iters, body, p)
 
 
-def decomposed_solve(rhs, p0=None, *, mesh: Mesh, axis: str = "model",
-                     dx: float, dy: float, omega: float = 1.7,
-                     iters: int = 60, inner_iters: int = 4,
-                     polish: int = 10):
-    """x-slab + ppermute halo-exchange pressure solve (traceable).
-
-    Exactly ``iters`` red-black sweep pairs run (matching the reference
-    solver's work at equal ``iters``), grouped into outer rounds of
-    ``inner_iters`` local sweeps each with one halo-column exchange (two
-    ppermutes — the MPI message pair) per round; when ``inner_iters`` does
-    not divide ``iters`` the tail of the last round is masked off.  The
-    last ``polish`` pairs run with omega = 1, mirroring ``poisson.solve``'s
-    Gauss-Seidel tail.
-    """
-    n_shards = validate_decomposition(mesh, rhs.shape[-1], axis)
+def _decomposed_solve_full(rhs, p0, *, mesh, axis, dx, dy, omega, iters,
+                           inner_iters, polish):
+    n_shards = mesh.shape[axis]
     bx = rhs.shape[-1] // n_shards
-    p0 = jnp.zeros_like(rhs) if p0 is None else p0
     outer = -(-iters // inner_iters)
     n_sor = iters - min(polish, iters // 2)
 
@@ -156,6 +196,146 @@ def decomposed_solve(rhs, p0=None, *, mesh: Mesh, axis: str = "model",
                    in_specs=(P(None, axis), P(None, axis)),
                    out_specs=P(None, axis), check_vma=True)
     return fn(p0, rhs)
+
+
+# ---------------------------------------------------------------------------
+# packed-checkerboard path (the default)
+# ---------------------------------------------------------------------------
+
+def _decomposed_solve_packed(rhs, p0, *, mesh, axis, dx, dy, omega, iters,
+                             inner_iters, polish):
+    n_shards = mesh.shape[axis]
+    ny = rhs.shape[-2]
+    n_sor = iters - min(polish, iters // 2)
+    dx2, dy2 = dx * dx, dy * dy
+    inv_diag = 1.0 / (2.0 / dx2 + 2.0 / dy2)
+    fwd = [(k, k + 1) for k in range(n_shards - 1)]
+    bwd = [(k + 1, k) for k in range(n_shards - 1)]
+
+    def solve_local(p, rhs):
+        idx = jax.lax.axis_index(axis)
+        last = n_shards - 1
+        # slab width is even, so every slab starts on an even global column
+        # and local packing parity equals global parity
+        red, black = poisson.pack_checkerboard(p)
+        rhs_r, rhs_b = poisson.pack_checkerboard(rhs)
+        row_odd = (jnp.arange(ny) % 2 == 1)[:, None]
+
+        def exchange(col, perm):
+            if n_shards == 1:
+                return jnp.zeros_like(col)
+            return jax.lax.ppermute(col, axis, perm)
+
+        def scatter(half, rows):
+            """Half-column ghost: received single-parity values land on their
+            row parity; the other rows are never selected by the sweep."""
+            return jnp.zeros((ny, 1), half.dtype).at[rows::2, :].set(half)
+
+        def red_half(red, black, lg, rg, om):
+            return poisson.packed_half_sweep(
+                red, black, rhs_r, lg, rg,
+                *poisson.packed_ghost_rows(red, black),
+                row_odd, om, dx2, dy2, inv_diag)
+
+        def black_half(red, black, lg, rg, om):
+            return poisson.packed_half_sweep(
+                black, red, rhs_b, lg, rg,
+                *poisson.packed_ghost_rows(black, red),
+                ~row_odd, om, dx2, dy2, inv_diag)
+
+        def edge_ghosts(recv_l, rows_l, recv_r, rows_r, own):
+            lg = jnp.where(idx == 0, own[:, :1], scatter(recv_l, rows_l))
+            rg = jnp.where(idx == last, -own[:, -1:], scatter(recv_r, rows_r))
+            return lg, rg
+
+        if inner_iters == 1:
+            # tight coupling: half-width exchange before every half-sweep —
+            # the decomposed iteration IS the monolithic red-black sweep
+            def pair(i, planes):
+                red, black = planes
+                om = jnp.where(i < n_sor, omega, 1.0)
+                # red updates sit on even rows of even columns / odd rows of
+                # odd columns, so their west/east ghosts are the neighbour's
+                # BLACK edge entries: even rows from the left, odd from the
+                # right (and mirrored parities for the black update)
+                lg, rg = edge_ghosts(exchange(black[0::2, -1:], fwd), 0,
+                                     exchange(black[1::2, :1], bwd), 1, red)
+                red = red_half(red, black, lg, rg, om)
+                lg, rg = edge_ghosts(exchange(red[1::2, -1:], fwd), 1,
+                                     exchange(red[0::2, :1], bwd), 0, black)
+                black = black_half(red, black, lg, rg, om)
+                return red, black
+
+            red, black = jax.lax.fori_loop(0, iters, pair, (red, black))
+        else:
+            # block-Jacobi: both parities of the edge columns cross once per
+            # outer round (one packed message pair), then stay frozen
+            outer = -(-iters // inner_iters)
+            h = ny // 2
+
+            def outer_body(i, planes):
+                red, black = planes
+                from_left = exchange(
+                    jnp.concatenate([black[0::2, -1:], red[1::2, -1:]],
+                                    axis=0), fwd)
+                from_right = exchange(
+                    jnp.concatenate([black[1::2, :1], red[0::2, :1]],
+                                    axis=0), bwd)
+
+                def body(j, planes):
+                    red, black = planes
+                    om = jnp.where(i * inner_iters + j < n_sor, omega, 1.0)
+                    active = i * inner_iters + j < iters
+                    lg, rg = edge_ghosts(from_left[:h], 0,
+                                         from_right[:h], 1, red)
+                    red_new = red_half(red, black, lg, rg, om)
+                    red = jnp.where(active, red_new, red)
+                    lg, rg = edge_ghosts(from_left[h:], 1,
+                                         from_right[h:], 0, black)
+                    black_new = black_half(red, black, lg, rg, om)
+                    black = jnp.where(active, black_new, black)
+                    return red, black
+
+                return jax.lax.fori_loop(0, inner_iters, body, (red, black))
+
+            red, black = jax.lax.fori_loop(0, outer, outer_body, (red, black))
+        return poisson.unpack_checkerboard(red, black)
+
+    # check_vma=True is load-bearing — see _decomposed_solve_full
+    fn = shard_map(solve_local, mesh=mesh,
+                   in_specs=(P(None, axis), P(None, axis)),
+                   out_specs=P(None, axis), check_vma=True)
+    return fn(p0, rhs)
+
+
+def decomposed_solve(rhs, p0=None, *, mesh: Mesh, axis: str = "model",
+                     dx: float, dy: float, omega: float = 1.7,
+                     iters: int = 60, inner_iters: int = 4,
+                     polish: int = 10, packed: bool = None):
+    """x-slab + ppermute halo-exchange pressure solve (traceable).
+
+    Exactly ``iters`` red-black sweep pairs run (matching the reference
+    solver's work at equal ``iters``); the last ``polish`` pairs run with
+    omega = 1, mirroring ``poisson.solve``'s Gauss-Seidel tail.  Sweeps run
+    in packed-checkerboard storage with half-width single-parity halos
+    whenever the slab width and height are even (``packed=None`` auto;
+    ``packed=False`` forces the legacy full-grid frozen-halo path).  See
+    the module docstring for the two ``inner_iters`` coupling schedules.
+    """
+    n_shards = validate_decomposition(mesh, rhs.shape[-1], axis)
+    ny = rhs.shape[-2]
+    bx = rhs.shape[-1] // n_shards
+    if packed is None:
+        packed = bx % 2 == 0 and ny % 2 == 0
+    elif packed and (bx % 2 or ny % 2):
+        raise ValueError(
+            f"packed halo sweeps need an even slab width and height, got "
+            f"bx={bx}, ny={ny} (nx={rhs.shape[-1]} over {n_shards} ranks); "
+            f"pass packed=False or use an even-slab grid")
+    p0 = jnp.zeros_like(rhs) if p0 is None else p0
+    impl = _decomposed_solve_packed if packed else _decomposed_solve_full
+    return impl(rhs, p0, mesh=mesh, axis=axis, dx=dx, dy=dy, omega=omega,
+                iters=iters, inner_iters=inner_iters, polish=polish)
 
 
 def make_decomposed_poisson(mesh: Mesh, nx: int, *, axis: str = "model",

@@ -107,16 +107,17 @@ def _pad_v(v):
 # spatial operators
 # ---------------------------------------------------------------------------
 
-def _advect_diffuse_u(u, v, cfg: GridConfig, re):
-    """du/dt = -u du/dx - v du/dy + (1/Re) lap(u) at interior u-faces."""
+def _advect_diffuse_u(up, vp, cfg: GridConfig, re):
+    """du/dt = -u du/dx - v du/dy + (1/Re) lap(u) at interior u-faces.
+
+    ``up``/``vp`` are the padded fields from ``_pad_u``/``_pad_v`` — computed
+    once per ``step`` and shared with ``_advect_diffuse_v``."""
     dx, dy = cfg.dx, cfg.dy
-    up = _pad_u(u)                                       # (ny+2, nx+3)
     uc = up[1:-1, 1:-1]                                  # == u
     # neighbors
     ul, ur = up[1:-1, :-2], up[1:-1, 2:]
     ub, ut = up[:-2, 1:-1], up[2:, 1:-1]
     # v interpolated to u-faces: average 4 surrounding v values
-    vp = _pad_v(v)                                       # (ny+3, nx+2)
     # v faces adjacent to u face (j, i): v[j, i-1], v[j, i], v[j+1, i-1], v[j+1, i]
     v_at_u = 0.25 * (vp[1:-2, :-1] + vp[1:-2, 1:] + vp[2:-1, :-1] + vp[2:-1, 1:])
     # blended central/upwind advection (upwind share = cfg.upwind_blend)
@@ -130,13 +131,11 @@ def _advect_diffuse_u(u, v, cfg: GridConfig, re):
     return -adv + lap / re
 
 
-def _advect_diffuse_v(u, v, cfg: GridConfig, re):
+def _advect_diffuse_v(up, vp, cfg: GridConfig, re):
     dx, dy = cfg.dx, cfg.dy
-    vp = _pad_v(v)                                       # (ny+3, nx+2)
     vc = vp[1:-1, 1:-1]                                  # == v
     vl, vr = vp[1:-1, :-2], vp[1:-1, 2:]
     vb, vt = vp[:-2, 1:-1], vp[2:, 1:-1]
-    up = _pad_u(u)                                       # (ny+2, nx+3)
     # u interpolated to v-faces (j, i): u[j-1, i], u[j-1, i+1], u[j, i], u[j, i+1]
     u_at_v = 0.25 * (up[:-1, 1:-2] + up[:-1, 2:-1] + up[1:, 1:-2] + up[1:, 2:-1])
     b = cfg.upwind_blend
@@ -173,15 +172,18 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
     act_mode: actuation blend in [0, 1] — 0 = synthetic jets, 1 = rotary
     cylinder control; traced when given, else jets.  Intermediate values
     blend the two target fields (only 0/1 are physical scenarios).
-    backend: Poisson backend ("reference" | "pallas" | "halo"); "halo" needs
+    backend: Poisson backend ("reference" | "packed" | "full" | "pallas" |
+    "halo"); "reference" (the default) runs the packed-checkerboard sweep
+    on even-width grids and the full-grid oracle otherwise; "halo" needs
     ``mesh`` and runs the pressure solve as explicit x-slabs with ppermute
     halo exchange over the mesh "model" axis — the paper's N_ranks > 1
     spatial decomposition.  ``use_pallas`` is a deprecated alias.
     halo_inner: local sweeps per halo exchange on the "halo" backend.  The
-    default 1 exchanges every red-black pair (the MPI-per-iteration pattern
-    whose cost the paper's Fig. 7 measures); looser coupling leaves
-    slab-boundary pressure error that the projection feedback amplifies
-    over hundreds of steps.
+    default 1 exchanges the updated parity before every colored half-sweep
+    (half-width messages — the MPI-per-iteration pattern whose cost the
+    paper's Fig. 7 measures — making the decomposed iteration exactly the
+    monolithic sweep); looser coupling leaves slab-boundary pressure error
+    that the projection feedback amplifies over hundreds of steps.
     """
     backend = poisson.resolve_backend(backend, use_pallas)
     ga = GeomArrays(*geom_arrays)
@@ -191,9 +193,11 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
         re = cfg.re
 
     u, v, p = state
-    # 1. advection-diffusion (explicit Euler)
-    u_star = u + dt * _advect_diffuse_u(u, v, cfg, re)
-    v_star = v + dt * _advect_diffuse_v(u, v, cfg, re)
+    # 1. advection-diffusion (explicit Euler).  The padded fields are shared
+    # by both momentum updates (each previously re-padded both u and v).
+    up, vp = _pad_u(u), _pad_v(v)
+    u_star = u + dt * _advect_diffuse_u(up, vp, cfg, re)
+    v_star = v + dt * _advect_diffuse_v(up, vp, cfg, re)
 
     # 2. immersed boundary: implicit volume penalization toward target.
     # Penalization acts on the solid (target 0) AND the actuation band
@@ -217,15 +221,17 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
     # momentum exchange -> force on the body (reaction), per unit density
     fx = -jnp.sum((u_pen - u_star) / dt) * cfg.dx * cfg.dy
     fy = -jnp.sum((v_pen - v_star) / dt) * cfg.dx * cfg.dy
-    u_star, v_star = u_pen, v_pen
 
-    u_star = _apply_bc_u(u_star, inlet_u)
-    v_star = _apply_bc_v(v_star)
-
-    # 3. global mass correction at the outlet (penalization + outflow BC)
-    influx = jnp.sum(u_star[:, 0]) * cfg.dy
-    outflux = jnp.sum(u_star[:, -1]) * cfg.dy
-    u_star = u_star.at[:, -1].add((influx - outflux) / (cfg.ny * cfg.dy))
+    # 3. boundary conditions + global outlet mass correction, fused into one
+    # pass over each field: the inlet BC pins column 0 to inlet_u (so the
+    # influx is just its sum), the outlet BC copies column -2, and the mass
+    # correction shifts that same column — one scatter chain per field
+    # instead of penalize -> BC -> correct as three.
+    influx = jnp.sum(inlet_u) * cfg.dy
+    outflux = jnp.sum(u_pen[:, -2]) * cfg.dy
+    out_col = u_pen[:, -2] + (influx - outflux) / (cfg.ny * cfg.dy)
+    u_star = u_pen.at[:, 0].set(inlet_u).at[:, -1].set(out_col)
+    v_star = _apply_bc_v(v_pen)
 
     # 4. projection
     rhs = divergence(u_star, v_star, cfg) / dt

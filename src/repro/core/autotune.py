@@ -15,7 +15,7 @@ result executable:
      the paper (``scaling_model.least_squares_fit``).
   3. ``optimize_plan`` brute-forces the divisor lattice on the refit model.
   4. The result is a ``ResolvedPlan`` — (n_envs, n_ranks, mesh shape,
-     Poisson backend) — plus a JSON artifact (schema ``repro.autotune/v1``)
+     Poisson backend) — plus a JSON artifact (schema ``repro.autotune/v2``)
      of measured-vs-predicted component times, the host analogue of the
      paper's Table I / Fig. 7 columns.
 
@@ -36,7 +36,8 @@ import numpy as np
 from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
     optimize_plan
 
-AUTOTUNE_SCHEMA = "repro.autotune/v1"
+# v2: measured.t_poisson_layouts + plan.layout became required fields
+AUTOTUNE_SCHEMA = "repro.autotune/v2"
 
 
 # ---------------------------------------------------------------------------
@@ -50,10 +51,14 @@ class ResolvedPlan:
     choice.  ``measurements`` carries the JSON-artifact dict when the plan
     came from ``autotune``."""
     plan: ParallelPlan
-    backend: str                       # "reference" | "pallas" | "halo"
+    backend: str                       # member of cfd.poisson.BACKENDS
     model: CostModel = field(default_factory=CostModel)
     source: str = "explicit"           # "explicit" | "auto"
     measurements: Optional[Dict[str, Any]] = None
+    # single-rank sweep storage layout ("packed" | "full"); autotune sets it
+    # from host timings, explicit plans keep the packed default (it is never
+    # slower in practice and bit-compatible with the full-grid oracle)
+    layout: str = "packed"
 
     @property
     def n_envs(self) -> int:
@@ -75,7 +80,8 @@ class ResolvedPlan:
         return (f"plan[{self.source}]: n_envs x n_ranks = "
                 f"{self.n_envs} x {self.n_ranks} of {self.plan.n_total} "
                 f"workers (utilization {self.plan.utilization:.0%}), "
-                f"poisson backend '{self.backend}', mesh "
+                f"poisson backend '{self.backend}' "
+                f"(layout '{self.layout}'), mesh "
                 f"(data, model) = {self.mesh_shape}")
 
 
@@ -157,6 +163,9 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
       t_step_ranks   {n_ranks: solver-step time}; n_ranks=1 is the
                      reference backend, >1 the halo backend on a (1, r)
                      mesh — the paper's Fig. 7 measurement
+      t_poisson_layouts  {layout: time} for one pressure solve in packed vs
+                     full-grid checkerboard storage on this grid — the
+                     measured basis for the plan's single-rank layout pick
       t_policy       one policy inference (single obs)
       t_update       one PPO update on an (n_envs_probe * horizon) batch
       io             bytes + seconds for one episode spill through the
@@ -165,7 +174,7 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
     """
     import jax
     import jax.numpy as jnp
-    from repro.cfd import solver
+    from repro.cfd import poisson, solver
     from repro.cfd.grid import GridConfig, build_geometry
     from repro.cfd.probes import layout_size
     from repro.drl import networks
@@ -196,6 +205,21 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
             grid, ga, s, jnp.float32(0.0), backend=b, mesh=m)
         t_step_ranks[r] = _time(lambda f=fn: f(st), iters=iters)
         step_backends[r] = backend
+
+    # -- sweep storage layout: packed checkerboard vs full-grid oracle ------
+    # Timed on the pressure solve alone (the hot spot the layout changes),
+    # at the grid's own iteration budget.
+    rhs = jax.random.normal(jax.random.PRNGKey(seed), (grid.ny, grid.nx))
+    t_poisson_layouts: Dict[str, float] = {}
+    for layout in ("packed", "full"):
+        if layout == "packed" and grid.nx % 2:
+            continue
+        t_poisson_layouts[layout] = _time(
+            lambda r, b=layout: poisson.solve(r, grid.dx, grid.dy,
+                                              iters=grid.poisson_iters,
+                                              omega=grid.poisson_omega,
+                                              backend=b),
+            rhs, iters=iters)
 
     # -- policy inference + PPO update --------------------------------------
     obs_dim = layout_size("ring149")
@@ -244,6 +268,7 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
         "n_envs_probe": n_envs_probe,
         "t_step_ranks": t_step_ranks,
         "t_step_backends": step_backends,
+        "t_poisson_layouts": t_poisson_layouts,
         "t_policy": t_policy,
         "t_update": t_update,
         "io": {"bytes_per_episode_env": nbytes / n_envs_probe,
@@ -349,6 +374,13 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
                                                       io_bytes),
                                      -p.utilization, p.n_ranks))
     backend = default_backend(best.n_ranks, grid.nx)
+    # the measured layout pick: on single-rank CPU plans the chosen layout
+    # IS the backend (both are valid poisson.solve backends); halo/pallas
+    # plans run packed internally whenever the grid allows it
+    layouts = measured["t_poisson_layouts"]
+    layout = min(layouts, key=layouts.get) if layouts else "full"
+    if backend == "reference":
+        backend = layout
 
     steps = {int(k): float(v) for k, v in measured["t_step_ranks"].items()}
     predicted = {r: model.t_step(r) for r in steps}
@@ -370,6 +402,7 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
             "mesh_shape": list(best.mesh_shape),
             "utilization": best.utilization,
             "backend": backend,
+            "layout": layout,
         },
         "candidates": [
             {"n_envs": p.n_envs, "n_ranks": p.n_ranks,
@@ -383,7 +416,7 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(record, indent=1, default=float))
     return ResolvedPlan(plan=best, backend=backend, model=model,
-                        source="auto", measurements=record)
+                        source="auto", measurements=record, layout=layout)
 
 
 def validate_artifact(record: Dict[str, Any]) -> None:
@@ -395,12 +428,13 @@ def validate_artifact(record: Dict[str, Any]) -> None:
     for key in ("measured", "fitted", "predicted", "plan", "candidates"):
         if key not in record:
             raise ValueError(f"artifact missing {key!r}")
-    for key in ("t_step_ranks", "t_policy", "t_update", "io"):
+    for key in ("t_step_ranks", "t_poisson_layouts", "t_policy", "t_update",
+                "io"):
         if key not in record["measured"]:
             raise ValueError(f"artifact.measured missing {key!r}")
     plan = record["plan"]
     for key in ("n_total", "n_envs", "n_ranks", "mesh_shape", "utilization",
-                "backend"):
+                "backend", "layout"):
         if key not in plan:
             raise ValueError(f"artifact.plan missing {key!r}")
     if plan["n_envs"] * plan["n_ranks"] > plan["n_total"]:

@@ -85,3 +85,91 @@ def rb_sor_slabs(p, rhs, *, dx: float, dy: float, omega: float,
         out_shape=jax.ShapeDtypeStruct((ny, nx), p.dtype),
         interpret=interpret,
     )(p, p, p, rhs)
+
+
+# ---------------------------------------------------------------------------
+# packed-checkerboard slab smoother
+# ---------------------------------------------------------------------------
+#
+# Red and black points live as two (ny, nx//2) planes (layout documented in
+# cfd/poisson.py: red[j, k] = p[j, 2k + j%2]).  Each program instance keeps
+# BOTH planes of its slab VMEM-resident across ``inner_iters`` sweep pairs,
+# touching only the points it updates — half the FLOPs and half the VMEM
+# traffic of the masked full-grid sweep above.  The single-parity ghost
+# columns a half-sweep needs are exactly the neighbour slab's packed edge
+# columns (the entries on the unused row parity are never selected), so the
+# same 3-index-map halo trick delivers half-width halos for free.  The
+# half-sweep body itself is shared with the jnp backends (pure jnp, so it
+# lowers inside the kernel unchanged) — one stencil implementation for
+# packed reference, halo, and pallas.
+
+def rb_sor_packed_slab_kernel(r_ref, rl_ref, rr_ref, b_ref, bl_ref, br_ref,
+                              rhs_r_ref, rhs_b_ref, out_r_ref, out_b_ref, *,
+                              nslabs: int, bxp: int, dx: float, dy: float,
+                              omega: float, inner_iters: int):
+    i = pl.program_id(0)
+    red = r_ref[...]
+    black = b_ref[...]
+    rhs_r = rhs_r_ref[...]
+    rhs_b = rhs_b_ref[...]
+    ny = red.shape[0]
+    dx2, dy2 = dx * dx, dy * dy
+    inv_diag = 1.0 / (2.0 / dx2 + 2.0 / dy2)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (ny, bxp), 0)
+    row_odd = (jj % 2 == 1)
+
+    # Single-parity halo ghost columns, frozen for the call (block-Jacobi).
+    # A red update's west/east neighbours are black, so its interior ghosts
+    # are the neighbour's BLACK edge columns (and vice versa); at the domain
+    # edges the ghost parity equals the update parity (Neumann inlet = own
+    # first column, Dirichlet outlet = negated own last column).
+    r_lg = jnp.where(i == 0, red[:, :1], bl_ref[...][:, -1:])
+    r_rg = jnp.where(i == nslabs - 1, -red[:, -1:], br_ref[...][:, :1])
+    b_lg = jnp.where(i == 0, black[:, :1], rl_ref[...][:, -1:])
+    b_rg = jnp.where(i == nslabs - 1, -black[:, -1:], rr_ref[...][:, :1])
+
+    from repro.cfd.poisson import packed_ghost_rows, packed_half_sweep
+
+    def body(_, planes):
+        red, black = planes
+        red = packed_half_sweep(
+            red, black, rhs_r, r_lg, r_rg, *packed_ghost_rows(red, black),
+            row_odd, omega, dx2, dy2, inv_diag)
+        black = packed_half_sweep(
+            black, red, rhs_b, b_lg, b_rg, *packed_ghost_rows(black, red),
+            ~row_odd, omega, dx2, dy2, inv_diag)
+        return red, black
+
+    out_r, out_b = jax.lax.fori_loop(0, inner_iters, body, (red, black))
+    out_r_ref[...] = out_r
+    out_b_ref[...] = out_b
+
+
+def rb_sor_slabs_packed(red, black, rhs_r, rhs_b, *, dx: float, dy: float,
+                        omega: float, nslabs: int, inner_iters: int,
+                        interpret: bool = True):
+    """One outer block-Jacobi iteration on packed planes, all slabs parallel.
+
+    red/black/rhs_r/rhs_b: (ny, nx//2) planes from
+    ``cfd.poisson.pack_checkerboard``.  The full-grid slab width must be
+    even (so every slab starts on an even column and the packed layout
+    parity is uniform across slabs)."""
+    ny, w = red.shape
+    assert w % nslabs == 0, (w, nslabs)
+    bxp = w // nslabs           # packed slab width == full slab width // 2
+    kern = functools.partial(rb_sor_packed_slab_kernel, nslabs=nslabs,
+                             bxp=bxp, dx=dx, dy=dy, omega=omega,
+                             inner_iters=inner_iters)
+    slab = pl.BlockSpec((ny, bxp), lambda i: (0, i))
+    left = pl.BlockSpec((ny, bxp), lambda i: (0, jnp.maximum(i - 1, 0)))
+    right = pl.BlockSpec((ny, bxp),
+                         lambda i: (0, jnp.minimum(i + 1, nslabs - 1)))
+    plane = jax.ShapeDtypeStruct((ny, w), red.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(nslabs,),
+        in_specs=[slab, left, right, slab, left, right, slab, slab],
+        out_specs=[slab, slab],
+        out_shape=[plane, plane],
+        interpret=interpret,
+    )(red, red, red, black, black, black, rhs_r, rhs_b)

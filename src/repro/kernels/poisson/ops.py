@@ -1,4 +1,13 @@
-"""jit'd wrapper: full pressure solve built from the Pallas slab smoother."""
+"""jit'd wrappers: full pressure solves built from the Pallas slab smoothers.
+
+``rb_sor`` is the drop-in full-grid entry point; since the packed-
+checkerboard rewrite it defaults to the packed slab kernel (both planes
+VMEM-resident per slab, half the FLOPs/traffic) with ``packed=False``
+keeping the original full-grid slab kernel for comparison.  ``rb_sor_planes``
+is the plane-level loop ``cfd.poisson.solve`` composes with its packed
+polish sweeps, so the pallas backend never round-trips through the full-grid
+layout mid-solve.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,24 +15,63 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.poisson.kernel import rb_sor_slabs
+from repro.kernels.poisson.kernel import rb_sor_slabs, rb_sor_slabs_packed
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pick_nslabs(nx: int) -> int:
+    """Widest slab count keeping (ny, bx) around <= 512 lanes with bx even."""
+    nslabs = max(1, nx // 512)
+    while nx % nslabs or (nx // nslabs) % 2:
+        nslabs -= 1
+    return nslabs
+
+
 @functools.partial(jax.jit,
                    static_argnames=("dx", "dy", "iters", "omega", "nslabs",
                                     "inner_iters", "interpret"))
+def rb_sor_planes(red, black, rhs_r, rhs_b, dx, dy, *, iters: int = 60,
+                  omega: float = 1.7, nslabs: int = 0, inner_iters: int = 4,
+                  interpret: bool = None):
+    """``iters`` SOR iterations on packed planes via the packed slab kernel.
+
+    Planes come from ``cfd.poisson.pack_checkerboard``; global iterations map
+    to outer block-Jacobi rounds of ``inner_iters`` VMEM-resident sweep pairs
+    each.  Returns the smoothed (red, black) planes — callers that need the
+    full grid unpack at their own boundary."""
+    w = red.shape[1]
+    if interpret is None:
+        interpret = not _on_tpu()
+    if nslabs == 0:
+        nslabs = _pick_nslabs(2 * w)
+    outer = -(-iters // inner_iters) if iters > 0 else 0
+
+    def body(_, planes):
+        return rb_sor_slabs_packed(*planes, rhs_r, rhs_b, dx=float(dx),
+                                   dy=float(dy), omega=omega, nslabs=nslabs,
+                                   inner_iters=inner_iters,
+                                   interpret=interpret)
+
+    return jax.lax.fori_loop(0, outer, body, (red, black))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dx", "dy", "iters", "omega", "nslabs",
+                                    "inner_iters", "interpret", "packed"))
 def rb_sor(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7, p0=None,
-           nslabs: int = 0, inner_iters: int = 4, interpret: bool = None):
+           nslabs: int = 0, inner_iters: int = 4, interpret: bool = None,
+           packed: bool = True):
     """Drop-in replacement for cfd.poisson.solve backed by the Pallas kernel.
 
     ``iters`` global SOR iterations are mapped to outer block-Jacobi rounds of
-    ``inner_iters`` VMEM-resident sweeps each.
+    ``inner_iters`` VMEM-resident sweeps each.  ``packed=True`` (default)
+    runs the packed-checkerboard slab kernel; ``packed=False`` keeps the
+    original full-grid slab kernel (the masked-update oracle).
     """
-    ny, nx = rhs.shape
+    nx = rhs.shape[1]
     if nx % 2:
         raise ValueError(
             f"rb_sor requires an even grid width for checkerboard slab "
@@ -32,11 +80,17 @@ def rb_sor(rhs, dx, dy, *, iters: int = 60, omega: float = 1.7, p0=None,
     if interpret is None:
         interpret = not _on_tpu()
     if nslabs == 0:
-        # pick the widest slab that keeps (ny, bx) around <= 512 lanes
-        nslabs = max(1, nx // 512)
-        while nx % nslabs or (nx // nslabs) % 2:
-            nslabs -= 1
+        nslabs = _pick_nslabs(nx)
     p = jnp.zeros_like(rhs) if p0 is None else p0
+
+    if packed:
+        from repro.cfd.poisson import pack_checkerboard, unpack_checkerboard
+        planes = rb_sor_planes(*pack_checkerboard(p), *pack_checkerboard(rhs),
+                               dx, dy, iters=iters, omega=omega,
+                               nslabs=nslabs, inner_iters=inner_iters,
+                               interpret=interpret)
+        return unpack_checkerboard(*planes)
+
     outer = -(-iters // inner_iters)
 
     def body(_, p):

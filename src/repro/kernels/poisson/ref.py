@@ -1,8 +1,12 @@
-"""Pure-jnp oracle for the Poisson slab smoother.
+"""Pure-jnp oracle for the Poisson slab smoothers.
 
-``rb_sor_slabs_ref`` reproduces the kernel's *exact* semantics (block-Jacobi
-outer iteration with stale halos, red-black SOR inner sweeps) for bitwise-level
-comparison; ``solve_ref`` is the globally-coupled solver from cfd/poisson.py
+``rb_sor_slabs_ref`` reproduces the full-grid kernel's *exact* semantics
+(block-Jacobi outer iteration with stale halos, red-black SOR inner sweeps)
+for bitwise-level comparison; ``rb_sor_slabs_packed_ref`` is the same oracle
+lifted to the packed-checkerboard plane interface (the values a frozen
+full-width halo provides to each colored half-sweep are identical to the
+packed kernel's single-parity ghosts, so the full-grid oracle doubles as the
+packed one); ``solve_ref`` is the globally-coupled solver from cfd/poisson.py
 used for solution-level convergence tests.
 """
 from __future__ import annotations
@@ -49,3 +53,15 @@ def rb_sor_slabs_ref(p, rhs, *, dx, dy, omega, nslabs, inner_iters):
         return jax.lax.fori_loop(0, inner_iters, body, pi)
 
     return jnp.concatenate([slab(i) for i in range(nslabs)], axis=1)
+
+
+def rb_sor_slabs_packed_ref(red, black, rhs_r, rhs_b, *, dx, dy, omega,
+                            nslabs, inner_iters):
+    """Plane-level oracle for ``kernel.rb_sor_slabs_packed``: run the
+    full-grid slab oracle on the unpacked fields and re-pack."""
+    from repro.cfd.poisson import pack_checkerboard, unpack_checkerboard
+    p = unpack_checkerboard(red, black)
+    rhs = unpack_checkerboard(rhs_r, rhs_b)
+    out = rb_sor_slabs_ref(p, rhs, dx=dx, dy=dy, omega=omega, nslabs=nslabs,
+                           inner_iters=inner_iters)
+    return pack_checkerboard(out)

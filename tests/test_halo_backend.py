@@ -58,7 +58,7 @@ def test_halo_rank1_exact_equivalence():
 def test_halo_multirank_parity_vs_reference_and_pallas():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.cfd import poisson
+        from repro.cfd import decomp, poisson
         from repro.kernels.poisson import ops as poisson_ops
         from repro.launch.mesh import mesh_for_plan
         rhs = jax.random.normal(jax.random.PRNGKey(3), (34, 176))
@@ -67,6 +67,9 @@ def test_halo_multirank_parity_vs_reference_and_pallas():
         ref = np.asarray(poisson.solve(rhs, 0.125, 0.12, iters=400))
         scale = np.abs(ref).max()
         for r in (2, 4):
+            # packed halo_inner=1 exchanges the updated parity before every
+            # half-sweep, so the decomposed iteration IS the monolithic
+            # red-black sweep — ulp-level agreement at ANY rank count
             mesh = mesh_for_plan((1, r))
             h = np.asarray(poisson.solve(rhs, 0.125, 0.12, iters=400,
                                          backend="halo", mesh=mesh,
@@ -75,21 +78,59 @@ def test_halo_multirank_parity_vs_reference_and_pallas():
                 jnp.asarray(h), rhs, 0.125, 0.12))))
             assert res < 0.05 * res0, (r, res / res0)
             rel = np.abs(h - ref).max() / scale
-            assert rel < 0.08, (r, rel)      # calibrated: 0.025 / 0.037
-        # same block-Jacobi semantics as the Pallas slab smoother: 2 slabs,
-        # refresh every pair, no polish -> near-identical iterates
+            assert rel < 1e-5, (r, rel)      # calibrated: ~4e-7 (1 ulp)
+        # the legacy full-grid path keeps the old block-Jacobi semantics of
+        # the Pallas slab smoother: 2 slabs, refresh every pair, no polish
+        # -> near-identical iterates
         pal = np.asarray(poisson_ops.rb_sor(rhs, 0.125, 0.12, iters=200,
                                             omega=1.7, nslabs=2,
-                                            inner_iters=1, interpret=True))
-        h2 = np.asarray(poisson.solve(rhs, 0.125, 0.12, iters=200,
-                                      backend="halo", polish=0,
-                                      mesh=mesh_for_plan((1, 2)),
-                                      halo_inner=1))
+                                            inner_iters=1, interpret=True,
+                                            packed=False))
+        h2 = np.asarray(decomp.decomposed_solve(
+            rhs, mesh=mesh_for_plan((1, 2)), dx=0.125, dy=0.12, iters=200,
+            polish=0, inner_iters=1, packed=False))
         rel = np.abs(h2 - pal).max() / np.abs(pal).max()
         assert rel < 1e-4, rel               # calibrated: 2.6e-5
+        # and the packed slab kernel agrees with the unpacked one
+        pal_p = np.asarray(poisson_ops.rb_sor(rhs, 0.125, 0.12, iters=200,
+                                              omega=1.7, nslabs=2,
+                                              inner_iters=1, interpret=True))
+        rel = np.abs(pal_p - pal).max() / np.abs(pal).max()
+        assert rel < 1e-4, rel               # calibrated: 7.2e-7
         print("PARITY_OK")
     """)
     assert "PARITY_OK" in out
+
+
+def test_halo_packed_exchange_bytes_halved():
+    """Acceptance criterion: the packed halo backend's per-exchange message
+    is half-width — every ppermute operand in the traced program ships
+    ceil(ny/2) scalars, where the legacy full-grid path ships ny — and the
+    loose-coupling (inner_iters > 1) rounds keep the full-column volume in
+    ONE message pair per round."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.cfd import decomp
+        from repro.launch.mesh import mesh_for_plan
+        rhs = jax.random.normal(jax.random.PRNGKey(0), (34, 176))
+        mesh = mesh_for_plan((1, 4))
+
+        def shapes(**kw):
+            return set(decomp.ppermute_message_shapes(
+                lambda r: decomp.decomposed_solve(
+                    r, mesh=mesh, dx=0.125, dy=0.12, iters=60, **kw), rhs))
+
+        packed = shapes(inner_iters=1)
+        legacy = shapes(inner_iters=1, packed=False)
+        jacobi = shapes(inner_iters=4)
+        assert packed == {(17, 1)}, packed       # ny//2: bytes halved
+        assert legacy == {(34, 1)}, legacy       # ny: the old full column
+        assert jacobi == {(34, 1)}, jacobi       # both parities, one message
+        assert decomp.halo_exchange_values(34) * 2 \\
+            == decomp.halo_exchange_values(34, packed=False)
+        print("BYTES_OK")
+    """)
+    assert "BYTES_OK" in out
 
 
 def test_halo_engine_mixed_scenario_batch():

@@ -9,8 +9,9 @@ from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.poisson import ops as poisson_ops
-from repro.kernels.poisson.kernel import rb_sor_slabs
-from repro.kernels.poisson.ref import rb_sor_slabs_ref
+from repro.kernels.poisson.kernel import rb_sor_slabs, rb_sor_slabs_packed
+from repro.kernels.poisson.ref import rb_sor_slabs_packed_ref, \
+    rb_sor_slabs_ref
 from repro.kernels.rwkv6 import ops as rwkv_ops
 from repro.kernels.rwkv6.kernel import wkv6_bhsn
 from repro.kernels.rwkv6.ref import wkv6_ref
@@ -36,6 +37,43 @@ def test_poisson_kernel_matches_ref(ny, nx, nslabs, dtype):
                          inner_iters=3)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("ny,nx,nslabs,inner", [(16, 64, 2, 3),
+                                                (48, 256, 4, 4),
+                                                (40, 160, 5, 2),
+                                                # odd ny + single slab
+                                                (33, 64, 2, 1), (7, 16, 1, 2)])
+def test_poisson_packed_kernel_matches_refs(ny, nx, nslabs, inner):
+    """The packed-plane slab kernel matches both the plane-level oracle and
+    the unpacked full-grid slab kernel (same block-Jacobi schedule)."""
+    key = jax.random.PRNGKey(ny * nx)
+    rhs = jax.random.normal(key, (ny, nx))
+    p0 = jax.random.normal(jax.random.fold_in(key, 1), (ny, nx))
+    planes = cfd_poisson.pack_checkerboard(p0)
+    rplanes = cfd_poisson.pack_checkerboard(rhs)
+    kw = dict(dx=0.05, dy=0.04, omega=1.6, nslabs=nslabs, inner_iters=inner)
+    out_r, out_b = rb_sor_slabs_packed(*planes, *rplanes, **kw)
+    ref_r, ref_b = rb_sor_slabs_packed_ref(*planes, *rplanes, **kw)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(ref_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(ref_b),
+                               rtol=1e-5, atol=1e-5)
+    full = rb_sor_slabs(p0, rhs, **kw)
+    unpacked = cfd_poisson.unpack_checkerboard(out_r, out_b)
+    np.testing.assert_allclose(np.asarray(unpacked), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_poisson_rb_sor_packed_matches_unpacked():
+    """ops.rb_sor's packed default reproduces the original full-grid slab
+    path at identical iteration schedules."""
+    rhs = jax.random.normal(jax.random.PRNGKey(9), (34, 176))
+    kw = dict(iters=40, omega=1.7, nslabs=2, inner_iters=2, interpret=True)
+    a = poisson_ops.rb_sor(rhs, 0.125, 0.12, **kw)
+    b = poisson_ops.rb_sor(rhs, 0.125, 0.12, packed=False, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_poisson_kernel_solver_converges():

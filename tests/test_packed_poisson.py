@@ -1,0 +1,188 @@
+"""Packed-checkerboard Poisson parity: the packed layout must reproduce the
+full-grid oracle sweep for sweep (ulp-level), at every grid parity, with warm
+starts, under vmap, and through every backend that embeds it — plus the new
+odd-width warning/dispatch contract of ``poisson.solve``."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import poisson
+from tests._prop import given, settings, st
+
+# calibrated: observed <= ~2e-7 (XLA fuses the packed and masked sweeps
+# differently, so agreement is 1-2 ulp rather than bitwise)
+TOL = dict(rtol=2e-5, atol=2e-6)
+
+
+def _rhs(ny, nx, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed * 7919 + ny * nx),
+                             (ny, nx))
+
+
+# ---------------------------------------------------------------------------
+# layout round-trip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(ny=st.integers(min_value=2, max_value=40),
+       w=st.integers(min_value=1, max_value=40))
+def test_pack_unpack_roundtrip(ny, w):
+    a = _rhs(ny, 2 * w)
+    red, black = poisson.pack_checkerboard(a)
+    assert red.shape == black.shape == (ny, w)
+    np.testing.assert_array_equal(
+        np.asarray(poisson.unpack_checkerboard(red, black)), np.asarray(a))
+
+
+def test_pack_layout_indexing():
+    """red[j, k] = p[j, 2k + j%2] — pin the documented index map."""
+    a = np.arange(5 * 8, dtype=np.float32).reshape(5, 8)
+    red, black = map(np.asarray, poisson.pack_checkerboard(jnp.asarray(a)))
+    for j in range(5):
+        for k in range(4):
+            assert red[j, k] == a[j, 2 * k + j % 2]
+            assert black[j, k] == a[j, 2 * k + 1 - j % 2]
+
+
+def test_pack_odd_width_raises():
+    with pytest.raises(ValueError, match="even grid width"):
+        poisson.pack_checkerboard(jnp.zeros((4, 7)))
+
+
+# ---------------------------------------------------------------------------
+# packed vs full-grid oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ny,nx", [(32, 176), (33, 64), (7, 16), (34, 176),
+                                   (16, 88), (2, 4)])
+@pytest.mark.parametrize("iters,polish", [(60, 10), (24, 0), (7, 3)])
+def test_packed_matches_full_oracle(ny, nx, iters, polish):
+    rhs = _rhs(ny, nx)
+    p0 = _rhs(ny, nx, seed=1)        # warm start exercises the packed p0
+    a = poisson.solve(rhs, 0.125, 0.12, iters=iters, polish=polish,
+                      p0=p0, backend="full")
+    b = poisson.solve(rhs, 0.125, 0.12, iters=iters, polish=polish,
+                      p0=p0, backend="packed")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+def test_reference_default_is_packed_on_even_widths():
+    rhs = _rhs(34, 176)
+    ref = poisson.solve(rhs, 0.125, 0.12, iters=40)
+    packed = poisson.solve(rhs, 0.125, 0.12, iters=40, backend="packed")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(packed))
+
+
+def test_packed_residual_not_worse_at_equal_iters():
+    """The packed layout is the same iteration, so at equal sweep counts its
+    residual norm must match the oracle's (never regress the hot path's
+    convergence per FLOP)."""
+    rhs = _rhs(40, 176, seed=2)
+    for iters in (20, 60, 120):
+        r = {}
+        for backend in ("full", "packed"):
+            sol = poisson.solve(rhs, 0.125, 0.125, iters=iters,
+                                backend=backend)
+            r[backend] = float(jnp.linalg.norm(
+                poisson.residual(sol, rhs, 0.125, 0.125)))
+        assert r["packed"] <= r["full"] * (1 + 1e-4), (iters, r)
+
+
+@pytest.mark.parametrize("backend", ["packed", "pallas"])
+def test_packed_vmapped_batch_parity(backend):
+    """vmapping over a batch axis matches per-item solves (the engine's
+    N_envs axis runs the solver exactly like this)."""
+    B, ny, nx = 3, 24, 64
+    rhs = jax.random.normal(jax.random.PRNGKey(0), (B, ny, nx))
+    p0 = jax.random.normal(jax.random.PRNGKey(1), (B, ny, nx))
+    fn = lambda r, p: poisson.solve(r, 0.125, 0.12, iters=30, p0=p,
+                                    backend=backend)
+    batched = jax.vmap(fn)(rhs, p0)
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(batched[b]),
+                                   np.asarray(fn(rhs[b], p0[b])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_backend_matches_oracle_class():
+    """solve(backend='pallas') — packed slab smoother + packed polish —
+    stays in the oracle's convergence class at equal iteration budget."""
+    rhs = _rhs(34, 176, seed=3)
+    r0 = float(jnp.linalg.norm(poisson.residual(jnp.zeros_like(rhs), rhs,
+                                                0.1, 0.1)))
+    sols = {b: poisson.solve(rhs, 0.1, 0.1, iters=120, backend=b)
+            for b in ("full", "pallas")}
+    res = {b: float(jnp.linalg.norm(poisson.residual(s, rhs, 0.1, 0.1)))
+           for b, s in sols.items()}
+    assert res["pallas"] < 0.1 * r0, res
+    assert res["pallas"] < 3.0 * res["full"], res
+
+
+# ---------------------------------------------------------------------------
+# odd-width dispatch and warning contract
+# ---------------------------------------------------------------------------
+
+def test_packed_backend_odd_width_raises():
+    with pytest.raises(ValueError, match="even grid width"):
+        poisson.solve(_rhs(24, 33), 0.1, 0.1, iters=8, backend="packed")
+
+
+def test_reference_odd_width_uses_full_oracle():
+    rhs = _rhs(24, 33, seed=4)
+    a = poisson.solve(rhs, 0.1, 0.1, iters=40)
+    b = poisson.solve(rhs, 0.1, 0.1, iters=40, backend="full")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pallas_odd_width_fallback_warns_once_naming_shape():
+    """The silent pallas -> reference fallback now warns, once per shape,
+    naming the grid."""
+    poisson._ODD_NX_WARNED.clear()
+    rhs = _rhs(26, 35, seed=5)
+    with pytest.warns(RuntimeWarning, match=r"ny=26, nx=35"):
+        poisson.solve(rhs, 0.1, 0.1, iters=8, backend="pallas")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)   # second call: silent
+        poisson.solve(rhs, 0.1, 0.1, iters=8, backend="pallas")
+        # ... but a NEW odd shape warns again
+        with pytest.raises(RuntimeWarning, match=r"ny=28, nx=35"):
+            poisson.solve(_rhs(28, 35), 0.1, 0.1, iters=8, backend="pallas")
+
+
+def test_use_pallas_deprecation_points_at_caller_under_jit():
+    """The deprecated-alias warning must blame the user's call site, not jax
+    trace machinery, even when ``solve`` runs under ``jax.jit``."""
+    rhs = _rhs(8, 12, seed=6)
+
+    @jax.jit
+    def jitted(r):
+        return poisson.solve(r, 0.1, 0.1, iters=4, use_pallas=False)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always", DeprecationWarning)
+        jitted(rhs)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "use_pallas" in str(w.message)]
+    assert dep, [str(w.message) for w in rec]
+    assert dep[0].filename == __file__, dep[0].filename
+
+
+def test_use_pallas_conflict_raises():
+    with pytest.raises(ValueError, match="conflicting solver selection"):
+        poisson.resolve_backend("reference", use_pallas=True)
+
+
+def test_traced_omega_on_jnp_backends():
+    """Seed behavior kept: omega may be a traced jnp scalar on the jnp
+    backends (the pallas kernel alone specializes on it and says so)."""
+    rhs = _rhs(8, 12, seed=7)
+    a = poisson.solve(rhs, 0.1, 0.1, iters=6, omega=jnp.float32(1.5))
+    b = poisson.solve(rhs, 0.1, 0.1, iters=6, omega=1.5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+    with pytest.raises(TypeError, match="concrete Python-float omega"):
+        poisson.solve(rhs, 0.1, 0.1, iters=6, omega=jnp.float32(1.5),
+                      backend="pallas")

@@ -1,0 +1,109 @@
+"""Aggregate the per-suite benchmark artifacts into one perf-trajectory file.
+
+Every benchmark that measures something durable writes an
+``artifacts/BENCH_<name>.json`` (``bench_hybrid.py`` -> BENCH_hybrid,
+``bench_kernels.py`` -> BENCH_poisson, ...).  This tool collects them into
+``artifacts/BENCH_summary.json`` — one flat record per artifact with its
+schema tag and every scalar it contains (nested keys dotted) — so the perf
+trajectory across PRs is a single diffable file, and CI can upload the lot
+as workflow artifacts.
+
+    PYTHONPATH=src python tools/bench_report.py \
+        [--dir artifacts] [--out artifacts/BENCH_summary.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SUMMARY_SCHEMA = "repro.bench_summary/v1"
+
+
+def flatten_scalars(obj, prefix: str = "", max_depth: int = 4) -> dict:
+    """Dotted-key view of every scalar (number / short string / bool) in a
+    nested JSON object.  Lists are summarized by length — per-candidate
+    tables stay in the source artifact, the summary tracks the headlines."""
+    out = {}
+    if max_depth < 0:
+        return out
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            key = f"{prefix}.{k}" if prefix else str(k)
+            out.update(flatten_scalars(v, key, max_depth - 1))
+    elif isinstance(obj, list):
+        if prefix:
+            out[f"{prefix}.len"] = len(obj)
+    elif isinstance(obj, (int, float, bool)):
+        out[prefix] = obj
+    elif isinstance(obj, str) and len(obj) <= 80:
+        out[prefix] = obj
+    return out
+
+
+def summarize(art_dir: Path, include_smoke: bool = False) -> dict:
+    entries = {}
+    for path in sorted(art_dir.glob("BENCH_*.json")):
+        # smoke artifacts (tiny-shape CI runs) never enter the committed
+        # trajectory: they would overwrite real measurements with noise
+        if path.name == "BENCH_summary.json" or \
+                (path.name.endswith("_smoke.json") and not include_smoke):
+            continue
+        try:
+            record = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            entries[path.stem] = {"error": f"{type(exc).__name__}: {exc}"}
+            continue
+        entries[path.stem] = {
+            "file": path.name,
+            "schema": record.get("schema", "<untagged>"),
+            "scalars": flatten_scalars(record),
+        }
+    return {"schema": SUMMARY_SCHEMA,
+            "n_artifacts": len(entries),
+            "entries": entries}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    root = Path(__file__).resolve().parent.parent
+    ap.add_argument("--dir", default=str(root / "artifacts"))
+    ap.add_argument("--out", default=None,
+                    help="default: <dir>/BENCH_summary.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero when no artifacts were found or any "
+                         "failed to parse (CI mode)")
+    ap.add_argument("--include-smoke", action="store_true",
+                    help="also aggregate BENCH_*_smoke.json (excluded by "
+                         "default so CI smoke noise never enters the "
+                         "committed trajectory)")
+    args = ap.parse_args()
+
+    art_dir = Path(args.dir)
+    summary = summarize(art_dir, include_smoke=args.include_smoke)
+    out = Path(args.out) if args.out else art_dir / "BENCH_summary.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(summary, indent=1, sort_keys=True))
+
+    for name, entry in summary["entries"].items():
+        if "error" in entry:
+            print(f"{name}: UNREADABLE ({entry['error']})")
+            continue
+        scalars = entry["scalars"]
+        headline = {k: v for k, v in sorted(scalars.items())
+                    if "speedup" in k or k.endswith("plan.n_envs")
+                    or k.endswith("plan.n_ranks") or k.endswith("backend")
+                    or k.endswith("layout")}
+        print(f"{name} [{entry['schema']}]: {len(scalars)} scalars"
+              + (f" | {headline}" if headline else ""))
+    print(f"summary -> {out} ({summary['n_artifacts']} artifacts)")
+
+    if args.check:
+        bad = [n for n, e in summary["entries"].items() if "error" in e]
+        if bad or not summary["entries"]:
+            raise SystemExit(f"bench summary check failed: "
+                             f"{'unreadable ' + str(bad) if bad else 'no artifacts found'}")
+
+
+if __name__ == "__main__":
+    main()

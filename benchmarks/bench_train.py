@@ -1,0 +1,205 @@
+"""End-to-end training-loop benchmark: the observability artifact.
+
+Runs the paper's Fig. 4 loop (collect -> PPO update -> trajectory sink) on
+the cylinder env with ``EngineConfig(timing=True)`` so the engine reports
+real phase times, and measures:
+
+- **throughput**: environment steps (solver steps x envs) per second,
+- **phase shares**: collect / update / sink-write fractions of wall time
+  (the paper's ">95% of time is CFD" claim, Fig. 10),
+- **projected parallel efficiency**: a strong-scaling projection of this
+  host's phase split to the paper's 60-core point (collect parallelizes,
+  update + sink stay serial) against the paper's measured 78% / 47x,
+- **golden-physics drift**: Strouhal / mean C_D / C_L amplitude re-measured
+  from the checked-in golden state vs the stored reference — the dashboard
+  sees solver drift next to the perf numbers that might have caused it.
+
+Writes ``artifacts/BENCH_train.json`` (``BENCH_train_smoke.json`` with
+``--smoke`` — smoke artifacts never overwrite committed measurements).
+
+    PYTHONPATH=src python benchmarks/bench_train.py [--smoke]
+"""
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import numpy as np
+
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl import networks
+from repro.drl.engine import (EngineConfig, RolloutEngine, SinkSpec,
+                              broadcast_env_state)
+from repro.drl.ppo import PPOConfig
+from repro.drl.train_state import code_fingerprint
+
+BENCH_SCHEMA = "repro.bench_train/v1"
+PAPER_EFFICIENCY_60 = 0.78      # paper Fig. 7: parallel efficiency, 60 cores
+PAPER_SPEEDUP_60 = 47.0         # paper: 47x at 60 cores
+GOLDEN = Path(__file__).resolve().parent.parent / "tests" / "golden" \
+    / "cyl_re100_res8.npz"
+
+
+def measure_training(smoke: bool) -> dict:
+    """One timed training run with a dataset sink; returns the perf record."""
+    # non-smoke uses the paper's 50 solver steps per actuation so the phase
+    # split reflects the regime the scaling claims are about (CFD-dominated)
+    res, p_iters = (6, 30) if smoke else (8, 50)
+    spa = 3 if smoke else 50
+    horizon = 3 if smoke else 20
+    n_envs = 2 if smoke else 4
+    episodes = 3 if smoke else 5
+    env = CylinderEnv(EnvConfig(
+        grid=GridConfig(res=res, dt=0.01, poisson_iters=p_iters),
+        steps_per_action=spa, actions_per_episode=horizon,
+        warmup_time=1.0 if smoke else 5.0))
+    st, obs = env.reset()
+    pcfg = networks.PolicyConfig(obs_dim=int(obs.shape[-1]))
+    ppo = PPOConfig(epochs=2 if smoke else 6,
+                    minibatches=2 if smoke else 4)
+
+    root = tempfile.mkdtemp(prefix="bench_train_sink_")
+    engine = RolloutEngine.for_env(
+        env, EngineConfig(n_envs=n_envs, horizon=horizon, gamma=ppo.gamma,
+                          lam=ppo.lam, timing=True,
+                          sink=SinkSpec(kind="dataset", root=root)))
+    st_b, obs_b = broadcast_env_state(st, obs, n_envs)
+    params, optimizer, opt_state, key = engine.init(pcfg, ppo, seed=0)
+
+    # one untimed episode: compile collect + postprocess + update outside
+    # the measured window (throughput, not compile latency)
+    engine.run_sync(params, opt_state, ppo, optimizer, st_b, obs_b, key, 1)
+    engine.stats = {"collect_s": 0.0, "update_s": 0.0, "episodes": 0}
+    sink = engine.sink
+    write0, bytes0 = sink.time_spent, sink.bytes_written
+
+    t0 = time.perf_counter()
+    engine.run_sync(params, opt_state, ppo, optimizer, st_b, obs_b, key,
+                    episodes)
+    wall = time.perf_counter() - t0
+
+    collect_s = engine.stats["collect_s"]
+    update_s = engine.stats["update_s"]
+    sink_s = sink.time_spent - write0
+    sink_bytes = sink.bytes_written - bytes0
+    shutil.rmtree(root, ignore_errors=True)
+
+    env_steps = n_envs * horizon * spa * episodes
+    per_ep = {"collect_s": collect_s / episodes,
+              "update_s": update_s / episodes,
+              "sink_write_s": sink_s / episodes}
+
+    # strong-scaling projection of THIS host's phase split: collect (the CFD
+    # side) parallelizes over cores, update + sink stay serial — the Amdahl
+    # shape behind the paper's Fig. 7 curve.  t(n) = collect/n + serial.
+    serial = per_ep["update_s"] + per_ep["sink_write_s"]
+    t1 = per_ep["collect_s"] + serial
+
+    def eff(n):
+        return t1 / (n * (per_ep["collect_s"] / n + serial))
+
+    return {
+        "config": {"res": res, "poisson_iters": p_iters, "n_envs": n_envs,
+                   "horizon": horizon, "steps_per_action": spa,
+                   "episodes": episodes, "smoke": smoke,
+                   "ppo_epochs": ppo.epochs,
+                   "ppo_minibatches": ppo.minibatches},
+        "wall_s": wall,
+        "env_steps": env_steps,
+        "env_steps_per_s": env_steps / wall,
+        "episodes_per_s": episodes / wall,
+        "shares": {"collect": collect_s / wall, "update": update_s / wall,
+                   "sink_write": sink_s / wall,
+                   "other": max(0.0, 1.0 - (collect_s + update_s + sink_s)
+                                / wall)},
+        "per_episode_s": per_ep,
+        "sink": {"kind": "dataset", "bytes_written": sink_bytes,
+                 "bytes_per_episode": sink_bytes / episodes,
+                 "write_bandwidth": sink_bytes / sink_s if sink_s else None},
+        "scaling_projection": {
+            "model": "t(n) = collect/n + update + sink (strong scaling)",
+            "projected_speedup_60": 60.0 * eff(60),
+            "projected_efficiency_60": eff(60),
+            "projected_efficiency_8": eff(8),
+            "paper_efficiency_60": PAPER_EFFICIENCY_60,
+            "paper_speedup_60": PAPER_SPEEDUP_60,
+        },
+    }
+
+
+def measure_golden_drift(smoke: bool) -> dict:
+    """Re-measure the golden Re=100 shedding window; relative drift vs the
+    checked-in reference (tools/gen_golden.py).  Mirrors
+    tests/test_golden_physics.py, but reports magnitudes instead of
+    asserting — the dashboard tracks drift as a trajectory."""
+    from repro.cfd import solver
+    from repro.cfd.validation import measure_shedding, run_uncontrolled
+    if not GOLDEN.exists():
+        return {"error": f"golden reference missing: {GOLDEN}"}
+    ref = np.load(GOLDEN)
+    cfg = GridConfig(res=int(ref["res"]), dt=float(ref["dt"]),
+                     poisson_iters=int(ref["poisson_iters"]))
+    steps = int(ref["meas_steps"]) // (2 if smoke else 1)
+    state = solver.FlowState(u=ref["u"], v=ref["v"], p=ref["p"])
+    _, cds, cls = run_uncontrolled(cfg, state, steps)
+    try:
+        stats = measure_shedding(cds, cls, cfg.dt)
+    except ValueError as exc:           # smoke window too short for periods
+        return {"error": str(exc), "window_steps": steps}
+    rel = lambda k: stats[k] / float(ref[k]) - 1.0
+    return {"window_steps": steps,
+            "strouhal": stats["strouhal"],
+            "cd_mean": stats["cd_mean"],
+            "cl_amp": stats["cl_amp"],
+            "strouhal_rel_drift": rel("strouhal"),
+            "cd_mean_rel_drift": rel("cd_mean"),
+            "cl_amp_rel_drift": rel("cl_amp")}
+
+
+def run(smoke: bool = False, out: str = None) -> dict:
+    record = {"schema": BENCH_SCHEMA,
+              "code": code_fingerprint(),
+              "jax_devices": jax.device_count()}
+    record.update(measure_training(smoke))
+    record["golden_drift"] = measure_golden_drift(smoke)
+
+    root = Path(__file__).resolve().parent.parent / "artifacts"
+    name = "BENCH_train_smoke.json" if smoke else "BENCH_train.json"
+    path = Path(out) if out else root / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(record, indent=1, sort_keys=True))
+
+    sh, proj = record["shares"], record["scaling_projection"]
+    print(f"train: {record['env_steps_per_s']:.1f} env-steps/s "
+          f"({record['wall_s']:.2f}s wall)")
+    print(f"shares: collect {sh['collect']:.1%}  update {sh['update']:.1%}  "
+          f"sink {sh['sink_write']:.1%}  other {sh['other']:.1%}")
+    print(f"projected efficiency @60 cores: "
+          f"{proj['projected_efficiency_60']:.1%} "
+          f"(paper: {PAPER_EFFICIENCY_60:.0%}, {PAPER_SPEEDUP_60:.0f}x)")
+    gd = record["golden_drift"]
+    if "error" in gd:
+        print(f"golden drift: skipped ({gd['error']})")
+    else:
+        print(f"golden drift: St {gd['strouhal_rel_drift']:+.3%}  "
+              f"CD {gd['cd_mean_rel_drift']:+.3%}  "
+              f"|CL| {gd['cl_amp_rel_drift']:+.3%}")
+    print(f"artifact -> {path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI; writes BENCH_train_smoke.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out)

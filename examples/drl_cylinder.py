@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.cfd.env import EnvConfig
 from repro.cfd.grid import GridConfig
-from repro.drl.engine import make_sink
+from repro.drl.engine import SinkSpec
 from repro.drl.ppo import PPOConfig
 from repro.drl.train import TrainConfig, train
 
@@ -41,10 +41,15 @@ def main() -> None:
                          "(e.g. '2x2' = 2 envs x 2 spatial CFD shards, "
                          "runs the halo Poisson backend); default: plain "
                          "single-host vmap")
-    ap.add_argument("--spill", default="none",
+    ap.add_argument("--sink", default=None,
+                    help="trajectory sink spec 'kind[:root]': 'none', "
+                         "'memory', 'binary:/path', 'zstd:/path' (one file "
+                         "per episode, paper §IV I/O), or 'dataset:/path' "
+                         "(sharded files + manifest, replayable via "
+                         "tools/replay_smoke.py)")
+    ap.add_argument("--spill", default=None,
                     choices=["none", "memory", "binary", "zstd"],
-                    help="trajectory sink: spill each episode's trajectories"
-                         " via the engine's TrajectorySink (paper §IV I/O)")
+                    help="deprecated alias for --sink KIND:--spill-dir")
     ap.add_argument("--spill-dir", default="artifacts/traj_spill")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory: save the full TrainState "
@@ -77,6 +82,16 @@ def main() -> None:
         n_envs, n_ranks = (int(v) for v in plan.lower().split("x"))
         plan = (n_envs, n_ranks)
 
+    if args.sink is not None and args.spill is not None:
+        ap.error("--spill is a deprecated alias for --sink; pass only one")
+    if args.spill is not None:
+        print(f"note: --spill is deprecated; use "
+              f"--sink {args.spill}:{args.spill_dir}")
+        spec = SinkSpec(kind=args.spill, root=args.spill_dir
+                        if args.spill in ("binary", "zstd") else None)
+    else:
+        spec = SinkSpec.parse(args.sink)
+
     cfg = TrainConfig(
         env=EnvConfig(
             grid=GridConfig(res=args.res, dt=0.01, poisson_iters=50),
@@ -96,11 +111,12 @@ def main() -> None:
         ckpt_every=args.ckpt_every,
         ckpt_keep=args.ckpt_keep,
         resume=args.resume,
+        sink=spec,
     )
-    sink = make_sink(args.spill, args.spill_dir)
+    sink = spec.build()
     hist, params = train(cfg, sink=sink)
     if sink is not None:
-        print(f"spill[{args.spill}]: {sink.episodes} episodes, "
+        print(f"sink[{spec.kind}]: {sink.episodes} episodes, "
               f"{sink.bytes_written / 1e6:.2f} MB, "
               f"{sink.time_spent:.2f}s interface time")
     # report drag reduction: mean CD of last episodes vs uncontrolled CD0

@@ -39,13 +39,14 @@ from __future__ import annotations
 
 import functools
 import os
-import sys
 import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import backend as backend_mod
 
 BACKENDS = ("reference", "packed", "full", "pallas", "halo")
 
@@ -54,47 +55,19 @@ BACKENDS = ("reference", "packed", "full", "pallas", "halo")
 _ODD_NX_WARNED = set()
 
 
-def _caller_stacklevel() -> int:
-    """Stacklevel (as counted from ``resolve_backend``'s ``warnings.warn``)
-    of the nearest frame that is neither jax machinery nor this package's
-    cfd layer — so ``DeprecationWarning``s point at the user's call site
-    even when ``solve``/``step`` are traced under ``jax.jit``."""
-    jax_dir = os.path.dirname(jax.__file__)
-    cfd_dir = os.path.dirname(__file__)
-    level = 2                           # warn's view of resolve_backend's caller
-    frame = sys._getframe(2) if hasattr(sys, "_getframe") else None
-    while frame is not None:
-        fname = frame.f_code.co_filename
-        if not (fname.startswith(jax_dir) or fname.startswith(cfd_dir)):
-            return level
-        level += 1
-        frame = frame.f_back
-    return 2
-
-
 def resolve_backend(backend: Optional[str] = None,
                     use_pallas: Optional[bool] = None) -> str:
     """Normalize the (backend, legacy use_pallas) pair to a BACKENDS member.
 
     ``use_pallas`` is a deprecated alias: True -> "pallas", False ->
     "reference".  Passing both a backend and a conflicting alias is an error.
+    Delegates to :func:`repro.core.backend.resolve_backend`, skipping this
+    cfd layer's frames so the DeprecationWarning blames the user's call site
+    even when ``solve``/``step`` are traced under ``jax.jit``.
     """
-    if use_pallas is not None:
-        alias = "pallas" if use_pallas else "reference"
-        if backend is not None and backend != alias:
-            raise ValueError(
-                f"conflicting solver selection: backend={backend!r} vs "
-                f"use_pallas={use_pallas} (alias for {alias!r}); drop the "
-                f"deprecated use_pallas= argument")
-        warnings.warn("use_pallas= is deprecated; pass backend='pallas' "
-                      "(or 'reference') instead", DeprecationWarning,
-                      stacklevel=_caller_stacklevel())
-        backend = alias
-    backend = backend or "reference"
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown Poisson backend {backend!r}; "
-                         f"choose from {BACKENDS}")
-    return backend
+    return backend_mod.resolve_backend(
+        backend, use_pallas, backends=BACKENDS,
+        skip_dirs=(os.path.dirname(__file__),), what="solver")
 
 
 def _pad_pressure(p):

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro.ckpt.io import atomic_write_text, byte_view, read_exact
+
 try:
     import zstandard as zstd
 except ImportError:  # pragma: no cover
@@ -62,12 +64,9 @@ def _flatten_with_paths(tree):
     return out
 
 
-def _byte_view(a: np.ndarray):
-    """Zero-copy byte buffer of a C-contiguous array (crc + file write).
-    Routed through a uint8 ndarray view: ml_dtypes leaves (bfloat16) do not
-    export the buffer protocol themselves, and memoryview.cast chokes on
-    shapes containing 0."""
-    return b"" if a.nbytes == 0 else a.reshape(-1).view(np.uint8).data
+# zero-copy byte buffer of a C-contiguous array — shared with the trajectory
+# dataset via repro.ckpt.io (see byte_view's docstring for the ml_dtypes why)
+_byte_view = byte_view
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -128,12 +127,8 @@ def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
 
 
 def _read_exact(f, n: int, path, what: str) -> bytes:
-    buf = f.read(n)
-    if len(buf) != n:
-        raise CheckpointError(
-            f"truncated checkpoint {path}: wanted {n} bytes for {what}, "
-            f"file ended after {len(buf)}")
-    return buf
+    return read_exact(f, n, path, what, error=CheckpointError,
+                      kind="checkpoint")
 
 
 def _read_header(f, path):
@@ -313,9 +308,7 @@ def step_path(ckpt_dir: str, step: int) -> Path:
 
 
 def _point_latest(ckpt_dir: Path, name: str) -> None:
-    tmp = ckpt_dir / (LATEST_NAME + ".tmp")
-    tmp.write_text(name + "\n")
-    os.replace(tmp, ckpt_dir / LATEST_NAME)
+    atomic_write_text(ckpt_dir / LATEST_NAME, name + "\n")
 
 
 def save_step(ckpt_dir: str, step: int, tree: Any, *,

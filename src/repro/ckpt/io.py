@@ -1,0 +1,58 @@
+"""Crash-atomic file I/O primitives shared by the checkpoint layer and the
+trajectory dataset (``repro.data.trajectory_dataset``).
+
+The durability contract both consumers rely on:
+
+  * ``atomic_write_bytes``/``atomic_write_text``: data lands in
+    ``<path>.tmp`` and is ``os.replace``d into place, so a SIGKILL mid-write
+    leaves at most a stray ``.tmp`` — never a truncated destination file.
+  * ``byte_view``: zero-copy uint8 view of a C-contiguous array for crc32 /
+    file writes (ml_dtypes leaves such as bfloat16 do not export the buffer
+    protocol themselves, and ``memoryview.cast`` chokes on 0-sized shapes).
+  * ``read_exact``: bounded read that raises the caller's error class with a
+    message naming the file and what was being read — never returns a short
+    buffer for the caller to trip over later.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Type
+
+import numpy as np
+
+
+def atomic_write_bytes(path, blob: bytes) -> int:
+    """Write ``blob`` to ``path`` atomically (tmp + ``os.replace``).
+
+    Returns the number of bytes written.  The parent directory is created
+    when missing."""
+    p = Path(path)
+    tmp = Path(str(p) + ".tmp")
+    tmp.parent.mkdir(parents=True, exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, p)
+    return len(blob)
+
+
+def atomic_write_text(path, text: str) -> int:
+    """Atomic UTF-8 text write (tmp + ``os.replace``)."""
+    return atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def byte_view(a: np.ndarray):
+    """Zero-copy byte buffer of a C-contiguous array (crc + file write)."""
+    return b"" if a.nbytes == 0 else a.reshape(-1).view(np.uint8).data
+
+
+def read_exact(f, n: int, path, what: str,
+               error: Type[Exception] = ValueError,
+               kind: str = "file") -> bytes:
+    """Read exactly ``n`` bytes or raise ``error`` naming ``path``/``what``."""
+    buf = f.read(n)
+    if len(buf) != n:
+        raise error(
+            f"truncated {kind} {path}: wanted {n} bytes for {what}, "
+            f"file ended after {len(buf)}")
+    return buf

@@ -1,0 +1,78 @@
+"""One kernel-selection convention for the whole repo.
+
+PR 3 standardized the CFD stack on ``backend="reference"|"pallas"|...`` with
+``use_pallas=`` kept as a deprecated boolean alias; this module is that
+convention factored out so the model stack (attention / rwkv / hybrid and
+``launch.steps``) resolves backends through the exact same code path instead
+of carrying ~15 scattered ``use_pallas=`` booleans.
+
+``repro.cfd.poisson.resolve_backend`` delegates here with its five-member
+backend tuple; the model stack uses :data:`MODEL_BACKENDS` (two members).
+The ``DeprecationWarning``'s ``stacklevel`` walks past jax machinery and
+this package's forwarding frames so the warning blames the *user's* call
+site even when the resolving function is traced under ``jax.jit`` (tests
+pin ``w.filename``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+MODEL_BACKENDS: Tuple[str, ...] = ("reference", "pallas")
+
+
+def caller_stacklevel(skip_dirs: Sequence[str], *, base: int = 2) -> int:
+    """Stacklevel (as counted from the ``warnings.warn`` call inside
+    :func:`resolve_backend`) of the nearest frame outside ``skip_dirs`` and
+    jax machinery — so deprecation warnings point at the user's call site.
+
+    ``base`` is the stacklevel that would blame ``resolve_backend``'s direct
+    caller; each skipped forwarding frame adds one."""
+    jax_dir = os.path.dirname(jax.__file__)
+    dirs = tuple(skip_dirs) + (jax_dir,)
+    # stacklevel ``base`` (counted from resolve_backend's warn) blames the
+    # frame at ``sys._getframe(base)`` as seen from here: 0 = this helper,
+    # 1 = resolve_backend, 2 = its caller.
+    level = base
+    frame = sys._getframe(base) if hasattr(sys, "_getframe") else None
+    while frame is not None:
+        fname = frame.f_code.co_filename
+        if not any(fname.startswith(d) for d in dirs):
+            return level
+        level += 1
+        frame = frame.f_back
+    return base
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    use_pallas: Optional[bool] = None, *,
+                    backends: Sequence[str] = MODEL_BACKENDS,
+                    skip_dirs: Sequence[str] = (),
+                    what: str = "kernel") -> str:
+    """Normalize the (``backend``, legacy ``use_pallas``) pair to a member of
+    ``backends``.
+
+    ``use_pallas`` is a deprecated alias: ``True`` -> ``"pallas"``,
+    ``False`` -> ``"reference"``.  Passing both a backend and a conflicting
+    alias is an error.  ``skip_dirs`` are package directories whose frames
+    the warning's stacklevel walks past (forwarding layers)."""
+    if use_pallas is not None:
+        alias = "pallas" if use_pallas else "reference"
+        if backend is not None and backend != alias:
+            raise ValueError(
+                f"conflicting {what} selection: backend={backend!r} vs "
+                f"use_pallas={use_pallas} (alias for {alias!r}); drop the "
+                f"deprecated use_pallas= argument")
+        warnings.warn("use_pallas= is deprecated; pass backend='pallas' "
+                      "(or 'reference') instead", DeprecationWarning,
+                      stacklevel=caller_stacklevel(skip_dirs))
+        backend = alias
+    backend = backend or "reference"
+    if backend not in backends:
+        raise ValueError(f"unknown {what} backend {backend!r}; "
+                         f"choose from {tuple(backends)}")
+    return backend

@@ -20,13 +20,19 @@ Three concerns that used to be triplicated across ``drl/train.py``,
     log-probs).
 
 It also implements the paper's §IV I/O refinement for trajectory spill as a
-pluggable ``TrajectorySink``: in-memory, binary (msgpack + raw fp32) or
-zstd-compressed binary, reusing the ``core.interface`` codecs that back the
-measured Table II file-interface modes.
+pluggable ``TrajectorySink``: in-memory, binary (msgpack + raw fp32),
+zstd-compressed binary, or the sharded on-disk dataset
+(``repro.data.trajectory_dataset``), reusing the ``core.interface`` codecs
+that back the measured Table II file-interface modes.  Sinks are selected
+with one :class:`SinkSpec` config accepted uniformly by ``EngineConfig``,
+``TrainConfig`` and ``examples/drl_cylinder.py --sink``; the old
+``make_sink(mode, root)`` survives one release as a deprecated shim.
 """
 from __future__ import annotations
 
+import os
 import time
+import warnings
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
@@ -36,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.ckpt.io import atomic_write_bytes
+from repro.core import backend as backend_mod
 from repro.core.interface import pack_arrays, unpack_arrays
 from repro.drl import networks, rollout
 from repro.drl.gae import gae_batch
@@ -47,10 +55,20 @@ try:
 except ImportError:  # pragma: no cover - optional, gated
     zstd = None
 
+_DRL_DIR = os.path.dirname(__file__)
+
 
 # ---------------------------------------------------------------------------
 # trajectory sinks — the paper's I/O strategies applied to trajectory spill
 # ---------------------------------------------------------------------------
+
+class SinkReadError(KeyError):
+    """Raised when a sink is asked for an episode it does not hold.
+
+    Subclasses ``KeyError`` so pre-SinkSpec callers that caught the old
+    behaviour keep working; the message names the sink, its root/codec and
+    the episode range actually present (``CheckpointError`` style)."""
+
 
 class TrajectorySink:
     """Receives each collected episode's trajectories.  Base class = no-op
@@ -76,7 +94,14 @@ class TrajectorySink:
         return 0
 
     def read(self, episode: int) -> Trajectory:
-        raise KeyError(f"sink holds no episode {episode}")
+        raise SinkReadError(f"sink holds no episode {episode}: "
+                            f"{type(self).__name__} does not retain episodes")
+
+    def annotate(self, **meta) -> None:
+        """Attach run-level metadata (solver fingerprint, scenario names...).
+
+        No-op for stateless sinks; the dataset sink records it in its
+        manifest so recorded trajectories outlive the writing process."""
 
     def close(self) -> None:
         """Flush and release handles; never destroys spilled data."""
@@ -101,12 +126,20 @@ class MemorySink(TrajectorySink):
         return sum(a.nbytes for a in host)
 
     def read(self, episode: int) -> Trajectory:
+        if episode not in self._store:
+            have = (f"episodes {min(self._store)}..{max(self._store)}"
+                    if self._store else "no episodes")
+            raise SinkReadError(
+                f"sink holds no episode {episode}: MemorySink(keep="
+                f"{self.keep}) retains {have}")
         return self._store[episode]
 
 
 class FileSink(TrajectorySink):
     """Spills each episode to one binary file via the ``core.interface``
     codec (paper §III.D: single binary file instead of many ASCII dumps).
+    Files land via tmp + ``os.replace`` so a SIGKILL mid-spill never leaves
+    a truncated episode.
 
     codec='binary'  msgpack + raw fp32 (the paper's optimized mode)
     codec='zstd'    the same, zstd-compressed (beyond-paper); silently
@@ -132,13 +165,21 @@ class FileSink(TrajectorySink):
     def _write(self, episode: int, traj: Trajectory) -> int:
         arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)}
         blob = pack_arrays(arrays, cctx=self._cctx)
-        self._path(episode).write_bytes(blob)
-        return len(blob)
+        return atomic_write_bytes(self._path(episode), blob)
+
+    def _available(self) -> str:
+        eps = sorted(int(p.stem.split("_")[1])
+                     for p in self.dir.glob("traj_*.bin"))
+        return (f"episodes {eps[0]}..{eps[-1]} ({len(eps)} on disk)"
+                if eps else "no episodes on disk")
 
     def read(self, episode: int) -> Trajectory:
         path = self._path(episode)
         if not path.exists():
-            raise KeyError(f"sink holds no episode {episode}")
+            raise SinkReadError(
+                f"sink holds no episode {episode}: FileSink(root="
+                f"{str(self.dir)!r}, codec={self.codec!r}) has "
+                f"{self._available()}")
         arrays, _ = unpack_arrays(path.read_bytes(), dctx=self._dctx)
         return Trajectory(**{f: arrays[f] for f in Trajectory._fields})
 
@@ -147,8 +188,69 @@ class FileSink(TrajectorySink):
         shutil.rmtree(self.dir, ignore_errors=True)
 
 
+@dataclass(frozen=True)
+class SinkSpec:
+    """One declarative config for every trajectory-spill strategy.
+
+    Replaces the stringly ``make_sink(mode, root)`` + ad-hoc constructor
+    kwargs: the same spec is accepted by ``EngineConfig.sink``,
+    ``TrainConfig.sink`` and ``examples/drl_cylinder.py --sink``.
+
+      kind='none'     no spill (the paper's io-DISABLED upper bound)
+      kind='memory'   MemorySink keeping the last ``keep`` episodes
+      kind='binary'   FileSink, one msgpack+fp32 file per episode at ``root``
+      kind='zstd'     FileSink, zstd-compressed (degrades without zstandard)
+      kind='dataset'  repro.data.trajectory_dataset.DatasetSink: sharded
+                      files + JSON manifest, ``codec``/``shard_max_bytes``
+                      apply (the durable, replayable format)
+    """
+
+    kind: str = "none"
+    root: Optional[str] = None
+    keep: int = 8                       # memory: episodes retained
+    codec: str = "binary"               # dataset: payload codec
+    shard_max_bytes: int = 64 * 1024 * 1024   # dataset: shard rotation
+
+    KINDS = ("none", "memory", "binary", "zstd", "dataset")
+
+    @classmethod
+    def parse(cls, text: Optional[str]) -> "SinkSpec":
+        """Parse a CLI-style ``kind[:root]`` string ('dataset:/tmp/ds')."""
+        if text in (None, "", "none", "disabled"):
+            return cls(kind="none")
+        kind, _, root = text.partition(":")
+        return cls(kind=kind, root=root or None)
+
+    def build(self) -> Optional[TrajectorySink]:
+        if self.kind in (None, "none", "disabled"):
+            return None
+        if self.kind == "memory":
+            return MemorySink(keep=self.keep)
+        if self.kind in ("binary", "zstd"):
+            if self.root is None:
+                raise ValueError(f"file sink {self.kind!r} needs a root "
+                                 f"directory")
+            return FileSink(self.root, codec=self.kind)
+        if self.kind == "dataset":
+            if self.root is None:
+                raise ValueError("dataset sink needs a root directory")
+            from repro.data.trajectory_dataset import DatasetSink
+            return DatasetSink(self.root, codec=self.codec,
+                               shard_max_bytes=self.shard_max_bytes)
+        raise ValueError(f"unknown sink kind {self.kind!r}; "
+                         f"choose from {self.KINDS}")
+
+
 def make_sink(mode: str, root: Optional[str] = None) -> Optional[TrajectorySink]:
-    """'none' | 'memory' | 'binary' | 'zstd' -> sink instance (or None)."""
+    """Deprecated: pass ``SinkSpec(kind=..., root=...)`` (or
+    ``SinkSpec.parse('binary:/path')``) instead.
+
+    Kept for one release as a shim over :class:`SinkSpec`; the warning's
+    stacklevel blames the caller (PR-5 ``resolve_backend`` pattern)."""
+    warnings.warn("make_sink() is deprecated; pass SinkSpec(kind=..., "
+                  "root=...) / SinkSpec.parse('binary:/path') instead",
+                  DeprecationWarning,
+                  stacklevel=backend_mod.caller_stacklevel((_DRL_DIR,)))
     if mode in (None, "none", "disabled"):
         return None
     if mode == "memory":
@@ -158,7 +260,7 @@ def make_sink(mode: str, root: Optional[str] = None) -> Optional[TrajectorySink]
                          f"'memory', 'binary' or 'zstd'")
     if root is None:
         raise ValueError(f"file sink {mode!r} needs a root directory")
-    return FileSink(root, codec=mode)
+    return SinkSpec(kind=mode, root=root).build()
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +346,12 @@ class EngineConfig:
     # the engine builds its mesh from the resolved plan and adopts the
     # plan's n_ranks.
     plan: Any = None
+    # trajectory spill (SinkSpec); an explicit sink= to the engine wins
+    sink: Optional[SinkSpec] = None
+    # phase timing: block_until_ready around collect/update so
+    # ``engine.stats`` reports real collect/update/sink-write shares
+    # (benchmarks opt in; training loops keep async dispatch by default)
+    timing: bool = False
 
 
 class RolloutEngine:
@@ -272,9 +380,20 @@ class RolloutEngine:
                 cfg = _dc.replace(cfg, n_ranks=self.resolved_plan.n_ranks)
         self.cfg = cfg
         self.mesh = mesh
+        if sink is None and cfg.sink is not None:
+            sink = cfg.sink.build()
         self.sink = sink
         self.episode = 0
-        self.collect_fn = self._build_collect()
+        self.stats = {"collect_s": 0.0, "update_s": 0.0, "episodes": 0}
+        rollout_fn = self._build_rollout()
+        postprocess_fn = self._build_postprocess()
+
+        def collect_fused(params, st_b, obs_b, key):
+            traj = rollout_fn(params, st_b, obs_b, key)
+            return postprocess_fn(params, traj), traj
+
+        # the untraced fused closure (runner/dry-run .lower() consumers)
+        self.collect_fn = collect_fused
         if mesh is not None:
             batch, _ = env_state_specs(mesh)
             in_shardings = (
@@ -285,8 +404,14 @@ class RolloutEngine:
             )
             self._collect = jax.jit(self.collect_fn,
                                     in_shardings=in_shardings)
+            self._rollout = jax.jit(rollout_fn, in_shardings=in_shardings)
         else:
             self._collect = jax.jit(self.collect_fn)
+            self._rollout = jax.jit(rollout_fn)
+        # values -> GAE -> flatten as its OWN jitted program, shared verbatim
+        # by the live collect path and replay_sync: the record -> replay
+        # bitwise gate holds because both feed the same compiled program
+        self.postprocess = jax.jit(postprocess_fn)
 
     @classmethod
     def for_env(cls, env, cfg: EngineConfig, **kw) -> "RolloutEngine":
@@ -295,10 +420,10 @@ class RolloutEngine:
 
     # -- collect -> GAE -> flatten (THE single implementation) --------------
 
-    def _build_collect(self):
+    def _build_rollout(self):
         cfg, mesh = self.cfg, self.mesh
 
-        def collect(params, st_b, obs_b, key):
+        def collect_traj(params, st_b, obs_b, key):
             if mesh is not None:
                 batch_spec, batch_space = env_state_specs(mesh)
 
@@ -313,17 +438,24 @@ class RolloutEngine:
             _, traj = rollout.rollout_batch(self.env_step_fn, params, st_b,
                                             obs_b, key, cfg.horizon,
                                             cfg.n_envs)
+            return traj
+
+        return collect_traj
+
+    def _build_postprocess(self):
+        cfg = self.cfg
+
+        def postprocess(params, traj):
             values = networks.value(params, traj.obs)            # (N, T)
             last_v = networks.value(params, traj.last_obs)       # (N,)
             adv, ret = gae_batch(traj.reward, values, last_v,
                                  gamma=cfg.gamma, lam=cfg.lam)
             flat = lambda x: x.reshape((-1,) + x.shape[2:])
-            batch = Batch(obs=flat(traj.obs), act=flat(traj.act),
-                          logp_old=flat(traj.logp), adv=flat(adv),
-                          ret=flat(ret))
-            return batch, traj
+            return Batch(obs=flat(traj.obs), act=flat(traj.act),
+                         logp_old=flat(traj.logp), adv=flat(adv),
+                         ret=flat(ret))
 
-        return collect
+        return postprocess
 
     def collect(self, params, st_b, obs_b, key, *, record: bool = True
                 ) -> Tuple[Batch, Trajectory]:
@@ -336,7 +468,13 @@ class RolloutEngine:
         trusting every caller."""
         if self.mesh is not None:
             st_b = shard_env_batch(self.mesh, st_b, self.cfg.n_ranks)
-        batch, traj = self._collect(params, st_b, obs_b, key)
+        t0 = time.perf_counter()
+        traj = self._rollout(params, st_b, obs_b, key)
+        batch = self.postprocess(params, traj)
+        if self.cfg.timing:
+            jax.block_until_ready(batch)
+            self.stats["collect_s"] += time.perf_counter() - t0
+            self.stats["episodes"] += 1
         if record and self.sink is not None:
             self.sink.write(self.episode, traj)
         self.episode += 1
@@ -360,7 +498,18 @@ class RolloutEngine:
                               key, step)
 
         kw = {"donate_argnums": (1,)} if donate and self.cfg.donate else {}
-        return jax.jit(update, **kw)
+        jitted = jax.jit(update, **kw)
+        if not self.cfg.timing:
+            return jitted
+
+        def timed(params, opt_state, batch, key, step):
+            t0 = time.perf_counter()
+            out = jitted(params, opt_state, batch, key, step)
+            jax.block_until_ready(out[0])
+            self.stats["update_s"] += time.perf_counter() - t0
+            return out
+
+        return timed
 
     # -- training loops ------------------------------------------------------
 
@@ -389,6 +538,38 @@ class RolloutEngine:
             returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
             if on_episode is not None:
                 on_episode(traj, metrics)
+            if on_state is not None:
+                on_state(TrainCarry(params, opt_state, step, key))
+        return params, opt_state, np.asarray(returns)
+
+    def replay_sync(self, reader, params, opt_state, ppo_cfg: PPOConfig,
+                    optimizer, key, episodes: int, *, step=None, start=0,
+                    on_batch: Optional[Callable] = None,
+                    on_state: Optional[Callable] = None):
+        """Offline PPO: drive the sync update path from recorded episodes.
+
+        ``reader`` is anything with ``read(episode) -> Trajectory`` (a
+        ``TrajectoryReader``, ``FileSink`` or ``MemorySink``).  Values and
+        GAE are recomputed from the recorded observations with the CURRENT
+        (evolving) params through the same jitted postprocess program the
+        live collect uses, and the PRNG key discipline mirrors ``run_sync``
+        exactly (the collect subkey is split and burned) — so replaying a
+        just-recorded dataset from the recorded seed reproduces the live
+        run's parameter updates bitwise.  With an older dataset this is the
+        offline regression eval: old behaviour policy, current networks."""
+        update = self.make_update(ppo_cfg, optimizer)
+        step = jnp.int32(0) if step is None else jnp.asarray(step, jnp.int32)
+        returns = []
+        for ep in range(start, start + episodes):
+            key, kr, ku = jax.random.split(key, 3)
+            del kr                      # run_sync's collect subkey, burned
+            traj = Trajectory(*(jnp.asarray(a) for a in reader.read(ep)))
+            batch = self.postprocess(params, traj)
+            if on_batch is not None:
+                batch = on_batch(batch)
+            params, opt_state, step, metrics = update(params, opt_state,
+                                                      batch, ku, step)
+            returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
             if on_state is not None:
                 on_state(TrainCarry(params, opt_state, step, key))
         return params, opt_state, np.asarray(returns)

@@ -34,9 +34,9 @@ from repro.cfd.env import CylinderEnv, EnvConfig
 from repro.ckpt import checkpoint as ckpt_mod
 from repro.drl import networks
 from repro.drl import train_state as ts_mod
-from repro.drl.engine import (EngineConfig, RolloutEngine, TrajectorySink,
-                              broadcast_env_state, env_state_specs,
-                              place_env_batch)
+from repro.drl.engine import (EngineConfig, RolloutEngine, SinkSpec,
+                              TrajectorySink, broadcast_env_state,
+                              env_state_specs, place_env_batch)
 from repro.drl.ppo import PPOConfig, make_optimizer
 from repro.drl.train_state import HISTORY_FIELDS, TrainState
 
@@ -75,6 +75,10 @@ class TrainConfig:
     # a checkpoint directory).  ``episodes`` is the TOTAL target: resuming a
     # 40-episode checkpoint with episodes=100 runs 60 more.
     resume: Any = None
+    # trajectory spill: one SinkSpec for every strategy ('none' | 'memory' |
+    # 'binary' | 'zstd' | 'dataset'); an explicit sink= to train() wins.
+    # The run fingerprint (run_metadata) is annotated into dataset manifests.
+    sink: Optional[SinkSpec] = None
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
@@ -122,7 +126,8 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         env, EngineConfig(n_envs=n_envs,
                           horizon=cfg.env.actions_per_episode,
                           gamma=cfg.ppo.gamma, lam=cfg.ppo.lam,
-                          n_ranks=resolved.n_ranks if resolved else 1),
+                          n_ranks=resolved.n_ranks if resolved else 1,
+                          sink=cfg.sink),
         mesh=mesh, sink=sink)
 
     run_meta = ts_mod.run_metadata(
@@ -131,6 +136,9 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         steps_per_action=cfg.env.steps_per_action, scenarios=cfg.scenarios,
         plan={"n_envs": resolved.n_envs, "n_ranks": resolved.n_ranks,
               "backend": resolved.backend} if resolved else None)
+    if engine.sink is not None:
+        # durable datasets record which run (and which code) produced them
+        engine.sink.annotate(**run_meta)
     if ts is not None:
         for note in ts_mod.check_resume_compatible(ckpt_meta, run_meta):
             if log_fn:

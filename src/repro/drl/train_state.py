@@ -217,13 +217,32 @@ def resolve_resume(resume: Any, ckpt_dir: Optional[str] = None
 # run fingerprint + compatibility
 # ---------------------------------------------------------------------------
 
+def code_fingerprint() -> Dict[str, Any]:
+    """Informational solver/commit fingerprint stored beside checkpoints and
+    in trajectory-dataset manifests: which code produced this data.  Never a
+    strict resume field — offline replay of an OLD dataset under NEW code is
+    exactly the regression eval the dataset exists for."""
+    commit = "unknown"
+    try:
+        import subprocess
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=5,
+            cwd=Path(__file__).resolve().parent).stdout.strip() or "unknown"
+    except Exception:
+        pass
+    return {"git_commit": commit, "jax": jax.__version__,
+            "state_schema": TRAIN_STATE_SCHEMA}
+
+
 def run_metadata(*, n_envs: int, obs_dim: int, seed: int, grid,
                  horizon: int, steps_per_action: int,
                  scenarios: Optional[Tuple[str, ...]],
                  plan: Optional[Dict[str, Any]]) -> Dict[str, Any]:
     """The run fingerprint stored beside every checkpoint: everything that
     must match for a bitwise resume (strict fields) plus the plan actually
-    executed (informational — resume may change it)."""
+    executed and the code fingerprint (informational — resume and offline
+    replay may change both)."""
     return {
         "n_envs": int(n_envs),
         "obs_dim": int(obs_dim),
@@ -235,6 +254,7 @@ def run_metadata(*, n_envs: int, obs_dim: int, seed: int, grid,
         "scenarios": list(scenarios) if scenarios else None,
         "plan": plan or {"n_envs": int(n_envs), "n_ranks": 1,
                          "backend": "single-host"},
+        "code": code_fingerprint(),
     }
 
 

@@ -11,6 +11,7 @@ of these three entry points:
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -18,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.core import backend as backend_mod
 from repro.models import act_sharding
 from repro.models import frontend as fe_mod
 from repro.models import model as M
@@ -26,6 +28,8 @@ from repro.models.sharding import (axis_size, batch_spec, dp_axes,
                                    kv_cache_spec, param_specs, spec_for,
                                    state_spec)
 from repro.optim.optimizers import make_optimizer
+
+_LAUNCH_DIR = os.path.dirname(__file__)
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +168,10 @@ def cache_structs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
-                    use_pallas: bool = False) -> Callable:
+                    backend: Optional[str] = None,
+                    use_pallas: Optional[bool] = None) -> Callable:
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_LAUNCH_DIR,))
     opt = make_opt(cfg)
     accum_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
 
@@ -185,7 +192,7 @@ def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
             return g
 
     def loss_fn(params, mb):
-        return M.lm_loss(cfg, params, mb, use_pallas=use_pallas)
+        return M.lm_loss(cfg, params, mb, backend=backend)
 
     def train_step(params, opt_state, step, batch):
         # clamp microbatches so each microbatch still divides the dp axes
@@ -230,7 +237,12 @@ def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
-                      use_pallas: bool = False) -> Callable:
+                      backend: Optional[str] = None,
+                      use_pallas: Optional[bool] = None) -> Callable:
+    # prefill always runs the reference kernels (flash is train/causal-only);
+    # resolve anyway so deprecated/conflicting selections fail loudly here too
+    backend_mod.resolve_backend(backend, use_pallas, skip_dirs=(_LAUNCH_DIR,))
+
     def prefill_step(params, tokens, frontend_embeds=None):
         with act_sharding.activation_mesh(mesh):
             logits, cache = M.prefill(cfg, params, tokens,

@@ -6,13 +6,17 @@ across devices (distributed flash-decode) — see models/sharding.kv_cache_spec.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import backend as backend_mod
 from repro.models.layers import apply_rope, dense_init, dtype_of
+
+_MODELS_DIR = os.path.dirname(__file__)
 
 
 def init_attention(cfg: ModelConfig, key):
@@ -116,18 +120,23 @@ def causal_mask(Sq: int, Sk: int, sliding_window: int = 0):
 
 
 def apply_attention(cfg: ModelConfig, p, x, positions, *,
-                    causal: bool = True, use_pallas: bool = False,
+                    causal: bool = True, backend: Optional[str] = None,
+                    use_pallas: Optional[bool] = None,
                     chunk: int = 1024, return_kv: bool = False):
     """Train/prefill self-attention (causal by default; encoder passes False).
 
+    ``backend="pallas"`` routes the causal path through the flash kernel;
+    ``use_pallas=`` is a deprecated alias (see ``repro.core.backend``).
     With ``return_kv`` also returns the post-RoPE K/V for KV-cache population.
     """
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_MODELS_DIR,))
     B, S, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x)
     if cfg.rope_kind in ("rope", "mrope"):
         q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
-    if use_pallas and causal:
+    if backend == "pallas" and causal:
         from repro.kernels.flash_attention import ops as flash_ops
         out = flash_ops.flash_attention(q, k, v, causal=True,
                                         sliding_window=cfg.sliding_window)

@@ -2,13 +2,18 @@
 outputs normalized and averaged.  [arXiv:2411.13676]"""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import backend as backend_mod
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import dtype_of
+
+_MODELS_DIR = os.path.dirname(__file__)
 
 
 def init_hybrid(cfg: ModelConfig, key):
@@ -30,10 +35,16 @@ def _rms(x, scale):
     return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def apply_hybrid(cfg: ModelConfig, p, x, positions, *, use_pallas=False):
-    """Train/prefill.  Returns block mixer output (B,S,D)."""
+def apply_hybrid(cfg: ModelConfig, p, x, positions, *, backend=None,
+                 use_pallas=None):
+    """Train/prefill.  Returns block mixer output (B,S,D).
+
+    ``backend``/deprecated ``use_pallas`` select the attention-branch kernel
+    (see ``repro.core.backend``); the Mamba branch is always reference."""
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_MODELS_DIR,))
     a = attn_mod.apply_attention(cfg, p["attn"], x, positions,
-                                 use_pallas=use_pallas)
+                                 backend=backend)
     m, _, _ = ssm_mod.apply_mamba(cfg, p["mamba"], x)
     return 0.5 * (_rms(a, p["out_norm_attn"]) + _rms(m, p["out_norm_ssm"]))
 

@@ -13,12 +13,14 @@ host).  Heterogeneous stacks (DeepSeek dense prefix + MoE rest) are two scans.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import backend as backend_mod
 from repro.models import act_sharding
 from repro.models import attention as attn_mod
 from repro.models import frontend as fe_mod
@@ -30,6 +32,8 @@ from repro.models.layers import (apply_mlp, apply_norm, dtype_of, embed_init,
                                  init_mlp, init_norm, sinusoidal_positions)
 
 Params = Dict[str, Any]
+
+_MODELS_DIR = os.path.dirname(__file__)
 
 
 # ---------------------------------------------------------------------------
@@ -108,23 +112,26 @@ def abstract_params(cfg: ModelConfig, key=None):
 # ---------------------------------------------------------------------------
 
 def _mixer(cfg: ModelConfig, bp, h, positions, *, causal=True,
-           use_pallas=False, return_kv=False):
-    """Apply the sequence mixer of one block.  Returns (out, kv_or_none)."""
+           backend="reference", return_kv=False):
+    """Apply the sequence mixer of one block.  Returns (out, kv_or_none).
+
+    ``backend`` is the already-resolved kernel selection (the public entry
+    points resolve the deprecated ``use_pallas=`` alias exactly once)."""
     hn = apply_norm(cfg, bp["ln1"], h)
     if cfg.attention_kind == "mla":
         out = mla_mod.apply_mla(cfg, bp["mla"], hn, positions)
         return out, None
     if cfg.attention_kind == "hybrid":
         out = hyb_mod.apply_hybrid(cfg, bp["hyb"], hn, positions,
-                                   use_pallas=use_pallas)
+                                   backend=backend)
         return out, None
     if return_kv:
         out, k, v = attn_mod.apply_attention(
             cfg, bp["attn"], hn, positions, causal=causal,
-            use_pallas=use_pallas, return_kv=True)
+            backend=backend, return_kv=True)
         return out, (k, v)
     out = attn_mod.apply_attention(cfg, bp["attn"], hn, positions,
-                                   causal=causal, use_pallas=use_pallas)
+                                   causal=causal, backend=backend)
     return out, None
 
 
@@ -137,7 +144,7 @@ def _ffn(cfg: ModelConfig, bp, h):
 
 
 def _block_body(cfg: ModelConfig, carry, bp, *, positions, causal=True,
-                enc_out=None, use_pallas=False):
+                enc_out=None, backend="reference"):
     """One residual block for the train/prefill scan.  carry = (h, aux)."""
     h, aux = carry
     if cfg.attention_kind == "none":
@@ -148,7 +155,7 @@ def _block_body(cfg: ModelConfig, carry, bp, *, positions, causal=True,
                             cfg.ssm.head_dim), jnp.float32)
         mix, _, _ = ssm_mod.apply_rwkv_tmix(
             cfg, bp["tmix"], hn, jnp.zeros((B, D), hn.dtype), state0,
-            use_pallas=use_pallas)
+            backend=backend)
         h = h + mix
         hn = apply_norm(cfg, bp["ln2"], h)
         cm, _ = ssm_mod.apply_rwkv_cmix(cfg, bp["cmix"], hn,
@@ -156,8 +163,7 @@ def _block_body(cfg: ModelConfig, carry, bp, *, positions, causal=True,
         # channel sharding: the wkv recurrence is sequential over seq
         h = act_sharding.constrain(h + cm, act_sharding.dp(), None, "model")
         return (h, aux), None
-    mix, _ = _mixer(cfg, bp, h, positions, causal=causal,
-                    use_pallas=use_pallas)
+    mix, _ = _mixer(cfg, bp, h, positions, causal=causal, backend=backend)
     h = h + mix
     if enc_out is not None and "cross" in bp:
         hc = apply_norm(cfg, bp["ln_c"], h)
@@ -170,10 +176,10 @@ def _block_body(cfg: ModelConfig, carry, bp, *, positions, causal=True,
 
 
 def _scan_blocks(cfg: ModelConfig, blocks, h, *, positions, causal=True,
-                 enc_out=None, use_pallas=False):
+                 enc_out=None, backend="reference"):
     body = functools.partial(_block_body, cfg, positions=positions,
                              causal=causal, enc_out=enc_out,
-                             use_pallas=use_pallas)
+                             backend=backend)
     if cfg.remat == "full":
         body = jax.checkpoint(body)
     (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), blocks)
@@ -255,8 +261,13 @@ def _run_encoder(cfg: ModelConfig, params, frontend_embeds):
 # ---------------------------------------------------------------------------
 
 def forward_train(cfg: ModelConfig, params: Params, tokens,
-                  frontend_embeds=None, *, use_pallas=False):
-    """-> (logits (B,S,V) fp32, aux_loss scalar)."""
+                  frontend_embeds=None, *, backend=None, use_pallas=None):
+    """-> (logits (B,S,V) fp32, aux_loss scalar).
+
+    ``backend="reference"|"pallas"`` selects the sequence-mixer kernels;
+    ``use_pallas=`` is a deprecated alias (see ``repro.core.backend``)."""
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_MODELS_DIR,))
     enc_out = None
     if cfg.is_encdec:
         enc_out = _run_encoder(cfg, params, frontend_embeds)
@@ -266,13 +277,13 @@ def forward_train(cfg: ModelConfig, params: Params, tokens,
     aux = jnp.float32(0.0)
     if moe_cfg is not None and moe_cfg.first_dense_layers:
         h, a0 = _scan_blocks(cfg, params["blocks_dense"], h, positions=pos,
-                             use_pallas=use_pallas)
+                             backend=backend)
         h, a1 = _scan_blocks(cfg, params["blocks"], h, positions=pos,
-                             use_pallas=use_pallas)
+                             backend=backend)
         aux = a0 + a1
     else:
         h, aux = _scan_blocks(cfg, params["blocks"], h, positions=pos,
-                              enc_out=enc_out, use_pallas=use_pallas)
+                              enc_out=enc_out, backend=backend)
     logits = _unembed(cfg, params, h)
     if cfg.mtp:
         aux = aux + _mtp_loss_placeholder(cfg, params, h, tokens)
@@ -311,11 +322,15 @@ def _token_nll(cfg: ModelConfig, logits, labels):
 
 
 def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
-            *, use_pallas=False):
-    """batch: {'tokens': (B,S) int32, 'labels': (B,S) int32[, frontend]}."""
+            *, backend=None, use_pallas=None):
+    """batch: {'tokens': (B,S) int32, 'labels': (B,S) int32[, frontend]}.
+
+    ``backend``/deprecated ``use_pallas`` as in :func:`forward_train`."""
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_MODELS_DIR,))
     logits, aux = forward_train(cfg, params, batch["tokens"],
                                 batch.get("frontend_embeds"),
-                                use_pallas=use_pallas)
+                                backend=backend)
     nll = _token_nll(cfg, logits, batch["labels"])
     mask = batch.get("mask")
     if mask is not None:

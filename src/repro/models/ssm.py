@@ -10,13 +10,17 @@ Pallas kernel that exposes MXU matmuls within chunks.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import backend as backend_mod
 from repro.models.layers import dense_init, dtype_of
+
+_MODELS_DIR = os.path.dirname(__file__)
 
 
 # ---------------------------------------------------------------------------
@@ -140,13 +144,19 @@ def wkv6_chunked(r, k, v, w, u, state, *, chunk: int = 64):
 
 
 def apply_rwkv_tmix(cfg: ModelConfig, p, x, x_prev, state, *,
-                    use_pallas: bool = False):
-    """x: (B,S,D) -> (out, new_x_prev, new_state)."""
+                    backend: Optional[str] = None,
+                    use_pallas: Optional[bool] = None):
+    """x: (B,S,D) -> (out, new_x_prev, new_state).
+
+    ``backend="pallas"`` uses the chunked kernels/rwkv6 kernel;
+    ``use_pallas=`` is a deprecated alias (see ``repro.core.backend``)."""
+    backend = backend_mod.resolve_backend(backend, use_pallas,
+                                          skip_dirs=(_MODELS_DIR,))
     cd = dtype_of(cfg.compute_dtype)
     B, S, D = x.shape
     H, N = cfg.num_heads, cfg.ssm.head_dim
     r, k, v, g, w, x_last = rwkv6_project(cfg, p, x, x_prev)
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels.rwkv6 import ops as rwkv_ops
         out, new_state = rwkv_ops.wkv6(r, k, v, w, p["u"], state)
     elif S >= 128:

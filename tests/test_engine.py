@@ -8,7 +8,8 @@ import pytest
 from repro.drl import networks, rollout
 from repro.drl import engine as engine_mod
 from repro.drl.engine import (EngineConfig, FileSink, MemorySink,
-                              RolloutEngine, broadcast_env_state, make_sink)
+                              RolloutEngine, SinkSpec,
+                              broadcast_env_state, make_sink)
 from repro.drl.gae import gae_batch
 from repro.drl.ppo import Batch, PPOConfig
 from repro.launch.mesh import make_debug_mesh
@@ -238,3 +239,81 @@ def test_broadcast_env_state():
     st_b, obs_b = broadcast_env_state(st, obs, 4)
     assert st_b["a"].shape == (4, 3) and st_b["b"].shape == (4,)
     assert obs_b.shape == (4, 5)
+
+
+# ---------------------------------------------------------------------------
+# SinkSpec: the declarative sink config (make_sink's replacement)
+# ---------------------------------------------------------------------------
+
+def test_sink_spec_parse_and_build(tmp_path):
+    from repro.data.trajectory_dataset import DatasetSink
+    assert SinkSpec.parse(None).build() is None
+    assert SinkSpec.parse("none").build() is None
+    assert SinkSpec.parse("disabled").kind == "none"
+    assert isinstance(SinkSpec.parse("memory").build(), MemorySink)
+    fs = SinkSpec.parse(f"binary:{tmp_path}/b").build()
+    assert isinstance(fs, FileSink) and fs.codec == "binary"
+    ds = SinkSpec.parse(f"dataset:{tmp_path}/d").build()
+    assert isinstance(ds, DatasetSink)
+    assert SinkSpec(kind="memory", keep=3).build().keep == 3
+
+
+def test_sink_spec_rejects_bad_specs(tmp_path):
+    with pytest.raises(ValueError, match="unknown sink kind"):
+        SinkSpec(kind="parquet", root=str(tmp_path)).build()
+    with pytest.raises(ValueError, match="needs a root directory"):
+        SinkSpec(kind="binary").build()
+    with pytest.raises(ValueError, match="needs a root directory"):
+        SinkSpec(kind="dataset").build()
+
+
+def test_engine_builds_sink_from_config_spec(tmp_path):
+    engine = RolloutEngine(
+        _toy_step, EngineConfig(n_envs=N, horizon=T,
+                                sink=SinkSpec(kind="memory", keep=2)))
+    assert isinstance(engine.sink, MemorySink)
+    # an explicit sink= always wins over the config spec
+    mine = MemorySink()
+    engine = RolloutEngine(
+        _toy_step, EngineConfig(n_envs=N, horizon=T,
+                                sink=SinkSpec(kind="memory")), sink=mine)
+    assert engine.sink is mine
+
+
+def test_make_sink_deprecation_blames_caller(tmp_path):
+    import warnings
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sink = make_sink("memory")
+    assert isinstance(sink, MemorySink)
+    assert len(w) == 1 and issubclass(w[0].category, DeprecationWarning)
+    assert "SinkSpec" in str(w[0].message)
+    # stacklevel walks out of the engine module: the warning names THIS file
+    assert w[0].filename == __file__
+
+
+def test_sink_read_errors_are_actionable(tmp_path):
+    from repro.drl.engine import SinkReadError
+    mem = MemorySink(keep=2)
+    traj = _collect_one()
+    for ep in range(3):
+        mem.write(ep, traj)
+    with pytest.raises(SinkReadError, match=r"keep=2"):
+        mem.read(0)                         # names the retention window
+    fs = FileSink(str(tmp_path), codec="binary")
+    fs.write(4, traj)
+    with pytest.raises(SinkReadError) as ei:
+        fs.read(99)
+    msg = str(ei.value)
+    assert str(tmp_path) in msg and "codec" in msg and "episode 99" in msg
+    fs.cleanup()
+
+
+def test_engine_timing_stats():
+    engine = RolloutEngine(_toy_step,
+                           EngineConfig(n_envs=N, horizon=T, timing=True))
+    params, optimizer, opt_state, key = engine.init(PCFG, PPO, seed=0)
+    st0 = jnp.ones((N, 3)) * 2.0
+    engine.run_sync(params, opt_state, PPO, optimizer, st0, st0, key, 2)
+    assert engine.stats["episodes"] == 2
+    assert engine.stats["collect_s"] > 0 and engine.stats["update_s"] > 0

@@ -1,0 +1,267 @@
+"""Trajectory dataset: shard/manifest round trips, crash-tail recovery,
+corruption detection, and the record -> replay bitwise gate."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.data.trajectory_dataset as ds_mod
+from repro.data.trajectory_dataset import (DatasetError, DatasetSink,
+                                           TrajectoryReader)
+from repro.drl import networks
+from repro.drl.engine import EngineConfig, RolloutEngine, SinkReadError
+from repro.drl.ppo import PPOConfig
+from repro.drl.rollout import Trajectory
+
+
+class _Out:
+    def __init__(self, obs, reward):
+        self.obs, self.reward = obs, reward
+        self.cd = jnp.float32(0)
+        self.cl = jnp.float32(0)
+
+
+def _toy_step(st, a):
+    new = st * 0.8 + jnp.array([0.5, 0.0, 0.0]) * a
+    return new, _Out(new, -jnp.sum(new[:1] ** 2))
+
+
+N, T = 4, 8
+PCFG = networks.PolicyConfig(obs_dim=3, act_dim=1)
+PPO = PPOConfig(lr=1e-3, epochs=2, minibatches=2)
+
+
+def _setup():
+    st0 = jnp.ones((N, 3)) * 2.0
+    engine = RolloutEngine(_toy_step, EngineConfig(n_envs=N, horizon=T))
+    params = networks.init_actor_critic(PCFG, jax.random.PRNGKey(0))
+    return engine, params, st0
+
+
+def _record(root, episodes=3, **sink_kw):
+    """Collect `episodes` through a DatasetSink; returns the trajectories."""
+    engine, params, st0 = _setup()
+    sink = DatasetSink(str(root), **sink_kw)
+    trajs = []
+    for ep in range(episodes):
+        _, traj = engine.collect(params, st0, st0, jax.random.PRNGKey(ep))
+        sink.write(ep, traj)
+        trajs.append(traj)
+    return sink, trajs
+
+
+# ---------------------------------------------------------------------------
+# round trip, rotation, resume
+# ---------------------------------------------------------------------------
+
+def test_dataset_roundtrip(tmp_path):
+    sink, trajs = _record(tmp_path / "ds", episodes=3)
+    sink.annotate(run="unit", seed=7)
+    reader = TrajectoryReader(tmp_path / "ds")
+    assert reader.episodes == [0, 1, 2] and len(reader) == 3
+    assert reader.metadata["run"] == "unit" and reader.metadata["seed"] == 7
+    for ep, traj in enumerate(trajs):
+        back = reader.read(ep)
+        assert isinstance(back, Trajectory)
+        for a, b in zip(traj, back):
+            # the codec stores fp32 — bitwise for already-fp32 trajectories
+            np.testing.assert_array_equal(np.asarray(a, np.float32), b)
+    assert [t.obs.shape for t in reader] == [(N, T, 3)] * 3
+
+
+def test_shard_rotation_and_read_across_shards(tmp_path):
+    root = tmp_path / "ds"
+    sink, trajs = _record(root, episodes=4, shard_max_bytes=1)
+    # 1-byte budget: every record rotates into its own shard
+    assert sorted(p.name for p in root.glob("shard_*.bin")) == [
+        f"shard_{i:05d}.bin" for i in range(4)]
+    reader = TrajectoryReader(root)
+    for ep, traj in enumerate(trajs):
+        np.testing.assert_array_equal(np.asarray(traj.obs, np.float32),
+                                      reader.read(ep).obs)
+
+
+def test_reopen_resumes_and_overwrites_crash_tail(tmp_path):
+    root = tmp_path / "ds"
+    sink, trajs = _record(root, episodes=2)
+    shard = root / "shard_00000.bin"
+    committed = shard.stat().st_size
+    # simulate a SIGKILL mid-append: un-indexed tail garbage past the
+    # committed byte count must be ignored by readers and overwritten by
+    # the next append
+    with open(shard, "ab") as f:
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    reader = TrajectoryReader(root)                 # tail is invisible
+    assert reader.episodes == [0, 1]
+
+    engine, params, st0 = _setup()
+    sink2 = DatasetSink(str(root))                  # reopen = resume
+    _, traj2 = engine.collect(params, st0, st0, jax.random.PRNGKey(9))
+    sink2.write(2, traj2)
+    reader = TrajectoryReader(root)
+    assert reader.episodes == [0, 1, 2]
+    np.testing.assert_array_equal(np.asarray(traj2.obs, np.float32),
+                                  reader.read(2).obs)
+    man = json.loads((root / "manifest.json").read_text())
+    assert man["episodes"]["2"]["offset"] == committed
+
+
+# ---------------------------------------------------------------------------
+# corruption paths: every failure mode is a loud, named error
+# ---------------------------------------------------------------------------
+
+def test_missing_manifest_and_wrong_schema(tmp_path):
+    with pytest.raises(DatasetError, match="missing manifest.json"):
+        TrajectoryReader(tmp_path / "nowhere")
+    root = tmp_path / "notds"
+    root.mkdir()
+    (root / "manifest.json").write_text(json.dumps({"schema": "other/v9"}))
+    with pytest.raises(DatasetError, match="not a trajectory dataset"):
+        TrajectoryReader(root)
+
+
+@pytest.mark.parametrize("cut", [1, 8, 100])
+def test_truncated_shard_detected(tmp_path, cut):
+    root = tmp_path / "ds"
+    _record(root, episodes=2)
+    shard = root / "shard_00000.bin"
+    with open(shard, "r+b") as f:
+        f.truncate(max(0, shard.stat().st_size - cut))
+    with pytest.raises(DatasetError, match="truncated shard"):
+        TrajectoryReader(root)
+    # validate=False defers to read time, which still refuses to hand back
+    # short bytes
+    reader = TrajectoryReader(root, validate=False)
+    with pytest.raises(DatasetError):
+        for ep in reader.episodes:
+            reader.read(ep)
+
+
+def test_crc_bit_flip_detected(tmp_path):
+    root = tmp_path / "ds"
+    _record(root, episodes=1)
+    shard = root / "shard_00000.bin"
+    with open(shard, "r+b") as f:
+        f.seek(shard.stat().st_size // 2)       # well inside the payload
+        b = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([b[0] ^ 0x01]))
+    reader = TrajectoryReader(root)             # sizes intact: validate OK
+    with pytest.raises(DatasetError, match="crc32 mismatch"):
+        reader.read(0)
+
+
+def test_manifest_shard_table_mismatch(tmp_path):
+    root = tmp_path / "ds"
+    _record(root, episodes=1)
+    mpath = root / "manifest.json"
+    man = json.loads(mpath.read_text())
+    man["episodes"]["0"]["shard"] = "shard_00042.bin"
+    mpath.write_text(json.dumps(man))
+    with pytest.raises(DatasetError, match="manifest/shard-count mismatch"):
+        TrajectoryReader(root)
+
+
+def test_missing_shard_file_detected(tmp_path):
+    root = tmp_path / "ds"
+    _record(root, episodes=1)
+    (root / "shard_00000.bin").unlink()
+    with pytest.raises(DatasetError, match="missing shard"):
+        TrajectoryReader(root)
+
+
+def test_missing_episode_is_actionable_keyerror(tmp_path):
+    root = tmp_path / "ds"
+    _record(root, episodes=2)
+    reader = TrajectoryReader(root)
+    with pytest.raises(KeyError):               # SinkReadError is a KeyError
+        reader.read(99)
+    with pytest.raises(SinkReadError) as ei:
+        reader.read(99)
+    msg = str(ei.value)
+    assert str(root) in msg and "episodes 0..1" in msg and "codec" in msg
+
+
+def test_zstd_gating(tmp_path, monkeypatch):
+    root = tmp_path / "ds"
+    if ds_mod.zstd is None:
+        # zstandard absent (the CI image): requesting zstd degrades to
+        # binary on a FRESH dataset instead of failing the run
+        sink = DatasetSink(str(root), codec="zstd")
+        assert sink.codec == "binary"
+        return
+    _record(root, episodes=1, codec="zstd")
+    monkeypatch.setattr(ds_mod, "zstd", None)
+    with pytest.raises(DatasetError, match="zstandard is not installed"):
+        TrajectoryReader(root)                  # actionable, not ImportError
+    with pytest.raises(DatasetError, match="cannot append"):
+        DatasetSink(str(root))                  # resuming it: same story
+
+
+def test_unknown_codec_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unknown trajectory-sink codec"):
+        DatasetSink(str(tmp_path / "ds"), codec="gzip")
+
+
+# ---------------------------------------------------------------------------
+# offline replay: the bitwise gate
+# ---------------------------------------------------------------------------
+
+def test_replay_reproduces_live_run_bitwise(tmp_path):
+    """run_sync with a dataset sink, then replay_sync from the same init:
+    identical params, opt state leaves, and per-episode returns."""
+    episodes = 4
+    engine, _, st0 = _setup()
+    engine.sink = DatasetSink(str(tmp_path / "ds"))
+    params0, optimizer, opt_state0, key0 = engine.init(PCFG, PPO, seed=3)
+    params_live, opt_live, ret_live = engine.run_sync(
+        params0, opt_state0, PPO, optimizer, st0, st0, key0, episodes)
+
+    reader = TrajectoryReader(tmp_path / "ds")
+    replayer = RolloutEngine(_toy_step, EngineConfig(n_envs=N, horizon=T))
+    params_r, opt_r, ret_r = replayer.replay_sync(
+        reader, params0, opt_state0, PPO, optimizer, key0, episodes)
+
+    for a, b in zip(jax.tree.leaves(params_live), jax.tree.leaves(params_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt_live), jax.tree.leaves(opt_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(ret_live, ret_r)
+
+
+def test_replay_from_memory_sink(tmp_path):
+    """replay_sync accepts any reader with read(ep) -> Trajectory —
+    including the in-memory sink (keep must cover the run)."""
+    from repro.drl.engine import MemorySink
+    episodes = 3
+    engine, _, st0 = _setup()
+    engine.sink = MemorySink(keep=episodes)
+    params0, optimizer, opt_state0, key0 = engine.init(PCFG, PPO, seed=1)
+    params_live, _, _ = engine.run_sync(
+        params0, opt_state0, PPO, optimizer, st0, st0, key0, episodes)
+    params_r, _, _ = engine.replay_sync(
+        engine.sink, params0, opt_state0, PPO, optimizer, key0, episodes)
+    for a, b in zip(jax.tree.leaves(params_live), jax.tree.leaves(params_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replay_start_offset(tmp_path):
+    """start= replays a suffix: PRNG splits for the skipped prefix must be
+    burned exactly as run_sync would have."""
+    engine, _, st0 = _setup()
+    engine.sink = DatasetSink(str(tmp_path / "ds"))
+    params0, optimizer, opt_state0, key0 = engine.init(PCFG, PPO, seed=5)
+    # live: 3 episodes; carry after 1 episode captured via on_state
+    carries = []
+    params_live, _, _ = engine.run_sync(
+        params0, opt_state0, PPO, optimizer, st0, st0, key0, 3,
+        on_state=lambda c: carries.append(c))
+    c1 = carries[0]
+    reader = TrajectoryReader(tmp_path / "ds")
+    params_r, _, _ = engine.replay_sync(
+        reader, c1.params, c1.opt_state, PPO, optimizer, c1.key, 2,
+        step=c1.step, start=1)
+    for a, b in zip(jax.tree.leaves(params_live), jax.tree.leaves(params_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

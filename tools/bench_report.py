@@ -1,15 +1,24 @@
-"""Aggregate the per-suite benchmark artifacts into one perf-trajectory file.
+"""Aggregate the per-suite benchmark artifacts into one perf dashboard.
 
 Every benchmark that measures something durable writes an
 ``artifacts/BENCH_<name>.json`` (``bench_hybrid.py`` -> BENCH_hybrid,
-``bench_kernels.py`` -> BENCH_poisson, ...).  This tool collects them into
-``artifacts/BENCH_summary.json`` — one flat record per artifact with its
-schema tag and every scalar it contains (nested keys dotted) — so the perf
+``bench_kernels.py`` -> BENCH_poisson, ``bench_train.py`` -> BENCH_train,
+...).  This tool collects them into ``artifacts/BENCH_summary.json`` — one
+flat record per artifact with its schema tag and every scalar it contains
+(nested keys dotted) — plus a human-readable ``BENCH_summary.md`` dashboard:
+headline throughput/phase-share numbers, the projected parallel efficiency
+against the paper's measured 78% / 47x at 60 cores, and the golden-physics
+drift (Strouhal / C_D / C_L vs the checked-in reference).  The perf
 trajectory across PRs is a single diffable file, and CI can upload the lot
 as workflow artifacts.
 
+``--check`` (CI mode) exits nonzero when no artifacts were found, any is
+unreadable/untagged, or a present golden-drift measurement exceeds the
+golden-physics test tolerances — perf artifacts must not paper over a
+physics regression.
+
     PYTHONPATH=src python tools/bench_report.py \
-        [--dir artifacts] [--out artifacts/BENCH_summary.json]
+        [--dir artifacts] [--out artifacts/BENCH_summary.json] [--check]
 """
 from __future__ import annotations
 
@@ -18,6 +27,29 @@ import json
 from pathlib import Path
 
 SUMMARY_SCHEMA = "repro.bench_summary/v1"
+
+# paper reference points the dashboard pins every run against
+PAPER_TARGETS = {"efficiency_60cores": 0.78, "speedup_60cores": 47.0}
+# --check fails when measured golden drift exceeds the golden-physics test
+# tolerances (tests/test_golden_physics.py TOL_ST / TOL_CD / TOL_AMP)
+DRIFT_TOLERANCES = {"strouhal_rel_drift": 0.015,
+                    "cd_mean_rel_drift": 0.01,
+                    "cl_amp_rel_drift": 0.05}
+
+# dotted scalar keys promoted to the dashboard's headline table, with the
+# format to render them in (missing keys are simply skipped per artifact)
+HEADLINES = (
+    ("env_steps_per_s", "{:.1f}"),
+    ("shares.collect", "{:.1%}"),
+    ("shares.update", "{:.1%}"),
+    ("shares.sink_write", "{:.1%}"),
+    ("scaling_projection.projected_efficiency_60", "{:.1%}"),
+    ("speedup_packed_vs_full", "{:.2f}x"),
+    ("plan.n_envs", "{}"),
+    ("plan.n_ranks", "{}"),
+    ("plan.backend", "{}"),
+    ("plan.layout", "{}"),
+)
 
 
 def flatten_scalars(obj, prefix: str = "", max_depth: int = 4) -> dict:
@@ -61,7 +93,72 @@ def summarize(art_dir: Path, include_smoke: bool = False) -> dict:
         }
     return {"schema": SUMMARY_SCHEMA,
             "n_artifacts": len(entries),
+            "paper_targets": PAPER_TARGETS,
             "entries": entries}
+
+
+def drift_violations(summary: dict) -> list:
+    """Golden-physics drift scalars (any artifact) beyond test tolerance."""
+    out = []
+    for name, entry in summary["entries"].items():
+        scalars = entry.get("scalars", {})
+        for key, tol in DRIFT_TOLERANCES.items():
+            val = scalars.get(f"golden_drift.{key}")
+            if isinstance(val, (int, float)) and abs(val) > tol:
+                out.append(f"{name}: golden_drift.{key}={val:+.4f} "
+                           f"(|tol|={tol})")
+    return out
+
+
+def render_markdown(summary: dict) -> str:
+    """The dashboard: headline table, paper-target comparison, physics
+    drift — one glanceable file beside the machine-readable summary."""
+    lines = ["# Benchmark dashboard", "",
+             f"{summary['n_artifacts']} artifacts aggregated "
+             f"(schema `{summary['schema']}`).", "",
+             "| artifact | schema | headline |", "|---|---|---|"]
+    for name, entry in sorted(summary["entries"].items()):
+        if "error" in entry:
+            lines.append(f"| {name} | — | UNREADABLE: {entry['error']} |")
+            continue
+        scalars = entry["scalars"]
+        cells = [f"{key.split('.')[-1]}={fmt.format(scalars[key])}"
+                 for key, fmt in HEADLINES if key in scalars]
+        lines.append(f"| {name} | `{entry['schema']}` | "
+                     f"{', '.join(cells) or f'{len(scalars)} scalars'} |")
+
+    train = next((e["scalars"] for n, e in summary["entries"].items()
+                  if e.get("schema") == "repro.bench_train/v1"), None)
+    lines += ["", "## Paper targets (arXiv 2402.11515)", ""]
+    eff = (train or {}).get("scaling_projection.projected_efficiency_60")
+    spd = (train or {}).get("scaling_projection.projected_speedup_60")
+    lines.append(f"- parallel efficiency @ 60 cores: paper "
+                 f"{PAPER_TARGETS['efficiency_60cores']:.0%} "
+                 f"({PAPER_TARGETS['speedup_60cores']:.0f}x) | projected "
+                 + (f"from this host's phase split: {eff:.1%} ({spd:.1f}x)"
+                    if eff is not None else "from this host: not measured "
+                    "(run benchmarks/bench_train.py)"))
+    if train:
+        for k in ("shares.collect", "shares.update", "shares.sink_write"):
+            if k in train:
+                lines.append(f"- {k}: {train[k]:.1%}")
+
+    lines += ["", "## Golden-physics drift", ""]
+    drifted = False
+    for name, entry in sorted(summary["entries"].items()):
+        scalars = entry.get("scalars", {})
+        row = {k: scalars.get(f"golden_drift.{k}")
+               for k in DRIFT_TOLERANCES}
+        if any(v is not None for v in row.values()):
+            drifted = True
+            lines.append(f"- {name}: " + ", ".join(
+                f"{k.replace('_rel_drift', '')} {v:+.3%}"
+                for k, v in row.items() if v is not None))
+    if not drifted:
+        lines.append("- no drift measurements in the aggregated artifacts")
+    for v in drift_violations(summary):
+        lines.append(f"- **OVER TOLERANCE**: {v}")
+    return "\n".join(lines) + "\n"
 
 
 def main() -> None:
@@ -70,9 +167,12 @@ def main() -> None:
     ap.add_argument("--dir", default=str(root / "artifacts"))
     ap.add_argument("--out", default=None,
                     help="default: <dir>/BENCH_summary.json")
+    ap.add_argument("--markdown", default=None,
+                    help="dashboard output (default: <dir>/BENCH_summary.md)")
     ap.add_argument("--check", action="store_true",
-                    help="exit nonzero when no artifacts were found or any "
-                         "failed to parse (CI mode)")
+                    help="exit nonzero when no artifacts were found, any "
+                         "failed to parse / lacks a schema tag, or golden "
+                         "drift exceeds test tolerance (CI mode)")
     ap.add_argument("--include-smoke", action="store_true",
                     help="also aggregate BENCH_*_smoke.json (excluded by "
                          "default so CI smoke noise never enters the "
@@ -84,6 +184,8 @@ def main() -> None:
     out = Path(args.out) if args.out else art_dir / "BENCH_summary.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(summary, indent=1, sort_keys=True))
+    md = Path(args.markdown) if args.markdown else art_dir / "BENCH_summary.md"
+    md.write_text(render_markdown(summary))
 
     for name, entry in summary["entries"].items():
         if "error" in entry:
@@ -96,13 +198,23 @@ def main() -> None:
                     or k.endswith("layout")}
         print(f"{name} [{entry['schema']}]: {len(scalars)} scalars"
               + (f" | {headline}" if headline else ""))
-    print(f"summary -> {out} ({summary['n_artifacts']} artifacts)")
+    print(f"summary -> {out} ({summary['n_artifacts']} artifacts), "
+          f"dashboard -> {md}")
 
     if args.check:
-        bad = [n for n, e in summary["entries"].items() if "error" in e]
-        if bad or not summary["entries"]:
-            raise SystemExit(f"bench summary check failed: "
-                             f"{'unreadable ' + str(bad) if bad else 'no artifacts found'}")
+        problems = []
+        if not summary["entries"]:
+            problems.append("no artifacts found")
+        problems += [f"unreadable: {n} ({e['error']})"
+                     for n, e in summary["entries"].items() if "error" in e]
+        problems += [f"untagged (no schema field): {n}"
+                     for n, e in summary["entries"].items()
+                     if e.get("schema") == "<untagged>"]
+        problems += [f"golden drift over tolerance: {v}"
+                     for v in drift_violations(summary)]
+        if problems:
+            raise SystemExit("bench summary check failed:\n  "
+                             + "\n  ".join(problems))
 
 
 if __name__ == "__main__":

@@ -97,8 +97,13 @@ class CylinderEnv:
     once and closed over; ``env_step`` reads all per-scenario physics from
     ``state.scn``, so one CylinderEnv serves an arbitrary scenario mix.
 
-    ``backend``/``mesh`` select the Poisson backend for the env steps
-    training integrates.  ``backend="halo"`` with a ("data", "model") mesh
+    ``backend``/``mesh`` select the solver backend for the env steps
+    training integrates.  ``backend="fused"`` runs each actuation interval
+    through ``repro.kernels.actuation`` (fields and packed pressure planes
+    carried across all ``steps_per_action`` dt's; VMEM-resident Pallas
+    megakernel on TPU, one fused XLA scan elsewhere; odd-width or
+    over-VMEM-budget grids fall back to the reference scan with a
+    once-per-shape warning).  ``backend="halo"`` with a ("data", "model") mesh
     runs each env's pressure solve as explicit x-slabs over the "model"
     axis (the plan's n_ranks).  Warmup always runs the un-decomposed
     backend: its group batch is too small to tile the mesh "data" axis
@@ -143,14 +148,13 @@ class CylinderEnv:
         return solver.FlowState(*jax.tree.map(jnp.asarray, flow))
 
     def _run_steps(self, n, flow, jet_vel, re=None, act_mode=None):
-        # warmup path: un-decomposed backend (see class docstring)
+        # warmup path: un-decomposed backend (see class docstring); the
+        # fused interval path serves warmup too (same operator, one scan)
         backend = "reference" if self.backend == "halo" else self.backend
-        def body(flow, _):
-            flow, out = solver.step(self.cfg.grid, self.geom_arrays, flow,
-                                    jet_vel, re=re, act_mode=act_mode,
-                                    backend=backend)
-            return flow, (out.cd, out.cl)
-        return jax.lax.scan(body, flow, None, length=n)
+        flow, outs = solver.step_interval(self.cfg.grid, self.geom_arrays,
+                                          flow, jet_vel, n, re=re,
+                                          act_mode=act_mode, backend=backend)
+        return flow, (outs.cd, outs.cl)
 
     # -- pure env API --------------------------------------------------------
 
@@ -231,16 +235,18 @@ class CylinderEnv:
         jet = st.jet_vel + cfg.beta * (a - st.jet_vel)        # eq. (11)
         jet = jnp.clip(jet, -cfg.action_max, cfg.action_max)
 
-        def body(flow, _):
-            flow, out = solver.step(cfg.grid, self.geom_arrays, flow, jet,
-                                    re=st.scn.re, act_mode=st.scn.act_mode,
-                                    backend=self.backend, mesh=self.mesh)
-            return flow, (out.cd, out.cl)
-
-        flow, (cds, cls) = jax.lax.scan(body, st.flow, None,
-                                        length=cfg.steps_per_action)
-        cd = jnp.mean(cds)
-        cl = jnp.mean(cls)
+        # the whole actuation interval runs as one unit: backend="fused"
+        # carries the fields (and packed pressure planes) across every dt
+        # with no per-dt round-trips; other backends scan solver.step
+        flow, outs = solver.step_interval(cfg.grid, self.geom_arrays,
+                                          st.flow, jet,
+                                          cfg.steps_per_action,
+                                          re=st.scn.re,
+                                          act_mode=st.scn.act_mode,
+                                          backend=self.backend,
+                                          mesh=self.mesh)
+        cd = jnp.mean(outs.cd)
+        cl = jnp.mean(outs.cl)
         reward = st.scn.cd0 - cd - cfg.reward_omega * jnp.abs(cl)  # eq. (12)
         st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1, scn=st.scn)
         return st2, EnvOutput(obs=self._observe(st2), reward=reward,

@@ -15,7 +15,7 @@ be *traced* per call so heterogeneous scenario batches vmap into one program
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -157,42 +157,24 @@ def divergence(u, v, cfg: GridConfig):
 # one time step
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "backend", "use_pallas",
-                                             "mesh", "halo_inner"))
-def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
-         *, re=None, act_mode=None, backend: str = None,
-         use_pallas: bool = None, mesh=None, halo_inner: int = 1
-         ) -> Tuple[FlowState, StepOutputs]:
-    """Advance one dt.
+def _momentum(cfg: GridConfig, ga: GeomArrays, u, v, jet_vel, re, act_mode):
+    """The momentum half of one dt: explicit advect-diffuse predictor,
+    implicit volume penalization, and the fused BC/outlet-mass-correction
+    pass.  Returns ``(u_bc, v_bc, fx, fy)`` — the BC'd intermediate fields
+    the projection acts on, plus the body force (reaction) components.
 
-    jet_vel: scalar actuation amplitude — jet velocity (jet1 = +, jet2 = -)
-    in jet mode, cylinder surface speed in rotary mode.
-    re: Reynolds number; traced (per-env scenario data) when given, else the
-    static ``cfg.re``.
-    act_mode: actuation blend in [0, 1] — 0 = synthetic jets, 1 = rotary
-    cylinder control; traced when given, else jets.  Intermediate values
-    blend the two target fields (only 0/1 are physical scenarios).
-    backend: Poisson backend ("reference" | "packed" | "full" | "pallas" |
-    "halo"); "reference" (the default) runs the packed-checkerboard sweep
-    on even-width grids and the full-grid oracle otherwise; "halo" needs
-    ``mesh`` and runs the pressure solve as explicit x-slabs with ppermute
-    halo exchange over the mesh "model" axis — the paper's N_ranks > 1
-    spatial decomposition.  ``use_pallas`` is a deprecated alias.
-    halo_inner: local sweeps per halo exchange on the "halo" backend.  The
-    default 1 exchanges the updated parity before every colored half-sweep
-    (half-width messages — the MPI-per-iteration pattern whose cost the
-    paper's Fig. 7 measures — making the decomposed iteration exactly the
-    monolithic sweep); looser coupling leaves slab-boundary pressure error
-    that the projection feedback amplifies over hundreds of steps.
+    This is the single momentum implementation: ``step`` and the fused
+    actuation-interval path (``repro.kernels.actuation``) both call it, so
+    the megakernel can never drift from the per-step solver.
+
+    Contract (pinned by tests/test_cfd.py): the body force is the momentum
+    the penalization removed, measured against the *predictor* ``u_star``
+    BEFORE boundary conditions are applied — the post-BC fields are
+    deliberately separate names (``u_bc``/``v_bc``) so a refactor cannot
+    silently change ``fx``/``fy``.
     """
-    backend = poisson.resolve_backend(backend, use_pallas)
-    ga = GeomArrays(*geom_arrays)
     chi_u, chi_v, inlet_u = ga.chi_u, ga.chi_v, ga.inlet_u
     dt = cfg.dt
-    if re is None:
-        re = cfg.re
-
-    u, v, p = state
     # 1. advection-diffusion (explicit Euler).  The padded fields are shared
     # by both momentum updates (each previously re-padded both u and v).
     up, vp = _pad_u(u), _pad_v(v)
@@ -218,7 +200,8 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
         pen_v = jnp.maximum(chi_v, (1 - m) * ga.jmask_v + m * ga.rmask_v)
     u_pen = (u_star + lam * pen_u * tgt_u) / (1 + lam * pen_u)
     v_pen = (v_star + lam * pen_v * tgt_v) / (1 + lam * pen_v)
-    # momentum exchange -> force on the body (reaction), per unit density
+    # momentum exchange -> force on the body (reaction), per unit density —
+    # measured from the PREDICTOR u_star/v_star, before BCs touch the fields
     fx = -jnp.sum((u_pen - u_star) / dt) * cfg.dx * cfg.dy
     fy = -jnp.sum((v_pen - v_star) / dt) * cfg.dx * cfg.dy
 
@@ -230,23 +213,102 @@ def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
     influx = jnp.sum(inlet_u) * cfg.dy
     outflux = jnp.sum(u_pen[:, -2]) * cfg.dy
     out_col = u_pen[:, -2] + (influx - outflux) / (cfg.ny * cfg.dy)
-    u_star = u_pen.at[:, 0].set(inlet_u).at[:, -1].set(out_col)
-    v_star = _apply_bc_v(v_pen)
+    u_bc = u_pen.at[:, 0].set(inlet_u).at[:, -1].set(out_col)
+    v_bc = _apply_bc_v(v_pen)
+    return u_bc, v_bc, fx, fy
 
-    # 4. projection
-    rhs = divergence(u_star, v_star, cfg) / dt
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "use_pallas",
+                                             "mesh", "halo_inner"))
+def step(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState, jet_vel,
+         *, re=None, act_mode=None, backend: Optional[str] = None,
+         use_pallas: Optional[bool] = None, mesh=None, halo_inner: int = 1
+         ) -> Tuple[FlowState, StepOutputs]:
+    """Advance one dt.
+
+    jet_vel: scalar actuation amplitude — jet velocity (jet1 = +, jet2 = -)
+    in jet mode, cylinder surface speed in rotary mode.
+    re: Reynolds number; traced (per-env scenario data) when given, else the
+    static ``cfg.re``.
+    act_mode: actuation blend in [0, 1] — 0 = synthetic jets, 1 = rotary
+    cylinder control; traced when given, else jets.  Intermediate values
+    blend the two target fields (only 0/1 are physical scenarios).
+    backend: Poisson backend ("reference" | "packed" | "full" | "pallas" |
+    "halo" | "fused"); "reference" (the default) runs the packed-checkerboard
+    sweep on even-width grids and the full-grid oracle otherwise; "halo"
+    needs ``mesh`` and runs the pressure solve as explicit x-slabs with
+    ppermute halo exchange over the mesh "model" axis — the paper's
+    N_ranks > 1 spatial decomposition; "fused" only changes behaviour at
+    the interval level (``step_interval``) and solves a single step with
+    the reference sweep.  ``use_pallas`` is a deprecated alias.
+    halo_inner: local sweeps per halo exchange on the "halo" backend.  The
+    default 1 exchanges the updated parity before every colored half-sweep
+    (half-width messages — the MPI-per-iteration pattern whose cost the
+    paper's Fig. 7 measures — making the decomposed iteration exactly the
+    monolithic sweep); looser coupling leaves slab-boundary pressure error
+    that the projection feedback amplifies over hundreds of steps.
+    """
+    backend = poisson.resolve_backend(backend, use_pallas)
+    ga = GeomArrays(*geom_arrays)
+    dt = cfg.dt
+    if re is None:
+        re = cfg.re
+
+    u, v, p = state
+    # 1-3. momentum: predictor + penalization (+ forces) + BC/mass pass
+    u_bc, v_bc, fx, fy = _momentum(cfg, ga, u, v, jet_vel, re, act_mode)
+
+    # 4. projection ("fused" fuses at the interval level — step_interval —
+    # so a single step solves with the reference sweep)
+    rhs = divergence(u_bc, v_bc, cfg) / dt
     p = poisson.solve(rhs, cfg.dx, cfg.dy, iters=cfg.poisson_iters,
-                      omega=cfg.poisson_omega, p0=p, backend=backend,
+                      omega=cfg.poisson_omega, p0=p,
+                      backend="reference" if backend == "fused" else backend,
                       mesh=mesh, halo_inner=halo_inner)
-    u_new = u_star.at[:, 1:-1].add(-dt * (p[:, 1:] - p[:, :-1]) / cfg.dx)
-    v_new = v_star.at[1:-1, :].add(-dt * (p[1:, :] - p[:-1, :]) / cfg.dy)
-    u_new = _apply_bc_u(u_new, inlet_u)
+    u_new = u_bc.at[:, 1:-1].add(-dt * (p[:, 1:] - p[:, :-1]) / cfg.dx)
+    v_new = v_bc.at[1:-1, :].add(-dt * (p[1:, :] - p[:-1, :]) / cfg.dy)
+    u_new = _apply_bc_u(u_new, ga.inlet_u)
     v_new = _apply_bc_v(v_new)
 
     # force coefficients: 0.5 * rho * Ubar^2 * D = 0.5
     cd = fx / (0.5 * cfg.u_mean ** 2)
     cl = fy / (0.5 * cfg.u_mean ** 2)
     return FlowState(u_new, v_new, p), StepOutputs(cd=cd, cl=cl)
+
+
+def step_interval(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState,
+                  jet_vel, n_steps: int, *, re=None, act_mode=None,
+                  backend: Optional[str] = None,
+                  use_pallas: Optional[bool] = None, mesh=None,
+                  halo_inner: int = 1) -> Tuple[FlowState, StepOutputs]:
+    """Advance ``n_steps`` dt under one held actuation amplitude — one
+    actuation interval, the unit the DRL environment integrates between
+    agent actions.
+
+    Returns ``(FlowState, StepOutputs)`` with per-dt ``(n_steps,)`` force
+    coefficient arrays.
+
+    ``backend="fused"`` runs the interval through
+    ``repro.kernels.actuation``: the velocity fields and both packed
+    pressure parity planes are carried across the whole interval (no per-dt
+    pack/unpack round-trips), with the per-dt fused body executing as a
+    VMEM-resident Pallas megakernel on TPU and as one fused XLA scan body
+    elsewhere.  Grids the fused path cannot serve (odd width, or exceeding
+    the TPU VMEM budget) fall back to the reference scan with a
+    once-per-shape warning.  Every other backend scans :func:`step`.
+    """
+    backend = poisson.resolve_backend(backend, use_pallas)
+    if backend == "fused":
+        from repro.kernels.actuation import ops as actuation_ops
+        return actuation_ops.fused_interval(cfg, geom_arrays, state, jet_vel,
+                                            n_steps, re=re, act_mode=act_mode)
+
+    def body(flow, _):
+        return step(cfg, geom_arrays, flow, jet_vel, re=re,
+                    act_mode=act_mode, backend=backend, mesh=mesh,
+                    halo_inner=halo_inner)
+
+    return jax.lax.scan(body, state, None, length=n_steps)
 
 
 def geom_to_arrays(geom: Geometry) -> GeomArrays:

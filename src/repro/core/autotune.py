@@ -15,9 +15,11 @@ result executable:
      the paper (``scaling_model.least_squares_fit``).
   3. ``optimize_plan`` brute-forces the divisor lattice on the refit model.
   4. The result is a ``ResolvedPlan`` — (n_envs, n_ranks, mesh shape,
-     Poisson backend) — plus a JSON artifact (schema ``repro.autotune/v2``)
+     Poisson backend) — plus a JSON artifact (schema ``repro.autotune/v3``)
      of measured-vs-predicted component times, the host analogue of the
-     paper's Table I / Fig. 7 columns.
+     paper's Table I / Fig. 7 columns.  Single-rank plans additionally
+     compete the fused actuation-interval path (``backend="fused"``)
+     against the reference scan on measured whole-interval times.
 
 ``resolve_plan`` is the single entry point engines and training loops use to
 accept ``plan="auto" | ParallelPlan | ResolvedPlan``.
@@ -37,7 +39,13 @@ from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
     optimize_plan
 
 # v2: measured.t_poisson_layouts + plan.layout became required fields
-AUTOTUNE_SCHEMA = "repro.autotune/v2"
+# v3: measured.t_interval_backends (fused actuation-interval candidate)
+AUTOTUNE_SCHEMA = "repro.autotune/v3"
+
+# dt's per probe interval when timing t_interval_backends: long enough that
+# the fused path's per-interval amortization (single pack/unpack, carried
+# planes) shows, short enough to keep the probe cheap
+INTERVAL_PROBE_STEPS = 10
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +174,11 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
       t_poisson_layouts  {layout: time} for one pressure solve in packed vs
                      full-grid checkerboard storage on this grid — the
                      measured basis for the plan's single-rank layout pick
+      t_interval_backends  {backend: time} for one ``INTERVAL_PROBE_STEPS``-dt
+                     actuation interval through ``solver.step_interval`` —
+                     the reference scan vs the fused interval path; the
+                     measured basis for picking backend="fused" on
+                     single-rank plans
       t_policy       one policy inference (single obs)
       t_update       one PPO update on an (n_envs_probe * horizon) batch
       io             bytes + seconds for one episode spill through the
@@ -221,6 +234,18 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
                                               backend=b),
             rhs, iters=iters)
 
+    # -- the actuation interval: reference scan vs fused path ----------------
+    # Timed as whole intervals (what the env hot loop actually executes).
+    # Odd widths are skipped for "fused": it would fall back to the
+    # reference scan anyway (and warn), so the candidate adds nothing.
+    t_interval_backends: Dict[str, float] = {}
+    interval_candidates = ["reference"] + (["fused"] if grid.nx % 2 == 0
+                                           else [])
+    for b in interval_candidates:
+        fn = jax.jit(lambda s, b=b: solver.step_interval(
+            grid, ga, s, jnp.float32(0.0), INTERVAL_PROBE_STEPS, backend=b))
+        t_interval_backends[b] = _time(fn, st, iters=iters)
+
     # -- policy inference + PPO update --------------------------------------
     obs_dim = layout_size("ring149")
     pcfg = networks.PolicyConfig(obs_dim=obs_dim)
@@ -269,6 +294,8 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
         "t_step_ranks": t_step_ranks,
         "t_step_backends": step_backends,
         "t_poisson_layouts": t_poisson_layouts,
+        "t_interval_backends": t_interval_backends,
+        "interval_probe_steps": INTERVAL_PROBE_STEPS,
         "t_policy": t_policy,
         "t_update": t_update,
         "io": {"bytes_per_episode_env": nbytes / n_envs_probe,
@@ -381,6 +408,13 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
     layout = min(layouts, key=layouts.get) if layouts else "full"
     if backend == "reference":
         backend = layout
+    # single-rank plans may upgrade to the fused actuation-interval path when
+    # the measured interval time beats the reference scan (multi-rank plans
+    # need the halo decomposition, which the fused carry cannot serve)
+    intervals = measured.get("t_interval_backends", {})
+    if (best.n_ranks == 1 and "fused" in intervals
+            and intervals["fused"] <= min(intervals.values())):
+        backend = "fused"
 
     steps = {int(k): float(v) for k, v in measured["t_step_ranks"].items()}
     predicted = {r: model.t_step(r) for r in steps}
@@ -428,8 +462,8 @@ def validate_artifact(record: Dict[str, Any]) -> None:
     for key in ("measured", "fitted", "predicted", "plan", "candidates"):
         if key not in record:
             raise ValueError(f"artifact missing {key!r}")
-    for key in ("t_step_ranks", "t_poisson_layouts", "t_policy", "t_update",
-                "io"):
+    for key in ("t_step_ranks", "t_poisson_layouts", "t_interval_backends",
+                "t_policy", "t_update", "io"):
         if key not in record["measured"]:
             raise ValueError(f"artifact.measured missing {key!r}")
     plan = record["plan"]

@@ -24,6 +24,29 @@ import jax
 
 MODEL_BACKENDS: Tuple[str, ...] = ("reference", "pallas")
 
+# every warn-once cache in the repo, so test isolation is one call away
+_WARN_CACHES: list = []
+
+
+def warn_once_cache() -> set:
+    """A set for warn-once deduplication (``if key not in cache: warn``),
+    registered so :func:`reset_warning_caches` can clear it.
+
+    Module-level warn-once sets are process-global state: without a reset
+    hook, warning-assertion tests pass or fail depending on execution order.
+    Every warn-once site (the poisson odd-nx fallback, the fused-interval
+    fallback, ...) allocates its cache here instead of a bare ``set()``."""
+    cache: set = set()
+    _WARN_CACHES.append(cache)
+    return cache
+
+
+def reset_warning_caches() -> None:
+    """Clear every registered warn-once cache (autouse pytest fixture hook):
+    after a reset, each warn-once warning fires again on its next trigger."""
+    for cache in _WARN_CACHES:
+        cache.clear()
+
 
 def caller_stacklevel(skip_dirs: Sequence[str], *, base: int = 2) -> int:
     """Stacklevel (as counted from the ``warnings.warn`` call inside

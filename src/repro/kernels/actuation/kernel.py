@@ -1,0 +1,80 @@
+"""Pallas megakernel: one fused solver dt with every field VMEM-resident.
+
+One ``pallas_call`` per dt advances momentum (advect-diffuse + penalization
++ fused BC/outlet-mass-correction), the packed red-black SOR projection, and
+the velocity correction without the fields ever leaving VMEM — ``u``, ``v``,
+both packed pressure parity planes, and the closed-over geometry are kernel
+operands held on-chip for the whole dt (~50 SOR sweep pairs included).
+``solver.step_interval(backend="fused")`` scans this kernel over the
+actuation interval, so across the 50-dt interval the only HBM traffic is
+the scan carry hand-off between consecutive kernel launches.
+
+The body is NOT re-implemented here: the kernel calls the same
+``ops.fused_dt`` the jnp tier lowers (which itself calls
+``solver._momentum`` and the ``poisson.packed_half_sweep`` stencil) — pure
+jnp, so it traces inside the kernel unchanged.  One momentum and one
+stencil implementation serve reference, packed, halo, pallas-Poisson, and
+this megakernel.
+
+On non-TPU hosts the kernel runs in interpret mode for correctness tests
+(tests/test_fused_interval.py gates pallas-vs-jnp parity); the production
+CPU path is the jnp tier (ops.select_tier), which carries the same fusion
+structure without Pallas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.cfd.grid import GridConfig
+
+# GeomArrays field order (repro.cfd.solver.GeomArrays._fields) — the kernel
+# takes them as individual refs so every mask/target lives in VMEM too
+_N_GEOM = 11
+
+
+def _fused_dt_kernel(*refs, cfg: GridConfig):
+    from repro.cfd.solver import GeomArrays
+    from repro.kernels.actuation.ops import fused_dt
+
+    (u_ref, v_ref, red_ref, black_ref), rest = refs[:4], refs[4:]
+    geom_refs, rest = rest[:_N_GEOM], rest[_N_GEOM:]
+    (jet_ref, re_ref, mode_ref), outs = rest[:3], rest[3:]
+    u_out, v_out, red_out, black_out, cd_out, cl_out = outs
+
+    ga = GeomArrays(*(r[...] for r in geom_refs))
+    u2, v2, red2, black2, cd, cl = fused_dt(
+        cfg, ga, u_ref[...], v_ref[...], red_ref[...], black_ref[...],
+        jet_ref[0, 0], re_ref[0, 0], mode_ref[0, 0])
+    u_out[...] = u2
+    v_out[...] = v2
+    red_out[...] = red2
+    black_out[...] = black2
+    cd_out[...] = jnp.reshape(cd, (1, 1))
+    cl_out[...] = jnp.reshape(cl, (1, 1))
+
+
+def fused_step(cfg: GridConfig, ga, u, v, red, black, jet_vel, re, act_mode,
+               *, interpret: bool = True):
+    """One dt through the megakernel.  Mirrors ``ops.fused_dt``'s signature
+    and return ``(u, v, red, black, cd, cl)``; scalars ride as (1, 1)
+    operands so the whole dt is a single launch."""
+    f32 = jnp.float32
+    scalar = lambda x: jnp.reshape(jnp.asarray(x, f32), (1, 1))
+    kern = functools.partial(_fused_dt_kernel, cfg=cfg)
+    out_shape = [
+        jax.ShapeDtypeStruct(u.shape, u.dtype),
+        jax.ShapeDtypeStruct(v.shape, v.dtype),
+        jax.ShapeDtypeStruct(red.shape, red.dtype),
+        jax.ShapeDtypeStruct(black.shape, black.dtype),
+        jax.ShapeDtypeStruct((1, 1), f32),
+        jax.ShapeDtypeStruct((1, 1), f32),
+    ]
+    outs = pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)(
+        u, v, red, black, *ga,
+        scalar(jet_vel), scalar(re), scalar(act_mode))
+    u2, v2, red2, black2, cd, cl = outs
+    return u2, v2, red2, black2, cd[0, 0], cl[0, 0]

@@ -45,7 +45,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     analyzed = hlo_analysis.analyze(txt)
     params_shape = steps.abstract_params(cfg)
     mf = roofline.model_flops(cfg, shape, params_shape)
-    rl = roofline.build(arch, shape_name, mesh_name, n_dev, analyzed, mf)
+    # the dry-run models TPU pods explicitly (production meshes above), so
+    # its roofline prices against the TPU preset regardless of the host
+    rl = roofline.build(arch, shape_name, mesh_name, n_dev, analyzed, mf,
+                        hw="tpu_v5e")
 
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,

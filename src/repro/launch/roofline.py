@@ -1,4 +1,4 @@
-"""Roofline terms from compiled dry-run artifacts (TPU v5e constants).
+"""Roofline terms from compiled dry-run artifacts.
 
     compute term    = HLO_FLOPs_per_device / peak_FLOPs
     memory term     = HLO_bytes_per_device / HBM_bw
@@ -7,21 +7,91 @@
 The SPMD-partitioned HLO is per-device, so analyzer outputs plug in directly.
 MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE; 2·N·tokens for single-token
 decode) anchors the "useful compute" ratio.
+
+The hardware constants the terms divide by are a :class:`HardwareSpec`, NOT
+module constants: every roofline is relative to a named device preset
+(``tpu_v5e``, ``cpu_generic``, ...), selected explicitly, via the
+``$REPRO_HW_SPEC`` environment variable, or detected from the running jax
+platform.  An unrecognized platform raises with the preset list instead of
+silently pricing the workload at TPU numbers.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s / chip
-ICI_BW = 50e9              # bytes/s / link (~per direction)
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Peak rates a roofline prices against — one device (chip or core).
+
+    ``ici_bw`` is the per-link interconnect bandwidth the collective term
+    divides by; single-device presets keep a nominal loopback figure so the
+    term stays defined (it is zero whenever coll_bytes is zero).
+    """
+    name: str
+    peak_flops: float            # FLOP/s per device
+    hbm_bw: float                # main-memory bytes/s per device
+    ici_bw: float                # interconnect bytes/s per link
+    description: str = ""
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "peak_flops": self.peak_flops,
+                "hbm_bw": self.hbm_bw, "ici_bw": self.ici_bw}
+
+
+HARDWARE_PRESETS: Dict[str, HardwareSpec] = {
+    "tpu_v5e": HardwareSpec(
+        name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+        description="TPU v5e chip: bf16 peak, HBM2e, ICI per link "
+                    "(~per direction)"),
+    "cpu_generic": HardwareSpec(
+        name="cpu_generic", peak_flops=5e10, hbm_bw=2e10, ici_bw=1e10,
+        description="one generic x86 core: ~50 GFLOP/s sustained f32 FMA, "
+                    "~20 GB/s sustained DRAM, loopback interconnect"),
+}
+
+# environment override consulted when no spec is passed explicitly
+HW_SPEC_ENV = "REPRO_HW_SPEC"
+
+
+def hardware_spec(name: Union[None, str, HardwareSpec] = None
+                  ) -> HardwareSpec:
+    """Resolve the hardware a roofline prices against.
+
+    Precedence: explicit ``name`` (a preset name or a HardwareSpec, passed
+    through) > the ``$REPRO_HW_SPEC`` preset name > detection from the
+    running jax platform (tpu -> ``tpu_v5e``, cpu -> ``cpu_generic``).
+    Anything unrecognized raises a ValueError listing the presets — a
+    roofline against silently-wrong peak numbers is worse than no roofline.
+    """
+    if isinstance(name, HardwareSpec):
+        return name
+    if name is None:
+        name = os.environ.get(HW_SPEC_ENV) or None
+    if name is not None:
+        try:
+            return HARDWARE_PRESETS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown hardware spec {name!r}; choose a preset from "
+                f"{sorted(HARDWARE_PRESETS)} (or pass a HardwareSpec with "
+                f"your device's peak_flops/hbm_bw/ici_bw)") from None
+    platform = jax.default_backend()
+    detected = {"tpu": "tpu_v5e", "cpu": "cpu_generic"}.get(platform)
+    if detected is None:
+        raise ValueError(
+            f"no hardware preset for jax platform {platform!r}; pass one of "
+            f"{sorted(HARDWARE_PRESETS)} explicitly (hw= / ${HW_SPEC_ENV}) "
+            f"or a HardwareSpec with your device's peak numbers")
+    return HARDWARE_PRESETS[detected]
 
 
 def param_count(cfg: ModelConfig, params_shape) -> int:
@@ -81,18 +151,25 @@ class Roofline:
     coll_bytes_per_dev: float
     model_flops: float
     coll_by_kind: Dict[str, float]
+    # the device the terms price against; None resolves through
+    # hardware_spec() (explicit > $REPRO_HW_SPEC > platform detection)
+    hw: Optional[HardwareSpec] = None
+
+    def __post_init__(self):
+        if self.hw is None:
+            self.hw = hardware_spec()
 
     @property
     def compute_s(self) -> float:
-        return self.flops_per_dev / PEAK_FLOPS
+        return self.flops_per_dev / self.hw.peak_flops
 
     @property
     def memory_s(self) -> float:
-        return self.bytes_per_dev / HBM_BW
+        return self.bytes_per_dev / self.hw.hbm_bw
 
     @property
     def collective_s(self) -> float:
-        return self.coll_bytes_per_dev / ICI_BW
+        return self.coll_bytes_per_dev / self.hw.ici_bw
 
     @property
     def dominant(self) -> str:
@@ -113,7 +190,7 @@ class Roofline:
     @property
     def mfu_bound(self) -> float:
         """Upper bound on model-FLOPs utilization implied by the terms."""
-        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        ideal = self.model_flops / (self.n_devices * self.hw.peak_flops)
         return ideal / self.bound_s if self.bound_s else 0.0
 
     def to_dict(self) -> Dict:
@@ -125,6 +202,7 @@ class Roofline:
             "coll_bytes_per_dev": self.coll_bytes_per_dev,
             "coll_by_kind": self.coll_by_kind,
             "model_flops": self.model_flops,
+            "hw": self.hw.to_dict(),
             "compute_s": self.compute_s, "memory_s": self.memory_s,
             "collective_s": self.collective_s, "dominant": self.dominant,
             "useful_ratio": self.useful_ratio, "mfu_bound": self.mfu_bound,
@@ -132,7 +210,8 @@ class Roofline:
 
 
 def build(arch: str, shape_name: str, mesh_name: str, n_devices: int,
-          analyzed: Dict[str, float], model_fl: float) -> Roofline:
+          analyzed: Dict[str, float], model_fl: float,
+          hw: Union[None, str, HardwareSpec] = None) -> Roofline:
     coll_by_kind = {k[len("coll_"):]: v for k, v in analyzed.items()
                     if k.startswith("coll_") and k != "coll_bytes"}
     return Roofline(
@@ -140,4 +219,5 @@ def build(arch: str, shape_name: str, mesh_name: str, n_devices: int,
         flops_per_dev=analyzed.get("flops", 0.0),
         bytes_per_dev=analyzed.get("bytes", 0.0),
         coll_bytes_per_dev=analyzed.get("coll_bytes", 0.0),
-        model_flops=model_fl, coll_by_kind=coll_by_kind)
+        model_flops=model_fl, coll_by_kind=coll_by_kind,
+        hw=hardware_spec(hw))

@@ -4,5 +4,15 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _reset_warning_caches():
+    """Warn-once caches are process-global; without this reset, any test
+    asserting a once-per-shape warning depends on execution order."""
+    from repro.core import backend as backend_mod
+    backend_mod.reset_warning_caches()
+    yield

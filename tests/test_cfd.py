@@ -136,3 +136,39 @@ def test_cd0_explicit_vs_calibrated():
     env_zero = CylinderEnv(EnvConfig(**base, cd0=0.0))   # explicit zero
     env_zero.reset()
     assert env_zero.cfg.cd0 == 0.0                       # kept, not a flag
+
+
+def test_momentum_force_measured_from_predictor(developed):
+    """_momentum contract: fx/fy are the momentum the penalization removed,
+    measured against the PREDICTOR u_star/v_star before the fused BC/mass
+    pass touches the fields (the post-BC fields are the separate u_bc/v_bc
+    names).  Recompute the predictor chain independently and require exact
+    f32 agreement — a refactor that moves the force measurement after the
+    BCs (or reorders the chain) breaks this."""
+    st, _, _, ga = developed
+    jet = jnp.float32(0.1)
+
+    up, vp = solver._pad_u(st.u), solver._pad_v(st.v)
+    u_star = st.u + CFG.dt * solver._advect_diffuse_u(up, vp, CFG, CFG.re)
+    v_star = st.v + CFG.dt * solver._advect_diffuse_v(up, vp, CFG, CFG.re)
+    lam = CFG.dt / CFG.penal_eta
+    pen_u = jnp.maximum(ga.chi_u, ga.jmask_u)
+    pen_v = jnp.maximum(ga.chi_v, ga.jmask_v)
+    u_pen = (u_star + lam * pen_u * (jet * (ga.jet_u[0] - ga.jet_u[1]))) \
+        / (1 + lam * pen_u)
+    v_pen = (v_star + lam * pen_v * (jet * (ga.jet_v[0] - ga.jet_v[1]))) \
+        / (1 + lam * pen_v)
+    fx_pred = -jnp.sum((u_pen - u_star) / CFG.dt) * CFG.dx * CFG.dy
+    fy_pred = -jnp.sum((v_pen - v_star) / CFG.dt) * CFG.dx * CFG.dy
+
+    u_bc, v_bc, fx, fy = solver._momentum(CFG, ga, st.u, st.v, jet,
+                                          CFG.re, None)
+    assert float(fx) == float(fx_pred)
+    assert float(fy) == float(fy_pred)
+    # the BC/mass pass runs AFTER the measurement: it edits only the inlet
+    # and outlet columns of u (and the walls of v), and it does edit them
+    assert float(jnp.max(jnp.abs(u_bc[:, 1:-1] - u_pen[:, 1:-1]))) == 0.0
+    assert float(jnp.max(jnp.abs(u_bc - u_pen))) > 0.0
+    # measuring from the post-BC field would give a different force
+    fx_post = -jnp.sum((u_bc - u_star) / CFG.dt) * CFG.dx * CFG.dy
+    assert float(fx) != float(fx_post)

@@ -1,0 +1,177 @@
+"""backend="fused" actuation-interval path: parity, tiers, fallback,
+long-horizon stability (repro.kernels.actuation)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import solver
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig, build_geometry
+from repro.core import backend as backend_mod
+from repro.kernels.actuation import ops
+
+CFG = GridConfig(res=4, dt=0.01, poisson_iters=12)
+
+
+@pytest.fixture(scope="module")
+def developed():
+    """A mildly developed flow on the small grid (shared by parity tests)."""
+    geom = build_geometry(CFG)
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(CFG, geom)
+    st, _ = jax.jit(lambda s: solver.step_interval(
+        CFG, ga, s, jnp.float32(0.0), 30, backend="reference"))(st)
+    return ga, st
+
+
+def _maxabs(a, b):
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+def test_step_interval_reference_is_scan_of_step(developed):
+    """The reference arm of step_interval is literally a scan of step():
+    bitwise against an explicit lax.scan of step compiled the same way, and
+    ulp-close to eagerly chained step() calls (each eager call compiles in
+    its own context, so XLA may reassociate within ~1 ulp)."""
+    ga, st = developed
+    jet = jnp.float32(0.06)
+    st_i, outs_i = jax.jit(lambda s: solver.step_interval(
+        CFG, ga, s, jet, 5, backend="reference"))(st)
+
+    def manual_scan(s):
+        return jax.lax.scan(
+            lambda flow, _: solver.step(CFG, ga, flow, jet,
+                                        backend="reference"),
+            s, None, length=5)
+    st_m, outs_m = jax.jit(manual_scan)(st)
+    assert _maxabs(st_i.u, st_m.u) == 0.0
+    assert _maxabs(st_i.p, st_m.p) == 0.0
+    assert _maxabs(outs_i.cd, outs_m.cd) == 0.0
+
+    flow = st
+    cds = []
+    for _ in range(5):
+        flow, o = solver.step(CFG, ga, flow, jet, backend="reference")
+        cds.append(o.cd)
+    np.testing.assert_allclose(np.asarray(st_i.u), np.asarray(flow.u),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs_i.cd), np.asarray(cds),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("act_mode", [0.0, 1.0])
+def test_fused_matches_reference_bitwise(developed, act_mode):
+    """Interval fusion reorders nothing: same ops, same f32 results."""
+    ga, st = developed
+    jet = jnp.float32(0.08)
+    run = lambda b: jax.jit(lambda s: solver.step_interval(
+        CFG, ga, s, jet, 8, act_mode=jnp.float32(act_mode), backend=b))(st)
+    st_r, out_r = run("reference")
+    st_f, out_f = run("fused")
+    assert _maxabs(st_f.u, st_r.u) == 0.0
+    assert _maxabs(st_f.v, st_r.v) == 0.0
+    assert _maxabs(st_f.p, st_r.p) == 0.0
+    assert _maxabs(out_f.cd, out_r.cd) == 0.0
+    assert _maxabs(out_f.cl, out_r.cl) == 0.0
+
+
+def test_pallas_tier_matches_jnp_tier(developed):
+    """The Pallas megakernel (interpret mode off-TPU) computes the same
+    per-dt body as the fused XLA scan tier."""
+    ga, st = developed
+    jet = jnp.float32(0.05)
+    run = lambda tier: ops.fused_interval(
+        CFG, tuple(ga), st, jet, 2, re=CFG.re,
+        act_mode=jnp.float32(0.0), tier=tier)
+    st_j, out_j = run("jnp")
+    st_p, out_p = run("pallas")
+    np.testing.assert_allclose(np.asarray(st_p.u), np.asarray(st_j.u),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_p.p), np.asarray(st_j.p),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_p.cd), np.asarray(out_j.cd),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_env_vmapped_mixed_scenarios_parity():
+    """Jet + rotary scenarios vmapped into one batch: the fused env path
+    must match the reference scan within a couple of f32 ulp (measured
+    bitwise on CPU; the tolerance leaves room for fused-multiply-add
+    contraction differences on other backends)."""
+    cfg = EnvConfig(grid=CFG, steps_per_action=5, warmup_time=0.3)
+    scns = ["cyl_re100", "cyl_re200_rotary"]
+    acts = jnp.asarray([0.4, -0.3], jnp.float32)
+    out = {}
+    for b in ("reference", "fused"):
+        env = CylinderEnv(cfg, backend=b)
+        st_b, _ = env.reset_batch(scns)
+        out[b] = jax.jit(jax.vmap(env.env_step))(st_b, acts)
+    (st_r, o_r), (st_f, o_f) = out["reference"], out["fused"]
+    eps = np.finfo(np.float32).eps
+    scale = float(jnp.max(jnp.abs(st_r.flow.u)))
+    assert _maxabs(st_f.flow.u, st_r.flow.u) <= 2 * eps * scale
+    assert _maxabs(st_f.flow.p, st_r.flow.p) <= 2 * eps * max(
+        1.0, float(jnp.max(jnp.abs(st_r.flow.p))))
+    assert _maxabs(o_f.cd, o_r.cd) <= 2 * eps * max(
+        1.0, float(jnp.max(jnp.abs(o_r.cd))))
+    assert _maxabs(o_f.reward, o_r.reward) <= 2 * eps * max(
+        1.0, float(jnp.max(jnp.abs(o_r.reward))))
+
+
+def test_long_horizon_stability_re100():
+    """2000 dt at Re 100 (20 t.u., many shedding periods): the fused carry
+    must not accumulate drift vs the reference scan, and both must stay
+    physical (finite fields, bounded velocity, bounded divergence)."""
+    cfg = GridConfig(res=6, dt=0.01, poisson_iters=30)
+    geom = build_geometry(cfg)
+    ga = solver.geom_to_arrays(geom)
+    st0 = solver.init_state(cfg, geom)
+    run = jax.jit(lambda s, b: solver.step_interval(
+        cfg, ga, s, jnp.float32(0.0), 2000, backend=b),
+        static_argnames="b")
+    st_r, out_r = run(st0, "reference")
+    st_f, out_f = run(st0, "fused")
+    for st, outs in ((st_r, out_r), (st_f, out_f)):
+        assert np.isfinite(np.asarray(st.u)).all()
+        assert np.isfinite(np.asarray(st.p)).all()
+        assert float(jnp.max(jnp.abs(st.u))) < 5.0
+        assert np.isfinite(np.asarray(outs.cd)).all()
+        div = np.asarray(solver.divergence(st.u, st.v, cfg))
+        assert np.abs(div[2:-2, 2:-2]).max() < 0.5
+    # per-dt bodies are identical f32 programs -> no divergence to amplify
+    assert _maxabs(st_f.u, st_r.u) == 0.0
+    assert _maxabs(st_f.p, st_r.p) == 0.0
+    assert _maxabs(out_f.cd[-1], out_r.cd[-1]) == 0.0
+
+
+class _OddGrid:
+    """select_tier duck type: GridConfig can't express an odd width
+    (nx = 22*res), but external grids can."""
+    ny, nx = 8, 7
+
+
+def test_fused_fallback_warns_once_per_shape_and_after_reset():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert ops.select_tier(_OddGrid) == "reference"
+        assert len(w) == 1 and "falls back" in str(w[0].message)
+        # second hit on the same shape: silent
+        assert ops.select_tier(_OddGrid) == "reference"
+        assert len(w) == 1
+        # the registry reset re-arms the warning (test isolation hook)
+        backend_mod.reset_warning_caches()
+        assert ops.select_tier(_OddGrid) == "reference"
+        assert len(w) == 2
+
+
+def test_select_tier_even_grid_off_tpu():
+    assert ops.select_tier(CFG) == "jnp"
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    monkeypatch.setenv(ops.VMEM_BUDGET_ENV, "12345")
+    assert ops.vmem_budget() == 12345
+    assert ops.vmem_bytes(CFG) > 0

@@ -77,14 +77,50 @@ def test_model_flops_moe_active():
 
 
 def test_roofline_terms():
+    hw = roofline.HARDWARE_PRESETS["tpu_v5e"]
     rl = roofline.Roofline(
         arch="x", shape="train_4k", mesh="m", n_devices=256,
-        flops_per_dev=197e12, bytes_per_dev=819e9, coll_bytes_per_dev=50e9,
-        model_flops=197e12 * 256, coll_by_kind={})
+        flops_per_dev=hw.peak_flops, bytes_per_dev=hw.hbm_bw,
+        coll_bytes_per_dev=hw.ici_bw,
+        model_flops=hw.peak_flops * 256, coll_by_kind={}, hw=hw)
     assert abs(rl.compute_s - 1.0) < 1e-9
     assert abs(rl.memory_s - 1.0) < 1e-9
     assert abs(rl.collective_s - 1.0) < 1e-9
     assert abs(rl.useful_ratio - 1.0) < 1e-9
+
+
+def test_hardware_spec_presets_and_resolution(monkeypatch):
+    # explicit preset name and passthrough of a spec object
+    assert roofline.hardware_spec("tpu_v5e").peak_flops == 197e12
+    custom = roofline.HardwareSpec("lab_gpu", 1e12, 1e11, 1e10)
+    assert roofline.hardware_spec(custom) is custom
+    # environment override beats platform detection
+    monkeypatch.setenv(roofline.HW_SPEC_ENV, "tpu_v5e")
+    assert roofline.hardware_spec().name == "tpu_v5e"
+    monkeypatch.delenv(roofline.HW_SPEC_ENV)
+    # this suite pins JAX_PLATFORMS=cpu -> detection lands on cpu_generic
+    assert roofline.hardware_spec().name == "cpu_generic"
+
+
+def test_hardware_spec_unknown_is_actionable(monkeypatch):
+    with pytest.raises(ValueError, match="cpu_generic.*tpu_v5e"):
+        roofline.hardware_spec("tpu_v9000")
+    # a bad env override fails the same way instead of silently defaulting
+    monkeypatch.setenv(roofline.HW_SPEC_ENV, "nonsense")
+    with pytest.raises(ValueError, match="unknown hardware spec"):
+        roofline.hardware_spec()
+
+
+def test_roofline_prices_against_its_spec():
+    cpu = roofline.HARDWARE_PRESETS["cpu_generic"]
+    rl = roofline.build("x", "s", "m", 1,
+                        {"flops": cpu.peak_flops, "bytes": cpu.hbm_bw / 2,
+                         "coll_bytes": 0.0}, cpu.peak_flops, hw="cpu_generic")
+    assert rl.hw.name == "cpu_generic"
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 0.5) < 1e-9
+    assert rl.dominant == "compute"
+    assert rl.to_dict()["hw"]["name"] == "cpu_generic"
 
 
 def test_train_step_on_debug_mesh():

@@ -13,9 +13,11 @@ trajectory across PRs is a single diffable file, and CI can upload the lot
 as workflow artifacts.
 
 ``--check`` (CI mode) exits nonzero when no artifacts were found, any is
-unreadable/untagged, or a present golden-drift measurement exceeds the
+unreadable/untagged, a present golden-drift measurement exceeds the
 golden-physics test tolerances — perf artifacts must not paper over a
-physics regression.
+physics regression — or an artifact's self-declared perf gate failed
+(``gate.passed`` false, e.g. bench_megakernel's required speedup vs the
+committed training baseline).
 
     PYTHONPATH=src python tools/bench_report.py \
         [--dir artifacts] [--out artifacts/BENCH_summary.json] [--check]
@@ -40,6 +42,8 @@ DRIFT_TOLERANCES = {"strouhal_rel_drift": 0.015,
 # format to render them in (missing keys are simply skipped per artifact)
 HEADLINES = (
     ("env_steps_per_s", "{:.1f}"),
+    ("gate.speedup_vs_baseline", "{:.2f}x"),
+    ("gate.passed", "{}"),
     ("shares.collect", "{:.1%}"),
     ("shares.update", "{:.1%}"),
     ("shares.sink_write", "{:.1%}"),
@@ -97,6 +101,21 @@ def summarize(art_dir: Path, include_smoke: bool = False) -> dict:
             "entries": entries}
 
 
+def gate_failures(summary: dict) -> list:
+    """Artifacts whose self-declared perf gate failed (``gate.passed``
+    false) — e.g. bench_megakernel's required speedup vs the committed
+    training baseline.  Artifacts without a gate are simply not gated."""
+    out = []
+    for name, entry in summary["entries"].items():
+        scalars = entry.get("scalars", {})
+        if scalars.get("gate.passed") is False:
+            req = scalars.get("gate.required_speedup")
+            got = scalars.get("gate.speedup_vs_baseline")
+            out.append(f"{name}: gate.passed=false "
+                       f"(speedup {got} < required {req})")
+    return out
+
+
 def drift_violations(summary: dict) -> list:
     """Golden-physics drift scalars (any artifact) beyond test tolerance."""
     out = []
@@ -143,6 +162,33 @@ def render_markdown(summary: dict) -> str:
             if k in train:
                 lines.append(f"- {k}: {train[k]:.1%}")
 
+    mega = next((e["scalars"] for n, e in summary["entries"].items()
+                 if e.get("schema", "").startswith("repro.bench_megakernel/")),
+                None)
+    if mega:
+        lines += ["", "## Fused megakernel (measured vs roofline)", ""]
+        hw = mega.get("roofline.hw.name", "?")
+        lines.append(
+            f"- fused interval: {mega.get('env_steps_per_s', 0):.1f} "
+            f"env-steps/s, {mega.get('gate.speedup_vs_baseline', 0):.2f}x "
+            f"vs training baseline (gate "
+            f"{'PASS' if mega.get('gate.passed') else 'FAIL'}, requires "
+            f"{mega.get('gate.required_speedup', 0):.1f}x)")
+        if "roofline.measured_s" in mega:
+            lines.append(
+                f"- roofline[{hw}]: measured "
+                f"{mega['roofline.measured_s']*1e3:.1f} ms/interval vs "
+                f"bound {mega.get('roofline.bound_s', 0)*1e3:.1f} ms "
+                f"({mega.get('roofline.dominant', '?')}-dominated); gap "
+                f"{mega.get('roofline.gap', 0):.2f}x, vs compute term "
+                f"{mega.get('roofline.gap_vs_compute', 0):.2f}x")
+        if "parity.u_maxabs" in mega:
+            lines.append(
+                f"- fused-vs-reference parity (mixed vmapped batch): "
+                f"max|du|={mega['parity.u_maxabs']:.1e}, "
+                f"max|dp|={mega.get('parity.p_maxabs', 0):.1e}, "
+                f"max|dCd|={mega.get('parity.cd_maxabs', 0):.1e}")
+
     lines += ["", "## Golden-physics drift", ""]
     drifted = False
     for name, entry in sorted(summary["entries"].items()):
@@ -171,8 +217,9 @@ def main() -> None:
                     help="dashboard output (default: <dir>/BENCH_summary.md)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero when no artifacts were found, any "
-                         "failed to parse / lacks a schema tag, or golden "
-                         "drift exceeds test tolerance (CI mode)")
+                         "failed to parse / lacks a schema tag, golden "
+                         "drift exceeds test tolerance, or a perf gate "
+                         "(gate.passed) failed (CI mode)")
     ap.add_argument("--include-smoke", action="store_true",
                     help="also aggregate BENCH_*_smoke.json (excluded by "
                          "default so CI smoke noise never enters the "
@@ -212,6 +259,8 @@ def main() -> None:
                      if e.get("schema") == "<untagged>"]
         problems += [f"golden drift over tolerance: {v}"
                      for v in drift_violations(summary)]
+        problems += [f"perf gate failed: {v}"
+                     for v in gate_failures(summary)]
         if problems:
             raise SystemExit("bench summary check failed:\n  "
                              + "\n  ".join(problems))

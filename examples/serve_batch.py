@@ -1,7 +1,19 @@
-"""Batched serving demo: prefill a batch of prompts, then decode tokens with
-the KV cache (the decode_32k shape at reduced scale).
+"""Batched policy-inference front end: the serving half of a deployed AFC
+controller.
 
-    PYTHONPATH=src python examples/serve_batch.py --arch qwen2-vl-2b
+Loads a trained ``TrainState`` checkpoint (``repro.drl.train`` +
+``AsyncCheckpointer`` layout; falls back to freshly initialized params so
+the demo runs standalone) and serves batched probe-observation -> jet-action
+requests through one jitted program — the shape a flow-control deployment
+sees: many cylinder instances stream probe readings, one host answers with
+actuation commands inside the actuation deadline.
+
+Reports per-request p50 / p99 latency and aggregate actions/sec over a
+burst of batches, plus the actuation-period budget the paper's envs give
+the controller (steps_per_action x dt in simulated seconds).
+
+    PYTHONPATH=src python examples/serve_batch.py [--ckpt runs/ckpt] \
+        [--batch 16] [--requests 200] [--deterministic]
 """
 import argparse
 import time
@@ -10,57 +22,80 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.models import frontend as fe_mod
-from repro.models import model as M
+from repro.cfd.probes import layout_size
+from repro.drl import networks
+
+
+def load_params(ckpt: str, obs_dim: int):
+    """Params from the newest valid checkpoint, or fresh ones (demo mode)."""
+    if ckpt:
+        from repro.ckpt.checkpoint import latest_checkpoint
+        from repro.drl.train_state import load_train_state
+        path = latest_checkpoint(ckpt) if not ckpt.endswith(".ckpt") else ckpt
+        if path is None:
+            raise SystemExit(f"no valid checkpoint under {ckpt!r}")
+        ts, meta = load_train_state(path)
+        params = jax.tree.map(jnp.asarray, ts.params)
+        dim = int(meta.get("obs_dim", obs_dim))
+        return params, dim, f"checkpoint {path} (episode {meta['episode']})"
+    pcfg = networks.PolicyConfig(obs_dim=obs_dim)
+    params = networks.init_actor_critic(pcfg, jax.random.PRNGKey(0))
+    return params, obs_dim, "fresh params (no --ckpt given)"
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi4-mini-3.8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir (newest valid is served) or a "
+                         "specific .ckpt file; default: fresh params")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="envs per inference request")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="timed requests after warmup")
+    ap.add_argument("--probe-layout", default="ring149",
+                    help="probe layout naming the obs dim (cfd.probes)")
+    ap.add_argument("--deterministic", action="store_true",
+                    help="serve the policy mean (deployment), not samples "
+                         "(training-style exploration)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    B, P = args.batch, args.prompt_len
-    cache_len = P + args.new_tokens
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
-                                 cfg.vocab_size)
-    fe = None
-    if cfg.frontend:
-        t = fe_mod.num_frontend_tokens(cfg, P)
-        fe = jax.random.normal(jax.random.PRNGKey(2),
-                               (B, t, fe_mod.frontend_dim(cfg)))
+    obs_dim = layout_size(args.probe_layout)
+    params, obs_dim, src = load_params(args.ckpt, obs_dim)
 
-    prefill = jax.jit(lambda p, t: M.prefill(cfg, p, t, cache_len=cache_len,
-                                             frontend_embeds=fe))
-    decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+    # the serving program: one jitted batched forward per request
+    if args.deterministic:
+        infer = jax.jit(lambda p, o, k: networks.policy_dist(p, o)[0])
+    else:
+        infer = jax.jit(lambda p, o, k: jax.vmap(
+            networks.sample_action, in_axes=(None, 0, 0))(p, o, k)[0])
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+    key = jax.random.PRNGKey(args.seed)
+    obs = jax.random.normal(key, (args.batch, obs_dim))
+    keys = jax.random.split(key, args.batch)
+    jax.block_until_ready(infer(params, obs, keys))       # compile (warmup)
 
-    outs = [np.asarray(tok)[:, 0]]
-    t0 = time.perf_counter()
-    for i in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, tok, jnp.int32(P + i))
-        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
-        outs.append(np.asarray(tok)[:, 0])
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    lat = []
+    t_all = time.perf_counter()
+    for i in range(args.requests):
+        key, ko = jax.random.split(key)
+        obs = jax.random.normal(ko, (args.batch, obs_dim))
+        keys = jax.random.split(ko, args.batch)
+        t0 = time.perf_counter()
+        act = infer(params, obs, keys)
+        jax.block_until_ready(act)
+        lat.append(time.perf_counter() - t0)
+    wall = time.perf_counter() - t_all
 
-    gen = np.stack(outs, axis=1)
-    print(f"arch {cfg.name}  batch {B}  prompt {P}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
-          f"{t_decode/(args.new_tokens-1)*1e3:.2f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"  seq{b}: {gen[b].tolist()}")
-    assert not np.isnan(gen).any()
+    act = np.asarray(act)
+    assert act.shape[0] == args.batch and not np.isnan(act).any()
+    p50, p99 = np.percentile(lat, [50, 99])
+    print(f"serving {src}")
+    print(f"batch {args.batch} x obs_dim {obs_dim} "
+          f"({'mean' if args.deterministic else 'sampled'} actions)")
+    print(f"latency: p50 {p50 * 1e3:.2f} ms  p99 {p99 * 1e3:.2f} ms  "
+          f"({args.requests} requests)")
+    print(f"throughput: {args.requests * args.batch / wall:.0f} actions/s")
     print("OK")
 
 

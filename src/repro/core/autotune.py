@@ -40,7 +40,8 @@ from repro.core.plan import CostModel, ParallelPlan, enumerate_plans, \
 
 # v2: measured.t_poisson_layouts + plan.layout became required fields
 # v3: measured.t_interval_backends (fused actuation-interval candidate)
-AUTOTUNE_SCHEMA = "repro.autotune/v3"
+# v4: measured.t_interhost + plan.n_processes (fleet inter-host cost term)
+AUTOTUNE_SCHEMA = "repro.autotune/v4"
 
 # dt's per probe interval when timing t_interval_backends: long enough that
 # the fused path's per-interval amortization (single pack/unpack, carried
@@ -80,17 +81,28 @@ class ResolvedPlan:
     def mesh_shape(self) -> Tuple[int, int]:
         return self.plan.mesh_shape
 
-    def build_mesh(self, devices=None):
+    @property
+    def n_processes(self) -> int:
+        return self.plan.n_processes
+
+    def build_mesh(self, devices=None, span_processes=None):
+        """The executable mesh.  In a live multi-process fleet
+        (``jax.process_count() > 1``) the default spans the "data" axis
+        over every process regardless of the plan's *modeled*
+        ``n_processes`` — the actual topology always wins."""
         from repro.launch.mesh import mesh_for_plan
-        return mesh_for_plan(self.plan, devices=devices)
+        return mesh_for_plan(self.plan, devices=devices,
+                             span_processes=span_processes)
 
     def describe(self) -> str:
+        fleet = (f", spanning {self.n_processes} hosts"
+                 if self.n_processes > 1 else "")
         return (f"plan[{self.source}]: n_envs x n_ranks = "
                 f"{self.n_envs} x {self.n_ranks} of {self.plan.n_total} "
                 f"workers (utilization {self.plan.utilization:.0%}), "
                 f"poisson backend '{self.backend}' "
                 f"(layout '{self.layout}'), mesh "
-                f"(data, model) = {self.mesh_shape}")
+                f"(data, model) = {self.mesh_shape}{fleet}")
 
 
 def default_backend(n_ranks: int, nx: Optional[int] = None) -> str:
@@ -184,6 +196,11 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
       io             bytes + seconds for one episode spill through the
                      binary TrajectorySink -> per-actuation volume and
                      single-stream bandwidth
+      t_interhost    one episode-sized trajectory all-gather across the
+                     fleet — a REAL cross-process timing when this process
+                     is part of one (jax.process_count() > 1), otherwise an
+                     estimate from the CostModel's loopback defaults
+                     (flagged ``estimated: true``)
     """
     import jax
     import jax.numpy as jnp
@@ -285,6 +302,35 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
     if own_dir:
         sink.cleanup()
 
+    # -- inter-host all-gather (the fleet cost term) -------------------------
+    # Traffic scale: one probe episode's trajectory payload (what the fleet
+    # engine all-gathers after every distributed rollout).
+    procs = jax.process_count()
+    if procs > 1:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        mesh = mesh_for_plan((procs, 1), span_processes=True)
+        m = max(1, int(nbytes) // (4 * procs))
+        host = np.zeros((procs, m), np.float32)
+        sharded = jax.make_array_from_callback(
+            host.shape, NamedSharding(mesh, P("data")),
+            lambda idx: host[idx])
+        gather = jax.jit(lambda x: x,
+                         out_shardings=NamedSharding(mesh, P()))
+        t_gather = _time(gather, sharded, iters=iters)
+        t_interhost = {"processes": procs, "bytes": float(nbytes),
+                       "seconds": t_gather,
+                       "bandwidth": float(nbytes) * (procs - 1) / procs
+                       / max(t_gather, 1e-9),
+                       "estimated": False}
+    else:
+        base = CostModel()
+        t_interhost = {"processes": 1, "bytes": float(nbytes),
+                       "seconds": base.interhost_latency
+                       + float(nbytes) / base.interhost_bandwidth,
+                       "bandwidth": base.interhost_bandwidth,
+                       "estimated": True}
+
     return {
         "n_total": n_total,
         "n_devices": n_devices,
@@ -302,6 +348,7 @@ def measure_components(grid=None, *, n_total: Optional[int] = None,
                "bytes_per_actuation": nbytes / (n_envs_probe * horizon),
                "stream_bandwidth": nbytes / t_io,
                "write_seconds": t_io},
+        "t_interhost": t_interhost,
     }
 
 
@@ -355,6 +402,11 @@ def refit_cost_model(measured: Dict[str, Any],
     io = measured["io"]
     bw_scale = io["stream_bandwidth"] / base.io_stream_bandwidth
     mgmt_scale = measured["t_update"] / base.t_update
+    # a REAL cross-process gather timing refits the inter-host bandwidth;
+    # the single-process estimate keeps the model's loopback default
+    ih = measured.get("t_interhost") or {}
+    interhost = ({"interhost_bandwidth": float(ih["bandwidth"])}
+                 if ih and not ih.get("estimated", True) else {})
     return dataclasses.replace(
         base,
         t_policy=measured["t_policy"],
@@ -363,7 +415,7 @@ def refit_cost_model(measured: Dict[str, Any],
         io_stream_bandwidth=io["stream_bandwidth"],
         io_bandwidth=base.io_bandwidth * bw_scale,
         mgmt_log_s=base.mgmt_log_s * mgmt_scale,
-        **fit)
+        **interhost, **fit)
 
 
 # ---------------------------------------------------------------------------
@@ -374,18 +426,26 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
              n_episodes: int = 3000, io_bytes: Optional[float] = None,
              horizon: int = 32, iters: int = 3, seed: int = 0,
              artifact: Optional[str] = None, base: Optional[CostModel] = None,
+             max_processes: Optional[int] = None,
              smoke: bool = False) -> ResolvedPlan:
     """Measure -> refit -> optimize -> ResolvedPlan (+ JSON artifact).
 
     ``n_total`` defaults to the host's device count (the executable budget).
-    ``artifact`` writes the measured-vs-predicted record; ``smoke`` shrinks
-    the probe (1 timing iteration, short horizon) for CI.
+    ``max_processes`` caps the fleet layouts the optimizer may pick
+    (default: however many processes this fleet actually has — a standalone
+    run never *plans* hosts it cannot execute).  ``artifact`` writes the
+    measured-vs-predicted record; ``smoke`` shrinks the probe (1 timing
+    iteration, short horizon) for CI.
     """
+    import jax
+
     from repro.cfd.grid import GridConfig
 
     grid = grid or GridConfig(res=6)
     if smoke:
         iters, horizon = 1, 8
+    if max_processes is None:
+        max_processes = jax.process_count()
     measured = measure_components(grid, n_total=n_total, ppo_cfg=ppo_cfg,
                                   horizon=horizon, iters=iters, seed=seed)
     n_total = measured["n_total"]
@@ -396,10 +456,22 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
     # execution time no matter how good the model thinks it is.
     feasible = set(candidate_ranks(n_total, grid.nx,
                                    measured["n_devices"]))
-    plans = [p for p in enumerate_plans(n_total) if p.n_ranks in feasible]
+    # fleet feasibility: each host must fit its worker shard — this is what
+    # decides how many hosts are WORTH it: a budget that fits one host keeps
+    # n_processes = 1 (inter-host comms are pure cost), a larger one takes
+    # the fewest hosts whose added t_interhost the model tolerates
+    local = jax.local_device_count()
+    plans = [p for p in enumerate_plans(n_total, max_processes)
+             if p.n_ranks in feasible
+             and n_total // p.n_processes <= local]
+    if not plans:
+        raise ValueError(
+            f"no executable plan: n_total = {n_total} workers cannot be "
+            f"placed on {max_processes} host(s) x {local} local devices")
     best = min(plans, key=lambda p: (model.t_training(p, n_episodes,
                                                       io_bytes),
-                                     -p.utilization, p.n_ranks))
+                                     -p.utilization, p.n_ranks,
+                                     p.n_processes))
     backend = default_backend(best.n_ranks, grid.nx)
     # the measured layout pick: on single-rank CPU plans the chosen layout
     # IS the backend (both are valid poisson.solve backends); halo/pallas
@@ -433,6 +505,7 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
             "n_total": n_total,
             "n_envs": best.n_envs,
             "n_ranks": best.n_ranks,
+            "n_processes": best.n_processes,
             "mesh_shape": list(best.mesh_shape),
             "utilization": best.utilization,
             "backend": backend,
@@ -440,6 +513,7 @@ def autotune(n_total: Optional[int] = None, *, grid=None, ppo_cfg=None,
         },
         "candidates": [
             {"n_envs": p.n_envs, "n_ranks": p.n_ranks,
+             "n_processes": p.n_processes,
              "utilization": p.utilization,
              "t_training_s": model.t_training(p, n_episodes, io_bytes)}
             for p in plans
@@ -463,12 +537,12 @@ def validate_artifact(record: Dict[str, Any]) -> None:
         if key not in record:
             raise ValueError(f"artifact missing {key!r}")
     for key in ("t_step_ranks", "t_poisson_layouts", "t_interval_backends",
-                "t_policy", "t_update", "io"):
+                "t_policy", "t_update", "io", "t_interhost"):
         if key not in record["measured"]:
             raise ValueError(f"artifact.measured missing {key!r}")
     plan = record["plan"]
-    for key in ("n_total", "n_envs", "n_ranks", "mesh_shape", "utilization",
-                "backend", "layout"):
+    for key in ("n_total", "n_envs", "n_ranks", "n_processes", "mesh_shape",
+                "utilization", "backend", "layout"):
         if key not in plan:
             raise ValueError(f"artifact.plan missing {key!r}")
     if plan["n_envs"] * plan["n_ranks"] > plan["n_total"]:

@@ -24,15 +24,32 @@ class ParallelPlan:
     n_total: int
     n_envs: int
     n_ranks: int
+    # hosts (jax processes) the "data" axis spans; 1 = the classic
+    # single-host plan.  Each host holds n_total // n_processes workers and
+    # whole envs only (the halo axis never crosses a host boundary).
+    n_processes: int = 1
 
     def __post_init__(self):
-        if min(self.n_total, self.n_envs, self.n_ranks) < 1:
+        if min(self.n_total, self.n_envs, self.n_ranks,
+               self.n_processes) < 1:
             raise ValueError(f"ParallelPlan fields must all be >= 1: {self}")
         if self.n_envs * self.n_ranks > self.n_total:
             raise ValueError(
                 f"over-subscribed plan: n_envs * n_ranks = "
                 f"{self.n_envs * self.n_ranks} exceeds the worker budget "
                 f"n_total = {self.n_total}: {self}")
+        if self.n_processes > 1:
+            if self.n_total % self.n_processes:
+                raise ValueError(
+                    f"n_processes = {self.n_processes} must divide n_total "
+                    f"= {self.n_total} (equal worker shards per host): "
+                    f"{self}")
+            if (self.n_total // self.n_processes) % self.n_ranks:
+                raise ValueError(
+                    f"each host's {self.n_total // self.n_processes} "
+                    f"workers must hold whole envs (a multiple of n_ranks "
+                    f"= {self.n_ranks}) so halo exchanges stay intra-host: "
+                    f"{self}")
 
     @property
     def mesh_shape(self) -> Tuple[int, int]:
@@ -78,8 +95,30 @@ class CostModel:
     # episode structure (paper: 100 actuation periods x 50 solver steps)
     steps_per_actuation: int = 50
     actuations_per_episode: int = 100
+    # inter-host comms (fleet plans, n_processes > 1): the per-episode
+    # trajectory all-gather — the replicated learner exchanges trajectories,
+    # never gradients, so traffic is the recorded episode volume.  Latency
+    # is per collective (one all-gather per episode), bandwidth the
+    # host-to-host link.  Defaults model localhost loopback; autotune
+    # refits them from a measured cross-process gather when one exists.
+    interhost_latency: float = 2.0e-4
+    interhost_bandwidth: float = 1.0e9          # bytes/s
 
     # ---- component models --------------------------------------------------
+
+    def t_interhost(self, plan: "ParallelPlan",
+                    io_bytes: Optional[float] = None) -> float:
+        """Per-episode inter-host cost: all-gathering every other host's
+        env-shard trajectories (zero for single-host plans)."""
+        import math
+        p = plan.n_processes
+        if p <= 1:
+            return 0.0
+        v = self.io_bytes_per_actuation if io_bytes is None else io_bytes
+        remote = (self.actuations_per_episode * v * plan.n_envs
+                  * (p - 1) / p)
+        return (self.interhost_latency * math.log2(p)
+                + remote / self.interhost_bandwidth)
 
     def t_step(self, n_ranks: int) -> float:
         """One CFD solver step on n_ranks workers (paper Fig. 7 shape)."""
@@ -121,7 +160,8 @@ class CostModel:
                  + self.t_policy
                  + self.t_io_per_actuation(plan.n_envs, io_bytes))
         mgmt = self.mgmt_log_s * math.log(max(1, plan.n_envs))
-        return self.actuations_per_episode * t_act + self.t_update + mgmt
+        return (self.actuations_per_episode * t_act + self.t_update + mgmt
+                + self.t_interhost(plan, io_bytes))
 
     def t_training(self, plan: ParallelPlan, n_episodes: int,
                    io_bytes: Optional[float] = None) -> float:
@@ -143,22 +183,34 @@ class CostModel:
                 / (plan.n_envs * plan.n_ranks))
 
 
-def enumerate_plans(n_total: int) -> List[ParallelPlan]:
+def enumerate_plans(n_total: int,
+                    max_processes: int = 1) -> List[ParallelPlan]:
     """All (n_envs = n_total // n_ranks, n_ranks) splits of the budget,
     ordered full-utilization first (then by n_ranks) so that downstream
-    stable min()/sort() calls resolve cost ties toward busy workers."""
-    out = [ParallelPlan(n_total, n_total // r, r)
-           for r in range(1, n_total + 1)]
-    out.sort(key=lambda p: (-p.utilization, p.n_ranks))
+    stable min()/sort() calls resolve cost ties toward busy workers.
+
+    ``max_processes > 1`` additionally enumerates fleet layouts: every
+    process count that divides ``n_total`` with whole envs per host (the
+    intra-host halo constraint), fewest hosts first within each split —
+    a tie on modeled cost resolves toward not paying inter-host comms."""
+    out = []
+    for r in range(1, n_total + 1):
+        procs = [1] + [p for p in range(2, max(1, max_processes) + 1)
+                       if n_total % p == 0 and (n_total // p) % r == 0]
+        out.extend(ParallelPlan(n_total, n_total // r, r, p) for p in procs)
+    out.sort(key=lambda pl: (-pl.utilization, pl.n_ranks, pl.n_processes))
     return out
 
 
 def optimize_plan(n_total: int, model: CostModel, n_episodes: int = 3000,
-                  io_bytes: Optional[float] = None) -> ParallelPlan:
-    """Brute-force the (n_envs, n_ranks) divisor lattice; minimize train
-    time, breaking exact cost ties toward full utilization (no idle
-    workers), then toward fewer ranks per env (the paper's default axis)."""
-    plans = enumerate_plans(n_total)
+                  io_bytes: Optional[float] = None,
+                  max_processes: int = 1) -> ParallelPlan:
+    """Brute-force the (n_envs, n_ranks[, n_processes]) divisor lattice;
+    minimize train time, breaking exact cost ties toward full utilization
+    (no idle workers), then toward fewer ranks per env (the paper's
+    default axis), then toward fewer hosts (no inter-host comms)."""
+    plans = enumerate_plans(n_total, max_processes)
     return min(plans, key=lambda p: (model.t_training(p, n_episodes,
                                                       io_bytes),
-                                     -p.utilization, p.n_ranks))
+                                     -p.utilization, p.n_ranks,
+                                     p.n_processes))

@@ -67,7 +67,8 @@ class DatasetSink(TrajectorySink):
     kept, any un-indexed tail from a previous crash is overwritten."""
 
     def __init__(self, root: str, codec: str = "binary",
-                 shard_max_bytes: int = 64 * 1024 * 1024):
+                 shard_max_bytes: int = 64 * 1024 * 1024,
+                 process: Optional[int] = None):
         super().__init__()
         if codec not in ("binary", "zstd"):
             raise ValueError(f"unknown trajectory-sink codec {codec!r}; "
@@ -76,7 +77,12 @@ class DatasetSink(TrajectorySink):
             codec = "binary"
         self.codec = codec
         self.shard_max_bytes = int(shard_max_bytes)
-        self.root = Path(root)
+        self.process = process
+        # fleet mode: each concurrent runner owns a part{NNN} subdirectory
+        # (its own shards + manifest-as-truth) under the shared dataset
+        # root, so per-host spills never contend on one manifest file
+        self.root = Path(root) if process is None \
+            else Path(root) / f"part{process:03d}"
         self.root.mkdir(parents=True, exist_ok=True)
         self._cctx = zstd.ZstdCompressor(level=1) if codec == "zstd" else None
         mpath = self.root / MANIFEST_NAME
@@ -93,7 +99,9 @@ class DatasetSink(TrajectorySink):
                     f"zstandard is not installed; cannot append")
         else:
             self._man = {"schema": DATASET_SCHEMA, "codec": self.codec,
-                         "metadata": {}, "episodes": {}, "shards": {}}
+                         "metadata": {} if process is None
+                         else {"process": process},
+                         "episodes": {}, "shards": {}}
             self._flush_manifest()
 
     # -- manifest ------------------------------------------------------------

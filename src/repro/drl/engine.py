@@ -144,9 +144,15 @@ class FileSink(TrajectorySink):
     codec='binary'  msgpack + raw fp32 (the paper's optimized mode)
     codec='zstd'    the same, zstd-compressed (beyond-paper); silently
                     degrades to 'binary' when zstandard is not installed.
+
+    ``process`` (fleet mode) suffixes every file with the writer's process
+    id (``traj_000007.p002.bin``) so N concurrent runners sharing one sink
+    root never contend on — or clobber — the same episode file; each
+    runner spills its own env shard and reads back only its own files.
     """
 
-    def __init__(self, root: str, codec: str = "binary"):
+    def __init__(self, root: str, codec: str = "binary",
+                 process: Optional[int] = None):
         super().__init__()
         if codec not in ("binary", "zstd"):
             raise ValueError(f"unknown trajectory-sink codec {codec!r}; "
@@ -154,13 +160,16 @@ class FileSink(TrajectorySink):
         if codec == "zstd" and zstd is None:
             codec = "binary"
         self.codec = codec
+        self.process = process
         self.dir = Path(root)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._cctx = zstd.ZstdCompressor(level=1) if codec == "zstd" else None
         self._dctx = zstd.ZstdDecompressor() if codec == "zstd" else None
 
     def _path(self, episode: int) -> Path:
-        return self.dir / f"traj_{episode:06d}.bin"
+        if self.process is None:
+            return self.dir / f"traj_{episode:06d}.bin"
+        return self.dir / f"traj_{episode:06d}.p{self.process:03d}.bin"
 
     def _write(self, episode: int, traj: Trajectory) -> int:
         arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)}
@@ -168,8 +177,10 @@ class FileSink(TrajectorySink):
         return atomic_write_bytes(self._path(episode), blob)
 
     def _available(self) -> str:
-        eps = sorted(int(p.stem.split("_")[1])
-                     for p in self.dir.glob("traj_*.bin"))
+        pat = "traj_*.bin" if self.process is None \
+            else f"traj_*.p{self.process:03d}.bin"
+        eps = sorted(int(p.name.split("_")[1].split(".")[0])
+                     for p in self.dir.glob(pat))
         return (f"episodes {eps[0]}..{eps[-1]} ({len(eps)} on disk)"
                 if eps else "no episodes on disk")
 
@@ -203,6 +214,13 @@ class SinkSpec:
       kind='dataset'  repro.data.trajectory_dataset.DatasetSink: sharded
                       files + JSON manifest, ``codec``/``shard_max_bytes``
                       apply (the durable, replayable format)
+
+    ``process`` makes file-backed sinks multi-process-safe: FileSink files
+    get a per-process suffix and the dataset sink writes a per-process
+    ``part{NNN}`` subdirectory (its own shards + manifest) under the shared
+    root, so N fleet runners spilling concurrently never clobber one
+    another.  The default (None) auto-detects: multi-process jax runs use
+    ``jax.process_index()``, single-process runs keep the flat layout.
     """
 
     kind: str = "none"
@@ -210,6 +228,9 @@ class SinkSpec:
     keep: int = 8                       # memory: episodes retained
     codec: str = "binary"               # dataset: payload codec
     shard_max_bytes: int = 64 * 1024 * 1024   # dataset: shard rotation
+    # per-process shard suffix/subdir; None = auto (process_index when the
+    # jax runtime spans processes, flat single-writer layout otherwise)
+    process: Optional[int] = None
 
     KINDS = ("none", "memory", "binary", "zstd", "dataset")
 
@@ -221,6 +242,11 @@ class SinkSpec:
         kind, _, root = text.partition(":")
         return cls(kind=kind, root=root or None)
 
+    def _process(self) -> Optional[int]:
+        if self.process is not None:
+            return self.process
+        return jax.process_index() if jax.process_count() > 1 else None
+
     def build(self) -> Optional[TrajectorySink]:
         if self.kind in (None, "none", "disabled"):
             return None
@@ -230,13 +256,15 @@ class SinkSpec:
             if self.root is None:
                 raise ValueError(f"file sink {self.kind!r} needs a root "
                                  f"directory")
-            return FileSink(self.root, codec=self.kind)
+            return FileSink(self.root, codec=self.kind,
+                            process=self._process())
         if self.kind == "dataset":
             if self.root is None:
                 raise ValueError("dataset sink needs a root directory")
             from repro.data.trajectory_dataset import DatasetSink
             return DatasetSink(self.root, codec=self.codec,
-                               shard_max_bytes=self.shard_max_bytes)
+                               shard_max_bytes=self.shard_max_bytes,
+                               process=self._process())
         raise ValueError(f"unknown sink kind {self.kind!r}; "
                          f"choose from {self.KINDS}")
 
@@ -289,21 +317,45 @@ def is_grid_field(a, n_ranks: int = 1) -> bool:
     return a.ndim == 3 and a.shape[-1] > 4 and a.shape[-1] % n_ranks == 0
 
 
+def mesh_spans_processes(mesh: Optional[Mesh]) -> bool:
+    """True when the mesh's devices live on more than one jax process."""
+    if mesh is None:
+        return False
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
 def shard_env_batch(mesh: Mesh, st_b, n_ranks: int = 1):
     """device_put a batched env-state pytree with engine shardings.
 
     Placing the batch on the mesh BEFORE the first collect is load-bearing
     for the halo backend on jax 0.4.x: a batch left replicated over a
     "data" axis of size > 1 trips the same partitioner miscompile the
-    decomp module documents."""
+    decomp module documents.
+
+    On a process-spanning (fleet) mesh ``jax.device_put`` cannot place a
+    host array, so each leaf is assembled with
+    ``jax.make_array_from_callback`` instead — every process holds the same
+    full host value (fleet training computes the batch identically
+    everywhere) and contributes its local shards.  Leaves that are already
+    global (non-fully-addressable) arrays pass through untouched."""
     batch, batch_space = env_state_specs(mesh)
+    spans = mesh_spans_processes(mesh)
 
     def spec_of(a):
         if n_ranks > 1 and is_grid_field(a, n_ranks):
             return NamedSharding(mesh, batch_space)
         return NamedSharding(mesh, P(batch[0]))
 
-    return jax.tree.map(lambda a: jax.device_put(a, spec_of(a)), st_b)
+    def put(a):
+        if isinstance(a, jax.Array) and not a.is_fully_addressable:
+            return a                       # already globally placed
+        if spans:
+            host = np.asarray(a)
+            return jax.make_array_from_callback(
+                host.shape, spec_of(a), lambda idx, h=host: h[idx])
+        return jax.device_put(a, spec_of(a))
+
+    return jax.tree.map(put, st_b)
 
 
 def place_env_batch(mesh: Optional[Mesh], st_b, n_ranks: int = 1):
@@ -352,6 +404,15 @@ class EngineConfig:
     # ``engine.stats`` reports real collect/update/sink-write shares
     # (benchmarks opt in; training loops keep async dispatch by default)
     timing: bool = False
+    # multi-process fleet mode (repro.launch.distributed): the rollout runs
+    # on the process-spanning mesh, trajectories are all-gathered to the
+    # host, and postprocess + PPO update run as a REPLICATED local
+    # single-device program on every process (the drlfoam runner/learner
+    # split: the CFD fan-out is distributed, the tiny MLP learner is
+    # redundantly recomputed — no gradient traffic, and training is
+    # bitwise-identical at every fleet size under the pinned device count,
+    # see launch/distributed.py).  Sinks spill per-process env shards.
+    fleet: bool = False
 
 
 class RolloutEngine:
@@ -412,6 +473,20 @@ class RolloutEngine:
         # by the live collect path and replay_sync: the record -> replay
         # bitwise gate holds because both feed the same compiled program
         self.postprocess = jax.jit(postprocess_fn)
+        if cfg.fleet:
+            if mesh is None:
+                raise ValueError("EngineConfig(fleet=True) needs a mesh — "
+                                 "pass a plan or an explicit mesh=")
+            if cfg.n_envs % max(1, jax.process_count()):
+                raise ValueError(
+                    f"fleet mode needs n_envs = {cfg.n_envs} divisible by "
+                    f"the process count {jax.process_count()} (each process "
+                    f"owns an equal env shard)")
+            # all-gather: every process materializes the full trajectory
+            # batch (the inter-host traffic the autotuner's t_interhost
+            # term models); postprocess + update then run on the host copy
+            self._gather = jax.jit(lambda t: t,
+                                   out_shardings=NamedSharding(mesh, P()))
 
     @classmethod
     def for_env(cls, env, cfg: EngineConfig, **kw) -> "RolloutEngine":
@@ -465,20 +540,89 @@ class RolloutEngine:
         caller already did) — leaving a batch replicated over a "data" axis
         of size > 1 trips the jax 0.4.x partitioner miscompile documented
         in ``shard_env_batch``, so the engine owns the guard rather than
-        trusting every caller."""
+        trusting every caller.
+
+        Fleet mode: params/key arrive as process-local arrays, are
+        replicated onto the global mesh for the distributed rollout, and
+        the collected trajectories are all-gathered back to the host —
+        ``postprocess`` then compiles as a plain local program, identical
+        on every process and at every fleet size (the bitwise contract).
+        The returned Trajectory is the host copy (full batch)."""
         if self.mesh is not None:
             st_b = shard_env_batch(self.mesh, st_b, self.cfg.n_ranks)
         t0 = time.perf_counter()
-        traj = self._rollout(params, st_b, obs_b, key)
+        if self.cfg.fleet:
+            # REPRO_FLEET_TIMING=1 splits collect into rollout/gather wall
+            # time (engine.stats) — the extra local sync it inserts slightly
+            # perturbs the overlap, so it stays off outside diagnostics
+            _timing = os.environ.get("REPRO_FLEET_TIMING")
+            traj = self._rollout(self._replicate(params), st_b, obs_b,
+                                 self._replicate(key))
+            if _timing:
+                jax.block_until_ready(traj)
+                self.stats["rollout_s"] = (self.stats.get("rollout_s", 0.0)
+                                           + time.perf_counter() - t0)
+                t0 = time.perf_counter()
+            traj = Trajectory(*(np.asarray(a) for a in self._gather(traj)))
+            if _timing:
+                self.stats["gather_s"] = (self.stats.get("gather_s", 0.0)
+                                          + time.perf_counter() - t0)
+        else:
+            traj = self._rollout(params, st_b, obs_b, key)
         batch = self.postprocess(params, traj)
         if self.cfg.timing:
             jax.block_until_ready(batch)
             self.stats["collect_s"] += time.perf_counter() - t0
             self.stats["episodes"] += 1
-        if record and self.sink is not None:
-            self.sink.write(self.episode, traj)
+        if record:
+            self._sink_write(self.episode, traj)
         self.episode += 1
         return batch, traj
+
+    def rollout_local(self, params, st_b, obs_b, key):
+        """The no-comms twin of ``collect``: the same distributed rollout
+        program, but each process blocks only on ITS env shard — no
+        trajectory all-gather, no postprocess, no sink.
+
+        Benchmarks use this as the oversubscription baseline: on a host
+        with fewer cores than fleet processes, raw throughput conflates
+        time-slicing contention (which p independent jobs would also pay)
+        with the fleet's actual communication cost.  The ratio
+        ``tp(collect) / tp(rollout_local)`` at the same fleet size isolates
+        exactly the inter-process communication + sync overhead."""
+        if self.mesh is not None:
+            st_b = shard_env_batch(self.mesh, st_b, self.cfg.n_ranks)
+        traj = self._rollout(self._replicate(params) if self.cfg.fleet
+                             else params, st_b, obs_b,
+                             self._replicate(key) if self.cfg.fleet else key)
+        jax.block_until_ready(traj)
+        return traj
+
+    def _replicate(self, tree):
+        """Place process-local (or host) arrays fully-replicated on the
+        fleet mesh; leaves that are already global pass through."""
+        rep = NamedSharding(self.mesh, P())
+
+        def put(a):
+            if isinstance(a, jax.Array) and not a.is_fully_addressable:
+                return a
+            host = np.asarray(a)
+            return jax.make_array_from_callback(
+                host.shape, rep, lambda idx, h=host: h[idx])
+
+        return jax.tree.map(put, tree)
+
+    def _sink_write(self, episode: int, traj: Trajectory) -> None:
+        """Spill one episode; fleet runners write only THEIR env rows (the
+        per-host shard — the sink's per-process suffix/part dir keeps
+        concurrent writers from clobbering each other)."""
+        if self.sink is None:
+            return
+        if self.cfg.fleet and jax.process_count() > 1:
+            per = self.cfg.n_envs // jax.process_count()
+            lo = jax.process_index() * per
+            traj = Trajectory(*(np.asarray(a)[lo:lo + per] for a in traj))
+        self.sink.write(episode, traj)
 
     # -- PPO update (donation-aware, shared by sync + async loops) -----------
 
@@ -617,7 +761,7 @@ class RolloutEngine:
                 params, opt_state, step, _ = update(params, opt_state,
                                                     pending, ku, step)
             if self.sink is not None and spill is not None:
-                self.sink.write(*spill)
+                self._sink_write(*spill)
             pending = batch
             spill = (ep_id, traj)
             returns.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
@@ -630,7 +774,7 @@ class RolloutEngine:
             params, opt_state, step, _ = update(params, opt_state, pending,
                                                 ku, step)
         if self.sink is not None and spill is not None:
-            self.sink.write(*spill)
+            self._sink_write(*spill)
         if on_state is not None and episodes > 0:
             # final carry AFTER the drain: the one state with no in-flight
             # update, so a checkpoint of it loses nothing

@@ -28,7 +28,6 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 
 from repro.cfd.env import CylinderEnv, EnvConfig
 from repro.ckpt import checkpoint as ckpt_mod
@@ -36,9 +35,10 @@ from repro.drl import networks
 from repro.drl import train_state as ts_mod
 from repro.drl.engine import (EngineConfig, RolloutEngine, SinkSpec,
                               TrajectorySink, broadcast_env_state,
-                              env_state_specs, place_env_batch)
+                              place_env_batch)
 from repro.drl.ppo import PPOConfig, make_optimizer
 from repro.drl.train_state import HISTORY_FIELDS, TrainState
+from repro.launch import distributed as dist_mod
 
 
 @dataclass
@@ -79,15 +79,32 @@ class TrainConfig:
     # 'binary' | 'zstd' | 'dataset'); an explicit sink= to train() wins.
     # The run fingerprint (run_metadata) is annotated into dataset manifests.
     sink: Optional[SinkSpec] = None
+    # multi-process fleet mode (repro.launch.distributed): None = auto
+    # (fleet when this process is part of a jax.distributed fleet or the
+    # launcher exported REPRO_FLEET=1 — single-process fleets keep the same
+    # engine path so runs are bitwise-comparable across fleet sizes).
+    # Requires a plan; only process 0 logs and writes checkpoints.
+    fleet: Optional[bool] = None
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
           interface=None, sink: Optional[TrajectorySink] = None,
+          on_episode: Optional[Callable] = None,
           ) -> Tuple[Dict[str, np.ndarray], Any]:
-    """Returns (history dict of per-episode arrays, trained params)."""
+    """Returns (history dict of per-episode arrays, trained params).
+
+    ``on_episode(traj, metrics)`` is an extra per-episode hook (fleet
+    runners use it for heartbeats); it fires after the built-in logging."""
     resolved = mesh = None
     backend = None
     n_envs = cfg.n_envs
+    fleet = dist_mod.fleet_active() if cfg.fleet is None else cfg.fleet
+    proc0 = jax.process_index() == 0
+    if fleet and cfg.plan is None:
+        raise ValueError("fleet training needs a plan (TrainConfig.plan): "
+                         "the process-spanning mesh is built from it")
+    if fleet and not proc0:
+        log_fn = None                  # one log stream: the coordinator's
     if cfg.plan is not None:
         from repro.core.autotune import resolve_plan
         resolved = resolve_plan(cfg.plan, grid=cfg.env.grid,
@@ -127,7 +144,7 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                           horizon=cfg.env.actions_per_episode,
                           gamma=cfg.ppo.gamma, lam=cfg.ppo.lam,
                           n_ranks=resolved.n_ranks if resolved else 1,
-                          sink=cfg.sink),
+                          sink=cfg.sink, fleet=fleet),
         mesh=mesh, sink=sink)
 
     run_meta = ts_mod.run_metadata(
@@ -135,7 +152,8 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         grid=cfg.env.grid, horizon=cfg.env.actions_per_episode,
         steps_per_action=cfg.env.steps_per_action, scenarios=cfg.scenarios,
         plan={"n_envs": resolved.n_envs, "n_ranks": resolved.n_ranks,
-              "backend": resolved.backend} if resolved else None)
+              "backend": resolved.backend,
+              "n_processes": jax.process_count()} if resolved else None)
     if engine.sink is not None:
         # durable datasets record which run (and which code) produced them
         engine.sink.annotate(**run_meta)
@@ -148,13 +166,13 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
 
     # pre-place the batch on the mesh (see shard_env_batch's docstring —
     # required for correctness of the halo backend on jax 0.4.x).  For a
-    # resumed run this is the cross-plan re-sharding step.
+    # resumed run this is the cross-plan re-sharding step.  Fleet
+    # checkpoints snapshot the PRE-placement host copies: a process-spanning
+    # global array cannot be pulled back to one host at save time.
+    st_host = jax.tree.map(np.asarray, st_b) if fleet else None
+    obs_host = np.asarray(obs_b) if fleet else None
     st_b = place_env_batch(mesh, st_b, engine.cfg.n_ranks)
-    if mesh is not None:
-        obs_b = jax.device_put(obs_b,
-                               NamedSharding(mesh, env_state_specs(mesh)[0]))
-    else:
-        obs_b = jnp.asarray(obs_b)
+    obs_b = place_env_batch(mesh, obs_b, 1)
 
     if ts is None:
         params, optimizer, opt_state, key = engine.init(pcfg, cfg.ppo,
@@ -182,12 +200,13 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         return {k: np.asarray(v) for k, v in hist.items()}, ts.params
 
     ckpter = None
-    if cfg.ckpt_dir:
+    if cfg.ckpt_dir and proc0:        # one writer: the coordinator
         ckpter = ckpt_mod.AsyncCheckpointer(
             cfg.ckpt_dir, keep=cfg.ckpt_keep, compress=cfg.ckpt_compress,
             background=cfg.ckpt_async)
 
     t_ep = [time.time()]
+    ep_hook = on_episode               # the caller's hook (fleet heartbeats)
 
     def on_batch(batch):
         # paper's CFD<->DRL interface experiment
@@ -208,6 +227,8 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                        or ep == cfg.episodes - 1):
             log_fn(f"ep {ep:4d}  return {r:+8.3f}  CD(tail) {cd:.3f}  "
                    f"|CL| {cl:.3f}  {hist['wall'][-1]:.1f}s")
+        if ep_hook is not None:
+            ep_hook(traj, metrics)
 
     def on_state(carry):
         if ckpter is None:
@@ -217,8 +238,9 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
             return
         snap = TrainState(params=carry.params, opt_state=carry.opt_state,
                           key=carry.key, step=carry.step,
-                          episode=jnp.int32(done), env_state=st_b,
-                          obs=obs_b,
+                          episode=jnp.int32(done),
+                          env_state=st_host if fleet else st_b,
+                          obs=obs_host if fleet else obs_b,
                           history={f: np.asarray(hist[f])
                                    for f in HISTORY_FIELDS})
         ckpter.save(done, ts_mod.to_tree(snap),

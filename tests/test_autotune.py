@@ -68,6 +68,11 @@ def _synthetic_measured(truth: CostModel, ranks=(1, 2, 4)):
                "bytes_per_actuation": truth.io_bytes_per_actuation,
                "stream_bandwidth": truth.io_stream_bandwidth,
                "write_seconds": vol / truth.io_stream_bandwidth},
+        "t_interhost": {"processes": 1, "bytes": vol,
+                        "seconds": truth.interhost_latency
+                        + vol / truth.interhost_bandwidth,
+                        "bandwidth": truth.interhost_bandwidth,
+                        "estimated": True},
     }
 
 
@@ -105,6 +110,54 @@ def test_refit_single_rank_only():
     assert fit.t_step_1 == pytest.approx(truth.t_step_1)
     # unmeasurable scaling constants fall back to the base model's
     assert fit.serial_frac == truth.serial_frac
+
+
+def test_refit_interhost_bandwidth():
+    """A REAL cross-process gather timing refits the inter-host bandwidth;
+    the flagged single-process estimate leaves the default untouched."""
+    truth = CostModel()
+    m = _synthetic_measured(truth)
+    assert refit_cost_model(m).interhost_bandwidth \
+        == truth.interhost_bandwidth          # estimate: default kept
+    m["t_interhost"] = {"processes": 2, "bytes": 1e8, "seconds": 0.05,
+                        "bandwidth": 2.0e9, "estimated": False}
+    assert refit_cost_model(m).interhost_bandwidth == pytest.approx(2.0e9)
+
+
+# ---------------------------------------------------------------------------
+# fleet (multi-host) plans in the cost model and optimizer
+# ---------------------------------------------------------------------------
+
+def test_fleet_plan_validation():
+    p = ParallelPlan(8, 4, 2, n_processes=2)      # 4 workers/host, whole envs
+    assert p.n_processes == 2
+    with pytest.raises(ValueError, match="must divide n_total"):
+        ParallelPlan(8, 8, 1, n_processes=3)
+    with pytest.raises(ValueError, match="whole envs"):
+        ParallelPlan(8, 2, 4, n_processes=4)      # 2 workers/host < 1 env
+
+
+def test_interhost_term_and_host_count_optimum():
+    m = CostModel()
+    single = ParallelPlan(8, 8, 1)
+    fleet = ParallelPlan(8, 8, 1, n_processes=2)
+    assert m.t_interhost(single) == 0.0
+    assert m.t_interhost(fleet) > 0.0
+    assert m.t_episode(fleet) > m.t_episode(single)
+    # same budget on more hosts is pure comm cost -> the optimizer keeps
+    # every worker on one host when one host can hold them
+    best = optimize_plan(8, m, max_processes=4)
+    assert best.n_processes == 1
+    assert best.n_ranks == 1                      # the paper's optimum
+
+
+def test_enumerate_plans_fleet_layouts():
+    from repro.core.plan import enumerate_plans
+    plans = enumerate_plans(8, max_processes=4)
+    procs = {(p.n_ranks, p.n_processes) for p in plans}
+    assert (1, 4) in procs and (2, 2) in procs
+    assert (8, 2) not in procs       # 4 workers/host cannot hold an 8-rank env
+    assert all(p.n_processes == 1 for p in enumerate_plans(8))  # default
 
 
 # ---------------------------------------------------------------------------

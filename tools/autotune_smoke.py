@@ -45,6 +45,11 @@ def main() -> None:
     assert rec["plan"]["n_envs"] * rec["plan"]["n_ranks"] <= 4
     assert rec["plan"]["utilization"] == 1.0, rec["plan"]
     assert len(rec["candidates"]) >= 3
+    # v4: the fleet cost term is always present; a standalone smoke run is
+    # single-process, so the gather timing is the flagged estimate and the
+    # optimizer must not plan hosts it cannot execute
+    assert rec["measured"]["t_interhost"]["estimated"] is True
+    assert rec["plan"]["n_processes"] == 1, rec["plan"]
     print(f"autotune smoke OK: {rp.describe()}")
     print(f"artifact -> {args.out}")
 

@@ -49,6 +49,7 @@ HEADLINES = (
     ("shares.sink_write", "{:.1%}"),
     ("scaling_projection.projected_efficiency_60", "{:.1%}"),
     ("speedup_packed_vs_full", "{:.2f}x"),
+    ("gate.measured_efficiency", "{:.1%}"),
     ("plan.n_envs", "{}"),
     ("plan.n_ranks", "{}"),
     ("plan.backend", "{}"),
@@ -109,10 +110,10 @@ def gate_failures(summary: dict) -> list:
     for name, entry in summary["entries"].items():
         scalars = entry.get("scalars", {})
         if scalars.get("gate.passed") is False:
-            req = scalars.get("gate.required_speedup")
-            got = scalars.get("gate.speedup_vs_baseline")
-            out.append(f"{name}: gate.passed=false "
-                       f"(speedup {got} < required {req})")
+            detail = ", ".join(f"{k.split('.', 1)[1]}={v}"
+                               for k, v in sorted(scalars.items())
+                               if k.startswith("gate.") and k != "gate.passed")
+            out.append(f"{name}: gate.passed=false ({detail})")
     return out
 
 
@@ -188,6 +189,23 @@ def render_markdown(summary: dict) -> str:
                 f"max|du|={mega['parity.u_maxabs']:.1e}, "
                 f"max|dp|={mega.get('parity.p_maxabs', 0):.1e}, "
                 f"max|dCd|={mega.get('parity.cd_maxabs', 0):.1e}")
+
+    fleet_entry = next(
+        (e for n, e in summary["entries"].items()
+         if e.get("schema", "").startswith("repro.bench_fleet/")), None)
+    if fleet_entry:
+        fl = fleet_entry["scalars"]
+        lines += ["", "## Fleet parallel efficiency (multi-process)", ""]
+        lines.append(
+            f"- measured through tools/launch_fleet.py on "
+            f"{fl.get('host.cores', '?')} core(s); paper: "
+            f"{PAPER_TARGETS['efficiency_60cores']:.0%} at 60 cores")
+        lines.append(
+            f"- gate [{fl.get('gate.metric', '?')} at "
+            f"{fl.get('gate.processes', '?')} processes]: "
+            f"{fl.get('gate.measured_efficiency', 0):.1%} measured vs "
+            f">= {fl.get('gate.required_efficiency', 0):.0%} required -> "
+            f"{'PASS' if fl.get('gate.passed') else 'FAIL'}")
 
     lines += ["", "## Golden-physics drift", ""]
     drifted = False

@@ -33,6 +33,13 @@ def main() -> None:
                          "'cyl_re100,cyl_re200,cyl_re100_rotary') assigned "
                          "round-robin over the env batch; default: the "
                          "single Re=100 jets case")
+    ap.add_argument("--policy", default="mlp",
+                    choices=["mlp", "attention"],
+                    help="policy architecture: 'mlp' (the paper's 2x512 "
+                         "tanh MLP, default) or 'attention' (permutation-"
+                         "invariant set encoder over (coord, value) probe "
+                         "tokens — recommended for mixed or multi-body "
+                         "batches, e.g. --scenarios pinball_re100)")
     ap.add_argument("--list-scenarios", action="store_true",
                     help="print the scenario registry and exit")
     ap.add_argument("--plan", default=None,
@@ -74,7 +81,7 @@ def main() -> None:
         for name in list_scenarios():
             s = get_scenario(name)
             print(f"{name:22s} Re={s.re:<6g} {s.actuation:7s} "
-                  f"{s.probes:9s} {s.description}")
+                  f"{s.geometry:9s} {s.probes:9s} {s.description}")
         return
 
     plan = args.plan
@@ -106,6 +113,7 @@ def main() -> None:
         scenarios=(tuple(s.strip() for s in args.scenarios.split(",")
                          if s.strip())
                    if args.scenarios else None),
+        policy=args.policy,
         plan=plan,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,

@@ -52,10 +52,15 @@ class EnvConfig:
     warmup_time: float = 30.0     # t.u. of uncontrolled flow before training
     probe_layout: str = "ring149"
     actuation: str = "jets"
+    geometry: str = "cylinder"    # immersed-body set (repro.cfd.grid)
 
     @property
     def obs_dim(self) -> int:
         return probes_mod.layout_size(self.probe_layout)
+
+    @property
+    def act_dim(self) -> int:
+        return self.scenario().act_dim
 
     @property
     def action_max(self) -> float:
@@ -64,7 +69,8 @@ class EnvConfig:
     def scenario(self, name: str = "__cfg__") -> Scenario:
         """The (anonymous) scenario this config describes."""
         return Scenario(name=name, re=self.grid.re, actuation=self.actuation,
-                        probes=self.probe_layout, cd0=self.cd0)
+                        probes=self.probe_layout, geometry=self.geometry,
+                        cd0=self.cd0)
 
     @classmethod
     def for_scenario(cls, scn, **overrides) -> "EnvConfig":
@@ -73,12 +79,14 @@ class EnvConfig:
         grid = overrides.pop("grid", GridConfig())
         grid = dataclasses.replace(grid, re=scn.re)
         return cls(grid=grid, probe_layout=scn.probes,
-                   actuation=scn.actuation, cd0=scn.cd0, **overrides)
+                   actuation=scn.actuation, geometry=scn.geometry,
+                   cd0=scn.cd0, **overrides)
 
 
 class EnvState(NamedTuple):
     flow: solver.FlowState
-    jet_vel: jnp.ndarray          # smoothed actuation amplitude (scalar)
+    jet_vel: jnp.ndarray          # smoothed actuation amplitude — scalar, or
+    #                               (A,) per-body surface speeds (multi-body)
     t: jnp.ndarray                # actuation counter
     scn: ScenarioParams           # traced per-env scenario parameters
 
@@ -123,10 +131,12 @@ class CylinderEnv:
                 raise ValueError("backend='halo' needs mesh= (e.g. "
                                  "launch.mesh.mesh_for_plan(plan))")
             validate_decomposition(mesh, cfg.grid.nx)
-        self.geom = build_geometry(cfg.grid)
+        self.geom = build_geometry(cfg.grid, cfg.geometry)
         self.geom_arrays = solver.geom_to_arrays(self.geom)
         self._reset_flow = None
-        self._group_cache = {}   # (re, act_mode) -> (FlowState, cd0)
+        self._geom_cache = {cfg.geometry: (self.geom, self.geom_arrays)}
+        self._bank = None        # stacked (G, ...) GeomArrays, built lazily
+        self._group_cache = {}   # (re, act_mode, geometry) -> (FlowState, cd0)
 
     # -- uncontrolled warmup to a developed shedding state ------------------
 
@@ -136,7 +146,7 @@ class CylinderEnv:
         still depends on the actuation mode because each mode's penalization
         band differs — and calibrate ``cd0`` from its tail when unset."""
         cfg = self.cfg
-        group = (cfg.grid.re, cfg.scenario().act_mode)
+        group = (cfg.grid.re, cfg.scenario().act_mode, cfg.geometry)
         self._warmup_groups([group])
         flow, cd0 = self._group_cache[group]
         self._reset_flow = flow
@@ -147,14 +157,57 @@ class CylinderEnv:
             print(f"warmup {n} steps: CD0={self.cfg.cd0:.3f}")
         return solver.FlowState(*jax.tree.map(jnp.asarray, flow))
 
-    def _run_steps(self, n, flow, jet_vel, re=None, act_mode=None):
+    def _run_steps(self, n, flow, jet_vel, re=None, act_mode=None,
+                   geom_arrays=None):
         # warmup path: un-decomposed backend (see class docstring); the
         # fused interval path serves warmup too (same operator, one scan)
         backend = "reference" if self.backend == "halo" else self.backend
-        flow, outs = solver.step_interval(self.cfg.grid, self.geom_arrays,
+        ga = self.geom_arrays if geom_arrays is None else geom_arrays
+        flow, outs = solver.step_interval(self.cfg.grid, ga,
                                           flow, jet_vel, n, re=re,
                                           act_mode=act_mode, backend=backend)
         return flow, (outs.cd, outs.cl)
+
+    # -- multi-geometry support ---------------------------------------------
+
+    def _geometry(self, name: str):
+        """(Geometry, GeomArrays) for a named body set, built once."""
+        if name not in self._geom_cache:
+            geom = build_geometry(self.cfg.grid, name)
+            self._geom_cache[name] = (geom, solver.geom_to_arrays(geom))
+        return self._geom_cache[name]
+
+    def _ensure_bank(self) -> None:
+        """Stack every registered geometry's arrays into one (G, ...) bank.
+
+        Per-body fields are zero-padded to ``grid.max_bodies()`` so all
+        geometries share one shape; each env then gathers its own slab with
+        ``scn.geom_id`` inside the vmapped program — mixed cylinder+pinball
+        batches stay ONE XLA program."""
+        if self._bank is not None:
+            return
+        from repro.cfd import grid as grid_mod
+        bmax = grid_mod.max_bodies()
+
+        def padded(ga):
+            def pad(a):
+                if a.shape[0] == bmax:
+                    return a
+                fill = jnp.zeros((bmax - a.shape[0],) + a.shape[1:], a.dtype)
+                return jnp.concatenate([a, fill])
+            return ga._replace(rotb_u=pad(ga.rotb_u), rotb_v=pad(ga.rotb_v),
+                               own_u=pad(ga.own_u), own_v=pad(ga.own_v))
+
+        per = [padded(self._geometry(n)[1])
+               for n in grid_mod.geometry_names()]
+        self._bank = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    def _env_geom(self, scn: ScenarioParams):
+        """This env's geometry arrays: the closed-over static set, or a
+        per-env gather from the bank when the batch mixes geometries."""
+        if self._bank is None or scn.geom_id is None:
+            return self.geom_arrays
+        return jax.tree.map(lambda x: x[scn.geom_id], self._bank)
 
     # -- pure env API --------------------------------------------------------
 
@@ -162,92 +215,144 @@ class CylinderEnv:
         if self._reset_flow is None:
             self.warmup()
         flow = jax.tree.map(jnp.asarray, self._reset_flow)
-        params = scn_mod.scenario_params(self.cfg.scenario(), self.cfg.grid,
+        scn = self.cfg.scenario()
+        params = scn_mod.scenario_params(scn, self.cfg.grid,
                                          cd0=self.cfg.cd0)
-        st = EnvState(flow=solver.FlowState(*flow), jet_vel=jnp.float32(0.0),
+        jet0 = (jnp.float32(0.0) if scn.act_dim == 1
+                else jnp.zeros(scn.act_dim, jnp.float32))
+        st = EnvState(flow=solver.FlowState(*flow), jet_vel=jet0,
                       t=jnp.int32(0), scn=params)
         return st, self._observe(st)
 
     def reset_batch(self, scenarios: Sequence, n_envs: Optional[int] = None,
                     *, obs_dim: Optional[int] = None,
+                    act_dim: Optional[int] = None,
                     ) -> Tuple[EnvState, jnp.ndarray]:
         """Mixed-scenario reset: an (N_envs, ...) batch with per-env physics.
 
         ``scenarios``: names and/or Scenario objects, assigned round-robin
         over ``n_envs`` (default: one env per scenario).  Warmup runs once
-        per distinct *(Re, actuation)* pair as a single vmapped program —
-        the actuation mode matters even at zero amplitude because each
-        mode's penalization band differs, so the developed flow and C_D0
-        must come from the same operator ``env_step`` will integrate.
+        per distinct *(Re, actuation, geometry)* triple, vmapped per
+        geometry — the actuation mode matters even at zero amplitude because
+        each mode's penalization band differs, so the developed flow and
+        C_D0 must come from the same operator ``env_step`` will integrate.
         Per-scenario C_D0 is calibrated from each warmup tail unless the
         scenario pins one; results are cached, so repeated resets with the
         same scenario set re-run nothing.  Probe layouts are padded to a
-        common ``obs_dim`` (default: widest in the batch).
+        common ``obs_dim`` and action vectors to a common ``act_dim``
+        (default: widest in the batch; ``act_dim == 1`` keeps the
+        historical scalar-amplitude state).  A batch whose geometries stray
+        from the config's builds the geometry bank so every env gathers its
+        own body set inside one vmapped program.
         """
         cfg = self.cfg
         scns = scn_mod.assign_envs(scenarios, n_envs or len(scenarios))
-        groups = sorted({(s.re, s.act_mode) for s in scns})
+        groups = sorted({(s.re, s.act_mode, s.geometry) for s in scns})
         self._warmup_groups(groups)
+        if any(s.geometry != cfg.geometry for s in scns):
+            self._ensure_bank()
 
         flows, cd0s = [], []
         for s in scns:
-            flow, cd0 = self._group_cache[(s.re, s.act_mode)]
+            flow, cd0 = self._group_cache[(s.re, s.act_mode, s.geometry)]
             flows.append(flow)
             cd0s.append(s.cd0 if s.cd0 is not None else cd0)
         flow_b = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[jax.tree.map(jnp.asarray, f) for f in flows])
         params_b = scn_mod.batch_params(scns, cfg.grid, obs_dim=obs_dim,
-                                        cd0s=cd0s)
+                                        act_dim=act_dim, cd0s=cd0s)
+        a_dim = (scn_mod.common_act_dim(scns) if act_dim is None else act_dim)
+        jet0 = (jnp.zeros(len(scns), jnp.float32) if a_dim == 1
+                else jnp.zeros((len(scns), a_dim), jnp.float32))
         st_b = EnvState(flow=solver.FlowState(*flow_b),
-                        jet_vel=jnp.zeros(len(scns), jnp.float32),
+                        jet_vel=jet0,
                         t=jnp.zeros(len(scns), jnp.int32), scn=params_b)
         obs_b = jax.vmap(self._observe)(st_b)
         return st_b, obs_b
 
     def _warmup_groups(self, groups) -> None:
-        """Warm up every uncached (re, act_mode) group in one vmapped run."""
+        """Warm up every uncached (re, act_mode, geometry) group, one vmapped
+        run per geometry (each geometry's masks are distinct closure
+        constants, so they cannot share a trace without banking — and warmup
+        runs once per cache lifetime, where compile time dominates anyway)."""
         cfg = self.cfg
         todo = [g for g in groups if g not in self._group_cache]
         if not todo:
             return
+        by_geom: dict = {}
+        for g in todo:
+            by_geom.setdefault(g[2], []).append(g)
         n = max(1, int(round(cfg.warmup_time / cfg.grid.dt)))
-        flow0 = solver.init_state(cfg.grid, self.geom)
-        run = jax.jit(jax.vmap(
-            lambda re, m: self._run_steps(n, flow0, jnp.float32(0.0),
-                                          re=re, act_mode=m)))
-        flows, (cds, _) = run(jnp.asarray([g[0] for g in todo], jnp.float32),
-                              jnp.asarray([g[1] for g in todo], jnp.float32))
         tail = max(1, n // 4)
-        cd0s = np.asarray(jnp.mean(cds[:, -tail:], axis=1))
-        for i, g in enumerate(todo):
-            flow = jax.tree.map(lambda a, i=i: np.asarray(a[i]), flows)
-            self._group_cache[g] = (solver.FlowState(*flow), float(cd0s[i]))
+        for gname, gtodo in sorted(by_geom.items()):
+            geom, ga = self._geometry(gname)
+            flow0 = solver.init_state(cfg.grid, geom)
+            run = jax.jit(jax.vmap(
+                lambda re, m: self._run_steps(n, flow0, jnp.float32(0.0),
+                                              re=re, act_mode=m,
+                                              geom_arrays=ga)))
+            flows, (cds, _) = run(
+                jnp.asarray([g[0] for g in gtodo], jnp.float32),
+                jnp.asarray([g[1] for g in gtodo], jnp.float32))
+            cd0s = np.asarray(jnp.mean(cds[:, -tail:], axis=1))
+            for i, g in enumerate(gtodo):
+                flow = jax.tree.map(lambda a, i=i: np.asarray(a[i]), flows)
+                self._group_cache[g] = (solver.FlowState(*flow),
+                                        float(cd0s[i]))
 
     def _observe(self, st: EnvState) -> jnp.ndarray:
         return probes_mod.sample_pressure(st.scn.probe_ij, st.flow.p,
                                           st.scn.probe_mask)
 
+    def obs_aux(self, st: EnvState) -> dict:
+        """Observation side-channel for set-structured policies: normalized
+        probe coordinates in [-1, 1]^2 plus the live-slot mask.  Constant
+        over an episode (the layout rides in ``st.scn``), so rollouts fetch
+        it once per reset, not per step."""
+        g = self.cfg.grid
+        ij = jnp.asarray(st.scn.probe_ij, jnp.float32)
+        y = ij[..., 0] / max(g.ny - 1, 1) * 2.0 - 1.0
+        x = ij[..., 1] / max(g.nx - 1, 1) * 2.0 - 1.0
+        return {"xy": jnp.stack([x, y], axis=-1),
+                "mask": jnp.asarray(st.scn.probe_mask, jnp.float32)}
+
     def env_step(self, st: EnvState, action) -> Tuple[EnvState, EnvOutput]:
-        """One actuation period.  action: scalar in [-1, 1] (scaled to the
-        actuator: jet velocity or rotary surface speed, per ``st.scn``)."""
+        """One actuation period.  action: in [-1, 1], scalar (jet velocity
+        or uniform rotary surface speed) or (A,) per-body surface speeds —
+        the shape follows ``st.jet_vel``; padded slots beyond a scenario's
+        own act_dim are zeroed by ``st.scn.act_mask``."""
         cfg = self.cfg
         a = jnp.clip(action, -1.0, 1.0) * cfg.action_max
+        per_body = jnp.ndim(st.jet_vel) > 0          # static (trace-time)
+        if per_body and st.scn.act_mask is not None:
+            a = a * st.scn.act_mask
         jet = st.jet_vel + cfg.beta * (a - st.jet_vel)        # eq. (11)
         jet = jnp.clip(jet, -cfg.action_max, cfg.action_max)
 
         # the whole actuation interval runs as one unit: backend="fused"
         # carries the fields (and packed pressure planes) across every dt
         # with no per-dt round-trips; other backends scan solver.step
-        flow, outs = solver.step_interval(cfg.grid, self.geom_arrays,
+        flow, outs = solver.step_interval(cfg.grid, self._env_geom(st.scn),
                                           st.flow, jet,
                                           cfg.steps_per_action,
                                           re=st.scn.re,
                                           act_mode=st.scn.act_mode,
                                           backend=self.backend,
                                           mesh=self.mesh)
-        cd = jnp.mean(outs.cd)
-        cl = jnp.mean(outs.cl)
-        reward = st.scn.cd0 - cd - cfg.reward_omega * jnp.abs(cl)  # eq. (12)
+        if outs.cd.ndim > 1:
+            # per-body (n_steps, B) coefficients: the reward drag term is the
+            # total, but lift is penalized per body — opposite-signed body
+            # lifts must not cancel into a spurious zero penalty
+            cd_b = jnp.mean(outs.cd, axis=0)
+            cl_b = jnp.mean(outs.cl, axis=0)
+            cd = jnp.sum(cd_b)
+            cl = jnp.sum(cl_b)
+            cl_pen = jnp.sum(jnp.abs(cl_b))
+        else:
+            cd = jnp.mean(outs.cd)
+            cl = jnp.mean(outs.cl)
+            cl_pen = jnp.abs(cl)
+        reward = st.scn.cd0 - cd - cfg.reward_omega * cl_pen   # eq. (12)
         st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1, scn=st.scn)
         return st2, EnvOutput(obs=self._observe(st2), reward=reward,
                               cd=cd, cl=cl)

@@ -27,6 +27,51 @@ JET_WIDTH_DEG = 10.0
 
 
 @dataclass(frozen=True)
+class Body:
+    """One immersed cylinder: center + radius (D = 2r = 1 by default)."""
+    x: float
+    y: float
+    r: float = RADIUS
+
+
+# Named multi-body configurations.  "cylinder" is the repo's historical
+# single-body Schäfer case and MUST stay byte-identical (the golden-physics
+# fixtures pin it).  "pinball" is the fluidic pinball (Deng et al. / Vignon
+# et al., arXiv 2304.03181): three unit-diameter cylinders on an equilateral
+# triangle of side 1.5D, apex upstream — shifted downstream so the front
+# cylinder sits 1D from the inlet and the back pair keeps a 0.8D gap to the
+# channel walls.  "tandem" is two inline cylinders 1.5D apart.
+_PINBALL_BACK_X = -0.5 + 1.5 * np.sqrt(3.0) / 2.0      # ~0.799
+GEOMETRIES: dict = {
+    "cylinder": (Body(CYL_X, CYL_Y),),
+    "pinball": (Body(-0.5, 0.0),
+                Body(_PINBALL_BACK_X, 0.75),
+                Body(_PINBALL_BACK_X, -0.75)),
+    "tandem": (Body(0.0, CYL_Y), Body(1.5, CYL_Y)),
+}
+
+
+def geometry_names() -> Tuple[str, ...]:
+    """Registered geometry names in the canonical (sorted) order — the
+    order the env's stacked geometry bank uses, so a ``geom_id`` stored in
+    a checkpoint resolves to the same geometry in any process."""
+    return tuple(sorted(GEOMETRIES))
+
+
+def geometry_index(name: str) -> int:
+    """Canonical bank index of a geometry (see :func:`geometry_names`)."""
+    try:
+        return geometry_names().index(name)
+    except ValueError:
+        raise KeyError(f"unknown geometry {name!r}; "
+                       f"known: {geometry_names()}") from None
+
+
+def max_bodies() -> int:
+    return max(len(b) for b in GEOMETRIES.values())
+
+
+@dataclass(frozen=True)
 class GridConfig:
     res: int = 16                 # cells per diameter
     re: float = 100.0
@@ -72,14 +117,15 @@ def inlet_profile(cfg: GridConfig, y: np.ndarray) -> np.ndarray:
     return um * (H - 2 * y) * (H + 2 * y) / H ** 2
 
 
-def _smoothed_solid(xx, yy, dx) -> np.ndarray:
+def _smoothed_solid(xx, yy, dx, cx=CYL_X, cy=CYL_Y, radius=RADIUS
+                    ) -> np.ndarray:
     """chi in [0,1]: 1 inside the cylinder, smoothed over ~1 cell."""
-    r = np.sqrt((xx - CYL_X) ** 2 + (yy - CYL_Y) ** 2)
+    r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
     eps = 0.5 * dx
-    return np.clip(0.5 * (1 - (r - RADIUS) / eps), 0.0, 1.0)
+    return np.clip(0.5 * (1 - (r - radius) / eps), 0.0, 1.0)
 
 
-def _rotary_shell(xx, yy, dx):
+def _rotary_shell(xx, yy, dx, cx=CYL_X, cy=CYL_Y, radius=RADIUS):
     """Rotary-control target field: rigid-body rotation per unit surface speed.
 
     Returns (rot_x, rot_y, rmask), each (ny, nx): the x/y components of the
@@ -92,13 +138,13 @@ def _rotary_shell(xx, yy, dx):
     keep the component matching their staggered face (rot_x at u faces,
     rot_y at v faces).
     """
-    rx, ry = xx - CYL_X, yy - CYL_Y
+    rx, ry = xx - cx, yy - cy
     r = np.sqrt(rx ** 2 + ry ** 2) + 1e-12
     # tangential unit vector for counter-clockwise rotation
     tx, ty = -ry / r, rx / r
     # 1 inside / on the surface, linear taper to 0 at R + 0.75 dx
-    rmask = np.clip((RADIUS + 0.75 * dx - r) / (0.5 * dx), 0.0, 1.0)
-    mag = np.clip(r / RADIUS, 0.0, 1.0) * rmask
+    rmask = np.clip((radius + 0.75 * dx - r) / (0.5 * dx), 0.0, 1.0)
+    mag = np.clip(r / radius, 0.0, 1.0) * rmask
     return mag * tx, mag * ty, rmask
 
 
@@ -136,7 +182,15 @@ def _jet_shell(xx, yy, dx):
 
 @dataclass(frozen=True)
 class Geometry:
-    """Static precomputed fields (numpy; converted to jnp lazily)."""
+    """Static precomputed fields (numpy; converted to jnp lazily).
+
+    The per-body fields (``rotb_*``, ``own_*``) extend the single-cylinder
+    layout to N bodies: ``rotb_u[b]`` is body *b*'s rotary target per unit
+    surface speed (zero outside its penalization band), and ``own_u[b]`` is
+    a nearest-body partition of unity (sums to 1 over bodies at every cell)
+    used to split the global penalization force into per-body C_D/C_L.  For
+    the classic single cylinder they reduce to the legacy ``rot_*`` fields
+    and an all-ones ownership, and every legacy field is byte-identical."""
     chi_u: np.ndarray        # (ny, nx+1) solid fraction at u faces
     chi_v: np.ndarray        # (ny+1, nx) solid fraction at v faces
     jet_u: np.ndarray        # (2, ny, nx+1) jet direction*profile at u faces
@@ -150,9 +204,32 @@ class Geometry:
     inlet_u: np.ndarray      # (ny,) parabolic inlet profile at u rows
     probe_ij: np.ndarray     # (149, 2) float cell-index coords of probes
     cell_volume: float
+    name: str = "cylinder"   # GEOMETRIES key this was built from
+    rotb_u: np.ndarray = None  # (B, ny, nx+1) per-body rotary target (x comp)
+    rotb_v: np.ndarray = None  # (B, ny+1, nx) per-body rotary target (y comp)
+    own_u: np.ndarray = None   # (B, ny, nx+1) nearest-body partition of unity
+    own_v: np.ndarray = None   # (B, ny+1, nx) nearest-body partition of unity
+
+    @property
+    def n_bodies(self) -> int:
+        return len(GEOMETRIES[self.name])
 
 
-def build_geometry(cfg: GridConfig) -> Geometry:
+def _ownership(xx, yy, bodies) -> np.ndarray:
+    """(B, ny, nx) nearest-body one-hot partition of unity (ties -> the
+    first body, so the stack always sums to exactly 1 at every cell)."""
+    d = np.stack([np.sqrt((xx - b.x) ** 2 + (yy - b.y) ** 2) - b.r
+                  for b in bodies])
+    nearest = np.argmin(d, axis=0)
+    return np.stack([(nearest == i).astype(np.float64)
+                     for i in range(len(bodies))])
+
+
+def build_geometry(cfg: GridConfig, geometry: str = "cylinder") -> Geometry:
+    if geometry not in GEOMETRIES:
+        raise KeyError(f"unknown geometry {geometry!r}; "
+                       f"known: {geometry_names()}")
+    bodies = GEOMETRIES[geometry]
     dx, dy = cfg.dx, cfg.dy
     xc, yc = cell_centers(cfg)
     # u faces: x at i*dx + X0, y at centers
@@ -164,17 +241,48 @@ def build_geometry(cfg: GridConfig) -> Geometry:
     yv = -H / 2 + np.arange(cfg.ny + 1) * dy
     xxv, yyv = np.meshgrid(xv, yv)
 
-    chi_u = _smoothed_solid(xxu, yyu, dx)
-    chi_v = _smoothed_solid(xxv, yyv, dx)
+    # solid fraction: union (max) over bodies — identity for one body
+    chi_u = np.maximum.reduce([_smoothed_solid(xxu, yyu, dx, b.x, b.y, b.r)
+                               for b in bodies])
+    chi_v = np.maximum.reduce([_smoothed_solid(xxv, yyv, dx, b.x, b.y, b.r)
+                               for b in bodies])
 
-    ju_prof, nx_u, ny_u, jmask_u = _jet_shell(xxu, yyu, dx)
-    jv_prof, nx_v, ny_v, jmask_v = _jet_shell(xxv, yyv, dx)
-    # jet target velocity: outward normal component * parabolic profile
-    jet_u = ju_prof * nx_u[None]
-    jet_v = jv_prof * ny_v[None]
+    if geometry == "cylinder":
+        # synthetic jets are defined on the classic cylinder only; this
+        # branch is byte-identical to the historical single-body build
+        ju_prof, nx_u, ny_u, jmask_u = _jet_shell(xxu, yyu, dx)
+        jv_prof, nx_v, ny_v, jmask_v = _jet_shell(xxv, yyv, dx)
+        # jet target velocity: outward normal component * parabolic profile
+        jet_u = ju_prof * nx_u[None]
+        jet_v = jv_prof * ny_v[None]
+    else:
+        jet_u = np.zeros((2,) + xxu.shape)
+        jet_v = np.zeros((2,) + xxv.shape)
+        jmask_u = np.zeros(xxu.shape)
+        jmask_v = np.zeros(xxv.shape)
 
-    rot_u, _, rmask_u = _rotary_shell(xxu, yyu, dx)
-    _, rot_v, rmask_v = _rotary_shell(xxv, yyv, dx)
+    # per-body rotary targets; the penalization bands of distinct bodies
+    # never overlap (min gap 0.5D >> the ~0.75 dx band), so the union mask
+    # plus the summed target reproduces each body's rotating-wall BC
+    rotb_u, rotb_v, rmasks_u, rmasks_v = [], [], [], []
+    for b in bodies:
+        ru, _, rmu = _rotary_shell(xxu, yyu, dx, b.x, b.y, b.r)
+        _, rv, rmv = _rotary_shell(xxv, yyv, dx, b.x, b.y, b.r)
+        rotb_u.append(ru)
+        rotb_v.append(rv)
+        rmasks_u.append(rmu)
+        rmasks_v.append(rmv)
+    rotb_u = np.stack(rotb_u)
+    rotb_v = np.stack(rotb_v)
+    rmask_u = np.maximum.reduce(rmasks_u)
+    rmask_v = np.maximum.reduce(rmasks_v)
+    # legacy single-field target: all bodies co-rotating at the same speed
+    # (exactly the historical field for the single cylinder)
+    rot_u = np.sum(rotb_u, axis=0)
+    rot_v = np.sum(rotb_v, axis=0)
+
+    own_u = _ownership(xxu, yyu, bodies)
+    own_v = _ownership(xxv, yyv, bodies)
 
     inlet_u = inlet_profile(cfg, yu)
 
@@ -184,7 +292,9 @@ def build_geometry(cfg: GridConfig) -> Geometry:
                     jmask_u=jmask_u, jmask_v=jmask_v,
                     rot_u=rot_u, rot_v=rot_v,
                     rmask_u=rmask_u, rmask_v=rmask_v,
-                    inlet_u=inlet_u, probe_ij=probe_ij, cell_volume=dx * dy)
+                    inlet_u=inlet_u, probe_ij=probe_ij, cell_volume=dx * dy,
+                    name=geometry, rotb_u=rotb_u, rotb_v=rotb_v,
+                    own_u=own_u, own_v=own_v)
 
 
 def points_to_ij(cfg: GridConfig, pts: np.ndarray) -> np.ndarray:

@@ -8,6 +8,9 @@ an observation vector per case:
   sparse24  16-probe ring at r=0.8 + 8 near-wake probes (Tang et al. style
             reduced sensing)
   sparse8   8-probe ring at r=0.8 (minimal sensing)
+  pinball   8-probe ring around each of the three pinball cylinders + a
+            5x7 wake grid behind the triangle (59 probes)
+  tandem    16-probe ring around each tandem cylinder + 8 wake probes (40)
 
 ``sample_pressure`` takes the probe coordinates as *data* (not closure
 constants), so per-env probe layouts vmap into one program; a probe mask
@@ -21,12 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cfd.grid import CYL_X, CYL_Y, probe_positions
+from repro.cfd.grid import CYL_X, CYL_Y, GEOMETRIES, probe_positions
 
 
-def _ring(n: int, r: float) -> np.ndarray:
+def _ring(n: int, r: float, cx: float = CYL_X, cy: float = CYL_Y) -> np.ndarray:
     a = 2 * np.pi * np.arange(n) / n
-    return np.stack([CYL_X + r * np.cos(a), CYL_Y + r * np.sin(a)], axis=-1)
+    return np.stack([cx + r * np.cos(a), cy + r * np.sin(a)], axis=-1)
 
 
 def _sparse24() -> np.ndarray:
@@ -34,10 +37,31 @@ def _sparse24() -> np.ndarray:
     return np.concatenate([_ring(16, 0.8), wake])
 
 
+def _body_rings(geometry: str, n: int, r: float) -> np.ndarray:
+    return np.concatenate([_ring(n, r, b.x, b.y)
+                           for b in GEOMETRIES[geometry]])
+
+
+def _pinball() -> np.ndarray:
+    # 8 probes per cylinder ring + a 5x7 wake grid behind the triangle
+    rings = _body_rings("pinball", 8, 0.8)
+    wx, wy = np.meshgrid(np.linspace(2.0, 8.0, 7), np.linspace(-1.4, 1.4, 5))
+    wake = np.stack([wx.ravel(), wy.ravel()], axis=-1)
+    return np.concatenate([rings, wake])
+
+
+def _tandem() -> np.ndarray:
+    wake = np.stack([np.linspace(2.5, 9.0, 8),
+                     np.full(8, CYL_Y)], axis=-1)
+    return np.concatenate([_body_rings("tandem", 16, 0.8), wake])
+
+
 LAYOUTS: Dict[str, Callable[[], np.ndarray]] = {
     "ring149": probe_positions,
     "sparse24": _sparse24,
     "sparse8": lambda: _ring(8, 0.8),
+    "pinball": _pinball,
+    "tandem": _tandem,
 }
 
 

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cfd import probes as probes_mod
-from repro.cfd.grid import GridConfig, points_to_ij
+from repro.cfd.grid import (GEOMETRIES, GridConfig, geometry_index,
+                            points_to_ij)
 
 ACTUATIONS = ("jets", "rotary")
 
@@ -41,6 +42,7 @@ class Scenario:
     re: float = 100.0
     actuation: str = "jets"        # "jets" | "rotary"
     probes: str = "ring149"        # probe layout name (repro.cfd.probes)
+    geometry: str = "cylinder"     # immersed-body set (repro.cfd.grid)
     cd0: Optional[float] = None
     description: str = ""
 
@@ -48,6 +50,14 @@ class Scenario:
         if self.actuation not in ACTUATIONS:
             raise ValueError(f"unknown actuation {self.actuation!r}; "
                              f"choose from {ACTUATIONS}")
+        if self.geometry not in GEOMETRIES:
+            raise ValueError(f"unknown geometry {self.geometry!r}; "
+                             f"choose from {sorted(GEOMETRIES)}")
+        if self.actuation == "jets" and self.geometry != "cylinder":
+            raise ValueError(
+                f"scenario {self.name!r}: synthetic jets are only carved "
+                "into the single-cylinder geometry; multi-body geometries "
+                "use actuation='rotary'")
         probes_mod.layout_positions(self.probes)   # validate eagerly
 
     @property
@@ -57,6 +67,15 @@ class Scenario:
     @property
     def act_mode(self) -> float:
         return float(ACTUATIONS.index(self.actuation))
+
+    @property
+    def n_bodies(self) -> int:
+        return len(GEOMETRIES[self.geometry])
+
+    @property
+    def act_dim(self) -> int:
+        """Action vector width: one rotary speed per body, one jet amplitude."""
+        return self.n_bodies if self.actuation == "rotary" else 1
 
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -100,6 +119,15 @@ _builtin("cyl_re100_sparse8", re=100.0, probes="sparse8",
          description="minimal 8-probe sensing at Re=100")
 _builtin("cyl_re200_sparse24", re=200.0, probes="sparse24",
          description="reduced 24-probe sensing at Re=200")
+_builtin("pinball_re100", re=100.0, actuation="rotary", probes="pinball",
+         geometry="pinball",
+         description="fluidic pinball: three rotating cylinders, Re=100")
+_builtin("pinball_re130", re=130.0, actuation="rotary", probes="pinball",
+         geometry="pinball",
+         description="fluidic pinball in the chaotic regime, Re=130")
+_builtin("tandem_re100", re=100.0, actuation="rotary", probes="tandem",
+         geometry="tandem",
+         description="tandem cylinders 1.5D apart, per-body rotary control")
 
 
 # ---------------------------------------------------------------------------
@@ -117,22 +145,33 @@ class ScenarioParams(NamedTuple):
       cd0        ()       uncontrolled reference drag for reward eq. (12)
       probe_ij   (P, 2)   fractional [row, col] probe coords (padded)
       probe_mask (P,)     1 for live probes, 0 for padded slots
+      geom_id    ()       int32 index into grid.geometry_names() — selects
+                          this env's immersed-body set from the geometry bank
+      act_mask   (A,)     1 for live action slots, 0 for padding when mixed
+                          act_dims share one batch
+
+    The trailing two default to ``None`` so ScenarioParams pytrees serialized
+    before the multi-body layer still deserialize (``jax.tree`` treats None
+    as an empty subtree).
     """
     re: jnp.ndarray
     act_mode: jnp.ndarray
     cd0: jnp.ndarray
     probe_ij: jnp.ndarray
     probe_mask: jnp.ndarray
+    geom_id: jnp.ndarray = None
+    act_mask: jnp.ndarray = None
 
 
 def scenario_params(scn: Scenario, grid: GridConfig, *,
                     obs_dim: Optional[int] = None,
+                    act_dim: Optional[int] = None,
                     cd0: Optional[float] = None) -> ScenarioParams:
     """Build the traced parameter pytree for one scenario.
 
-    obs_dim pads/validates the probe vector to a common batch width;
-    cd0 overrides (e.g. with the calibrated warmup value) when the scenario
-    does not pin one."""
+    obs_dim / act_dim pad (and validate) the probe and action vectors to a
+    common batch width; cd0 overrides (e.g. with the calibrated warmup value)
+    when the scenario does not pin one."""
     pts = probes_mod.layout_positions(scn.probes)
     ij = points_to_ij(grid, pts).astype(np.float32)
     n = len(ij)
@@ -143,6 +182,13 @@ def scenario_params(scn: Scenario, grid: GridConfig, *,
     pad = obs_dim - n
     ij = np.concatenate([ij, np.zeros((pad, 2), np.float32)])
     mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    a = scn.act_dim
+    act_dim = a if act_dim is None else act_dim
+    if act_dim < a:
+        raise ValueError(f"act_dim={act_dim} < scenario {scn.name!r} "
+                         f"action width {a}")
+    act_mask = np.concatenate([np.ones(a, np.float32),
+                               np.zeros(act_dim - a, np.float32)])
     # no cd0 from either the scenario or the caller -> NaN, so a reward
     # computed against an uncalibrated baseline fails loudly instead of
     # silently reading cd0 = 0 (CylinderEnv.reset_batch always calibrates)
@@ -151,7 +197,9 @@ def scenario_params(scn: Scenario, grid: GridConfig, *,
                           act_mode=jnp.float32(scn.act_mode),
                           cd0=jnp.float32(cd0),
                           probe_ij=jnp.asarray(ij),
-                          probe_mask=jnp.asarray(mask))
+                          probe_mask=jnp.asarray(mask),
+                          geom_id=jnp.int32(geometry_index(scn.geometry)),
+                          act_mask=jnp.asarray(act_mask))
 
 
 def resolve(scenarios: Sequence) -> Tuple[Scenario, ...]:
@@ -165,17 +213,25 @@ def common_obs_dim(scenarios: Sequence) -> int:
     return max(s.obs_dim for s in resolve(scenarios))
 
 
+def common_act_dim(scenarios: Sequence) -> int:
+    """Padded action width for a mixed batch (max per-scenario act_dim)."""
+    return max(s.act_dim for s in resolve(scenarios))
+
+
 def batch_params(scenarios: Sequence, grid: GridConfig, *,
                  obs_dim: Optional[int] = None,
+                 act_dim: Optional[int] = None,
                  cd0s: Optional[Sequence[float]] = None) -> ScenarioParams:
     """Stack scenarios into a batched ScenarioParams (leading axis = env).
 
-    Probe layouts are padded to a common obs_dim (default: the widest layout
-    in the batch) so heterogeneous sensing vmaps into one program."""
+    Probe layouts (and action vectors) are padded to a common width
+    (default: the widest in the batch) so heterogeneous sensing and
+    actuation vmap into one program."""
     scns = resolve(scenarios)
     obs_dim = common_obs_dim(scns) if obs_dim is None else obs_dim
+    act_dim = common_act_dim(scns) if act_dim is None else act_dim
     cd0s = [None] * len(scns) if cd0s is None else list(cd0s)
-    per = [scenario_params(s, grid, obs_dim=obs_dim, cd0=c)
+    per = [scenario_params(s, grid, obs_dim=obs_dim, act_dim=act_dim, cd0=c)
            for s, c in zip(scns, cd0s)]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 

@@ -15,6 +15,7 @@ be *traced* per call so heterogeneous scenario batches vmap into one program
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -23,6 +24,11 @@ import numpy as np
 
 from repro.cfd import poisson
 from repro.cfd.grid import Geometry, GridConfig
+from repro.core import backend as backend_mod
+
+# once-per-shape fallback warning for vector jet_vel on backend="fused"
+# (registered so tests/conftest.py resets it between tests)
+_FUSED_VECTOR_WARNED = backend_mod.warn_once_cache()
 
 
 class FlowState(NamedTuple):
@@ -36,7 +42,13 @@ class GeomArrays(NamedTuple):
 
     These are shared by every scenario on the same grid; everything that
     varies per scenario (Re, actuation mode, probe layout) is traced data so
-    mixed-scenario batches vmap into one program."""
+    mixed-scenario batches vmap into one program.
+
+    The trailing per-body fields (``rotb_*`` per-body rotary targets,
+    ``own_*`` nearest-body force-ownership partition; see ``grid.Geometry``)
+    default to ``None`` so eleven-field constructions predating the
+    multi-body layer keep working; they are only consumed on the vector
+    (per-body) actuation branch of ``_momentum``."""
     chi_u: jnp.ndarray
     chi_v: jnp.ndarray
     jet_u: jnp.ndarray
@@ -48,11 +60,15 @@ class GeomArrays(NamedTuple):
     rmask_u: jnp.ndarray
     rmask_v: jnp.ndarray
     inlet_u: jnp.ndarray
+    rotb_u: jnp.ndarray = None    # (B, ny, nx+1)
+    rotb_v: jnp.ndarray = None    # (B, ny+1, nx)
+    own_u: jnp.ndarray = None     # (B, ny, nx+1)
+    own_v: jnp.ndarray = None     # (B, ny+1, nx)
 
 
 class StepOutputs(NamedTuple):
-    cd: jnp.ndarray          # drag coefficient (scalar)
-    cl: jnp.ndarray          # lift coefficient (scalar)
+    cd: jnp.ndarray          # drag coefficient (scalar; (B,) per body when
+    cl: jnp.ndarray          # the actuation amplitude is a per-body vector)
 
 
 def init_state(cfg: GridConfig, geom: Geometry) -> FlowState:
@@ -172,6 +188,14 @@ def _momentum(cfg: GridConfig, ga: GeomArrays, u, v, jet_vel, re, act_mode):
     BEFORE boundary conditions are applied — the post-BC fields are
     deliberately separate names (``u_bc``/``v_bc``) so a refactor cannot
     silently change ``fx``/``fy``.
+
+    ``jet_vel`` is either the historical scalar amplitude (both scalar
+    branches below are byte-identical to the pre-multi-body solver) or a
+    per-body ``(A,)`` vector of rotary surface speeds (``A >=`` the
+    geometry's body count; extra padded slots are inert because the padded
+    ``rotb_*`` planes are zero).  On the vector branch ``fx``/``fy`` come
+    back per body ``(B,)``, split by the nearest-body ownership partition —
+    their sum equals the global reaction force up to summation order.
     """
     chi_u, chi_v, inlet_u = ga.chi_u, ga.chi_v, ga.inlet_u
     dt = cfg.dt
@@ -187,23 +211,50 @@ def _momentum(cfg: GridConfig, ga: GeomArrays, u, v, jet_vel, re, act_mode):
     lam = dt / cfg.penal_eta
     jet_tgt_u = ga.jet_u[0] - ga.jet_u[1]
     jet_tgt_v = ga.jet_v[0] - ga.jet_v[1]
+    per_body = jnp.ndim(jet_vel) > 0          # static: part of the trace
     if act_mode is None:                      # static jets-only path
         tgt_u = jet_vel * jet_tgt_u
         tgt_v = jet_vel * jet_tgt_v
         pen_u = jnp.maximum(chi_u, ga.jmask_u)
         pen_v = jnp.maximum(chi_v, ga.jmask_v)
-    else:                                     # per-scenario traced blend
+    elif not per_body:                        # per-scenario traced blend
         m = act_mode
         tgt_u = jet_vel * ((1 - m) * jet_tgt_u + m * ga.rot_u)
         tgt_v = jet_vel * ((1 - m) * jet_tgt_v + m * ga.rot_v)
+        pen_u = jnp.maximum(chi_u, (1 - m) * ga.jmask_u + m * ga.rmask_u)
+        pen_v = jnp.maximum(chi_v, (1 - m) * ga.jmask_v + m * ga.rmask_v)
+    else:                                     # per-body vector actuation
+        if ga.rotb_u is None:
+            raise ValueError(
+                "per-body (vector) jet_vel needs the per-body geometry "
+                "fields (rotb_*/own_*); rebuild GeomArrays via "
+                "geom_to_arrays(build_geometry(cfg, geometry))")
+        nb = ga.rotb_u.shape[0]
+        av = jnp.asarray(jet_vel)
+        if av.shape[0] < nb:                  # static pad to the body count
+            av = jnp.pad(av, (0, nb - av.shape[0]))
+        # slot 0 doubles as the jet amplitude so a jets-mode scenario rides
+        # the same vector program inside a mixed multi-body batch
+        a0 = av[0]
+        m = act_mode
+        rot_t_u = jnp.einsum("b,byx->yx", av[:nb], ga.rotb_u)
+        rot_t_v = jnp.einsum("b,byx->yx", av[:nb], ga.rotb_v)
+        tgt_u = (1 - m) * a0 * jet_tgt_u + m * rot_t_u
+        tgt_v = (1 - m) * a0 * jet_tgt_v + m * rot_t_v
         pen_u = jnp.maximum(chi_u, (1 - m) * ga.jmask_u + m * ga.rmask_u)
         pen_v = jnp.maximum(chi_v, (1 - m) * ga.jmask_v + m * ga.rmask_v)
     u_pen = (u_star + lam * pen_u * tgt_u) / (1 + lam * pen_u)
     v_pen = (v_star + lam * pen_v * tgt_v) / (1 + lam * pen_v)
     # momentum exchange -> force on the body (reaction), per unit density —
     # measured from the PREDICTOR u_star/v_star, before BCs touch the fields
-    fx = -jnp.sum((u_pen - u_star) / dt) * cfg.dx * cfg.dy
-    fy = -jnp.sum((v_pen - v_star) / dt) * cfg.dx * cfg.dy
+    if per_body:
+        fx = -jnp.einsum("byx,yx->b", ga.own_u,
+                         (u_pen - u_star) / dt) * cfg.dx * cfg.dy
+        fy = -jnp.einsum("byx,yx->b", ga.own_v,
+                         (v_pen - v_star) / dt) * cfg.dx * cfg.dy
+    else:
+        fx = -jnp.sum((u_pen - u_star) / dt) * cfg.dx * cfg.dy
+        fy = -jnp.sum((v_pen - v_star) / dt) * cfg.dx * cfg.dy
 
     # 3. boundary conditions + global outlet mass correction, fused into one
     # pass over each field: the inlet BC pins column 0 to inlet_u (so the
@@ -299,9 +350,22 @@ def step_interval(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState,
     """
     backend = poisson.resolve_backend(backend, use_pallas)
     if backend == "fused":
-        from repro.kernels.actuation import ops as actuation_ops
-        return actuation_ops.fused_interval(cfg, geom_arrays, state, jet_vel,
-                                            n_steps, re=re, act_mode=act_mode)
+        if jnp.ndim(jet_vel) > 0:
+            # The megakernel's penalization body is scalar-actuation only;
+            # multi-body vector amplitudes take the reference scan.
+            key = ("fused_vector_jet", int(jet_vel.shape[0]))
+            if key not in _FUSED_VECTOR_WARNED:
+                _FUSED_VECTOR_WARNED.add(key)
+                warnings.warn(
+                    "backend='fused' does not support per-body (vector) "
+                    "jet_vel; falling back to the reference interval scan",
+                    RuntimeWarning, stacklevel=2)
+            backend = "reference"
+        else:
+            from repro.kernels.actuation import ops as actuation_ops
+            return actuation_ops.fused_interval(cfg, geom_arrays, state,
+                                                jet_vel, n_steps, re=re,
+                                                act_mode=act_mode)
 
     def body(flow, _):
         return step(cfg, geom_arrays, flow, jet_vel, re=re,
@@ -314,9 +378,14 @@ def step_interval(cfg: GridConfig, geom_arrays: GeomArrays, state: FlowState,
 def geom_to_arrays(geom: Geometry) -> GeomArrays:
     """Static geometry as a pytree of jnp arrays (closed over, never traced)."""
     as32 = lambda a: jnp.asarray(a, jnp.float32)
+    opt = lambda a: None if a is None else as32(a)
     return GeomArrays(chi_u=as32(geom.chi_u), chi_v=as32(geom.chi_v),
                       jet_u=as32(geom.jet_u), jet_v=as32(geom.jet_v),
                       jmask_u=as32(geom.jmask_u), jmask_v=as32(geom.jmask_v),
                       rot_u=as32(geom.rot_u), rot_v=as32(geom.rot_v),
                       rmask_u=as32(geom.rmask_u), rmask_v=as32(geom.rmask_v),
-                      inlet_u=as32(geom.inlet_u))
+                      inlet_u=as32(geom.inlet_u),
+                      rotb_u=opt(getattr(geom, "rotb_u", None)),
+                      rotb_v=opt(getattr(geom, "rotb_v", None)),
+                      own_u=opt(getattr(geom, "own_u", None)),
+                      own_v=opt(getattr(geom, "own_v", None)))

@@ -17,15 +17,18 @@ from repro.cfd.grid import GridConfig, build_geometry
 
 
 def run_uncontrolled(cfg: GridConfig, state: solver.FlowState, n: int,
-                     *, backend: str = None, mesh=None
+                     *, backend: str = None, mesh=None,
+                     geometry: str = "cylinder"
                      ) -> Tuple[solver.FlowState, np.ndarray, np.ndarray]:
     """Advance ``n`` uncontrolled (jet_vel = 0) steps; returns (state, cds,
     cls) with force-coefficient time series as numpy arrays.
 
     ``backend``/``mesh`` select the Poisson backend (see ``cfd.poisson``),
     so the golden physics window can be re-measured through e.g. the
-    ``"halo"`` domain-decomposed path."""
-    geom_arrays = solver.geom_to_arrays(build_geometry(cfg))
+    ``"halo"`` domain-decomposed path.  ``geometry`` picks the obstacle set
+    (``grid.GEOMETRIES``); forces are the total over all bodies, which is
+    what the golden fixtures pin."""
+    geom_arrays = solver.geom_to_arrays(build_geometry(cfg, geometry))
 
     def body(flow, _):
         flow, out = solver.step(cfg, geom_arrays, flow, jnp.float32(0.0),

@@ -133,7 +133,8 @@ class DatasetSink(TrajectorySink):
         return _shard_name(0)
 
     def _write(self, episode: int, traj: Trajectory) -> int:
-        arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)}
+        arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)
+                  if a is not None}
         blob = pack_arrays(arrays, cctx=self._cctx)
         name = self._current_shard()
         offset = self._man["shards"].get(name, 0)
@@ -263,7 +264,8 @@ class TrajectoryReader:
                 f"{episode} stored {rec['crc32']:#010x}, computed "
                 f"{crc:#010x} — shard bytes are corrupt")
         arrays, _ = unpack_arrays(blob, dctx=self._dctx)
-        return Trajectory(**{f: arrays[f] for f in Trajectory._fields})
+        return Trajectory(**{f: arrays[f] for f in Trajectory._fields
+                             if f in arrays})
 
     def __iter__(self) -> Iterator[Trajectory]:
         for ep in self.episodes:

@@ -62,6 +62,11 @@ _DRL_DIR = os.path.dirname(__file__)
 # trajectory sinks — the paper's I/O strategies applied to trajectory spill
 # ---------------------------------------------------------------------------
 
+def _host_traj(traj) -> Trajectory:
+    """Device trajectory -> host numpy, preserving absent (None) aux fields."""
+    return Trajectory(*(None if a is None else np.asarray(a) for a in traj))
+
+
 class SinkReadError(KeyError):
     """Raised when a sink is asked for an episode it does not hold.
 
@@ -119,11 +124,11 @@ class MemorySink(TrajectorySink):
         self._store: Dict[int, Trajectory] = {}
 
     def _write(self, episode: int, traj: Trajectory) -> int:
-        host = Trajectory(*(np.asarray(a) for a in traj))
+        host = _host_traj(traj)
         self._store[episode] = host
         while len(self._store) > self.keep:
             del self._store[min(self._store)]
-        return sum(a.nbytes for a in host)
+        return sum(a.nbytes for a in host if a is not None)
 
     def read(self, episode: int) -> Trajectory:
         if episode not in self._store:
@@ -172,7 +177,10 @@ class FileSink(TrajectorySink):
         return self.dir / f"traj_{episode:06d}.p{self.process:03d}.bin"
 
     def _write(self, episode: int, traj: Trajectory) -> int:
-        arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)}
+        # optional trailing fields (probe aux) are skipped when absent, so
+        # files written by either layout stay readable by both
+        arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)
+                  if a is not None}
         blob = pack_arrays(arrays, cctx=self._cctx)
         return atomic_write_bytes(self._path(episode), blob)
 
@@ -192,7 +200,8 @@ class FileSink(TrajectorySink):
                 f"{str(self.dir)!r}, codec={self.codec!r}) has "
                 f"{self._available()}")
         arrays, _ = unpack_arrays(path.read_bytes(), dctx=self._dctx)
-        return Trajectory(**{f: arrays[f] for f in Trajectory._fields})
+        return Trajectory(**{f: arrays[f] for f in Trajectory._fields
+                             if f in arrays})
 
     def cleanup(self) -> None:
         import shutil
@@ -426,8 +435,10 @@ class RolloutEngine:
 
     def __init__(self, env_step_fn: Callable, cfg: EngineConfig, *,
                  mesh: Optional[Mesh] = None,
-                 sink: Optional[TrajectorySink] = None):
+                 sink: Optional[TrajectorySink] = None,
+                 obs_aux_fn: Optional[Callable] = None):
         self.env_step_fn = env_step_fn
+        self.obs_aux_fn = obs_aux_fn
         self.resolved_plan = None
         if cfg.plan is not None:
             from repro.core.autotune import resolve_plan
@@ -490,7 +501,11 @@ class RolloutEngine:
 
     @classmethod
     def for_env(cls, env, cfg: EngineConfig, **kw) -> "RolloutEngine":
-        """Bind a CylinderEnv-like object (anything with ``env_step``)."""
+        """Bind a CylinderEnv-like object (anything with ``env_step``).
+
+        Envs exposing ``obs_aux`` (probe coords + live-slot mask) get it
+        threaded to the policy automatically."""
+        kw.setdefault("obs_aux_fn", getattr(env, "obs_aux", None))
         return cls(env.env_step, cfg, **kw)
 
     # -- collect -> GAE -> flatten (THE single implementation) --------------
@@ -512,7 +527,8 @@ class RolloutEngine:
                 st_b = jax.tree.map(constrain, st_b)
             _, traj = rollout.rollout_batch(self.env_step_fn, params, st_b,
                                             obs_b, key, cfg.horizon,
-                                            cfg.n_envs)
+                                            cfg.n_envs,
+                                            obs_aux_fn=self.obs_aux_fn)
             return traj
 
         return collect_traj
@@ -521,14 +537,32 @@ class RolloutEngine:
         cfg = self.cfg
 
         def postprocess(params, traj):
-            values = networks.value(params, traj.obs)            # (N, T)
-            last_v = networks.value(params, traj.last_obs)       # (N,)
+            if traj.probe_mask is not None:
+                # per-env probe layout, constant over the episode: insert a
+                # T axis for the (N, T, P) obs, bare for the (N, P) last_obs
+                aux_t = {"xy": traj.probe_xy[:, None],
+                         "mask": traj.probe_mask[:, None]}
+                aux_n = {"xy": traj.probe_xy, "mask": traj.probe_mask}
+            else:
+                aux_t = aux_n = None
+            values = networks.value(params, traj.obs, aux_t)     # (N, T)
+            last_v = networks.value(params, traj.last_obs, aux_n)  # (N,)
             adv, ret = gae_batch(traj.reward, values, last_v,
                                  gamma=cfg.gamma, lam=cfg.lam)
             flat = lambda x: x.reshape((-1,) + x.shape[2:])
-            return Batch(obs=flat(traj.obs), act=flat(traj.act),
-                         logp_old=flat(traj.logp), adv=flat(adv),
-                         ret=flat(ret))
+            batch = Batch(obs=flat(traj.obs), act=flat(traj.act),
+                          logp_old=flat(traj.logp), adv=flat(adv),
+                          ret=flat(ret))
+            if traj.probe_mask is not None:
+                # PPO minibatching permutes rows, so each sample carries its
+                # own layout row (broadcast across the episode, then flat)
+                N, T = traj.obs.shape[:2]
+                xy = jnp.broadcast_to(traj.probe_xy[:, None],
+                                      (N, T) + traj.probe_xy.shape[1:])
+                m = jnp.broadcast_to(traj.probe_mask[:, None],
+                                     (N, T) + traj.probe_mask.shape[1:])
+                batch = batch._replace(probe_xy=flat(xy), probe_mask=flat(m))
+            return batch
 
         return postprocess
 
@@ -563,7 +597,7 @@ class RolloutEngine:
                 self.stats["rollout_s"] = (self.stats.get("rollout_s", 0.0)
                                            + time.perf_counter() - t0)
                 t0 = time.perf_counter()
-            traj = Trajectory(*(np.asarray(a) for a in self._gather(traj)))
+            traj = _host_traj(self._gather(traj))
             if _timing:
                 self.stats["gather_s"] = (self.stats.get("gather_s", 0.0)
                                           + time.perf_counter() - t0)
@@ -621,7 +655,9 @@ class RolloutEngine:
         if self.cfg.fleet and jax.process_count() > 1:
             per = self.cfg.n_envs // jax.process_count()
             lo = jax.process_index() * per
-            traj = Trajectory(*(np.asarray(a)[lo:lo + per] for a in traj))
+            traj = Trajectory(*(None if a is None
+                                else np.asarray(a)[lo:lo + per]
+                                for a in traj))
         self.sink.write(episode, traj)
 
     # -- PPO update (donation-aware, shared by sync + async loops) -----------
@@ -707,7 +743,8 @@ class RolloutEngine:
         for ep in range(start, start + episodes):
             key, kr, ku = jax.random.split(key, 3)
             del kr                      # run_sync's collect subkey, burned
-            traj = Trajectory(*(jnp.asarray(a) for a in reader.read(ep)))
+            traj = Trajectory(*(None if a is None else jnp.asarray(a)
+                                for a in reader.read(ep)))
             batch = self.postprocess(params, traj)
             if on_batch is not None:
                 batch = on_batch(batch)

@@ -1,13 +1,31 @@
 """Actor-critic networks.  The paper's policy: 2x512 tanh MLP (Rabault et al.),
-Gaussian head with state-independent log-std; separate value MLP."""
+Gaussian head with state-independent log-std; separate value MLP.
+
+``policy="attention"`` swaps the fixed-width probe MLP for a
+permutation-invariant set encoder over ``(coord, value)`` probe tokens: each
+probe becomes a 3-vector ``[x, y, p]``, a small pre-LN transformer encoder
+(``models.attention.gqa_attend``, bidirectional) mixes the set, and a masked
+mean-pool feeds the actor/critic heads.  Padded probe slots are zeroed at the
+token level AND masked out of the attention keys and the pool, so the output
+is exactly invariant to garbage in masked slots — the property that lets one
+policy serve scenarios with different sensor sets.
+
+Every entry point takes an optional ``aux`` dict (``{"xy": (..., P, 2),
+"mask": (..., P)}``, see ``CylinderEnv.obs_aux``).  ``aux=None`` reproduces
+the historical MLP program bit-for-bit (the branch is Python-level, so the
+traced computation is unchanged)."""
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
+from repro.models.attention import gqa_attend
 from repro.models.layers import dense_init
+
+POLICIES = ("mlp", "attention")
 
 
 class PolicyConfig(NamedTuple):
@@ -16,6 +34,12 @@ class PolicyConfig(NamedTuple):
     hidden: int = 512
     depth: int = 2
     init_log_std: float = -0.5
+    # -- attention-policy options (ignored by the MLP) ----------------------
+    policy: str = "mlp"           # "mlp" | "attention"
+    d_model: int = 64
+    heads: int = 4
+    kv_heads: int = 2
+    layers: int = 2
 
 
 def _mlp_init(key, sizes):
@@ -36,7 +60,12 @@ def _mlp_apply(params, x, final_linear=True):
 
 
 def init_actor_critic(cfg: PolicyConfig, key):
+    if cfg.policy not in POLICIES:
+        raise ValueError(f"unknown policy {cfg.policy!r}; "
+                         f"choose from {POLICIES}")
     ka, kc = jax.random.split(key)
+    if cfg.policy == "attention":
+        return _attn_init(cfg, ka, kc)
     sizes = [cfg.obs_dim] + [cfg.hidden] * cfg.depth
     return {
         "actor": _mlp_init(ka, sizes + [cfg.act_dim]),
@@ -45,19 +74,141 @@ def init_actor_critic(cfg: PolicyConfig, key):
     }
 
 
-def policy_dist(params, obs) -> Tuple[jnp.ndarray, jnp.ndarray]:
+# ---------------------------------------------------------------------------
+# permutation-invariant attention encoder (policy="attention")
+# ---------------------------------------------------------------------------
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _layernorm(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def _attn_init(cfg: PolicyConfig, ka, kc):
+    d, dh = cfg.d_model, cfg.d_model // cfg.heads
+    if dh * cfg.heads != cfg.d_model or cfg.heads % cfg.kv_heads:
+        raise ValueError(f"d_model={cfg.d_model} must split into heads="
+                         f"{cfg.heads}, and heads must be a multiple of "
+                         f"kv_heads={cfg.kv_heads}")
+    ke = jax.random.fold_in(ka, 1000)
+    blocks = []
+    for i in range(cfg.layers):
+        k = jax.random.fold_in(ke, i)
+        kq, kk, kv, ko, k1, k2 = jax.random.split(k, 6)
+        # q/k/v weights keep the (d, heads, head_dim) factorization in their
+        # shape, so the forward pass needs no head-count side channel
+        blocks.append({
+            "ln1": _ln_init(d),
+            "wq": dense_init(kq, (d, cfg.heads * dh), jnp.float32
+                             ).reshape(d, cfg.heads, dh),
+            "wk": dense_init(kk, (d, cfg.kv_heads * dh), jnp.float32
+                             ).reshape(d, cfg.kv_heads, dh),
+            "wv": dense_init(kv, (d, cfg.kv_heads * dh), jnp.float32
+                             ).reshape(d, cfg.kv_heads, dh),
+            "wo": dense_init(ko, (cfg.heads * dh, d), jnp.float32),
+            "ln2": _ln_init(d),
+            "mlp": [{"w": dense_init(k1, (d, 4 * d), jnp.float32),
+                     "b": jnp.zeros((4 * d,), jnp.float32)},
+                    {"w": dense_init(k2, (4 * d, d), jnp.float32),
+                     "b": jnp.zeros((d,), jnp.float32)}],
+        })
+    return {
+        # token = [x, y, p]; the "embed" key doubles as the dispatch marker
+        "embed": {"w": dense_init(jax.random.fold_in(ke, 999), (3, d),
+                                  jnp.float32),
+                  "b": jnp.zeros((d,), jnp.float32)},
+        "blocks": blocks,
+        "ln_f": _ln_init(d),
+        "actor": _mlp_init(ka, [d, d, cfg.act_dim]),
+        "critic": _mlp_init(kc, [d, d, 1]),
+        "log_std": jnp.full((cfg.act_dim,), cfg.init_log_std, jnp.float32),
+    }
+
+
+def is_attention(params) -> bool:
+    """Param-tree dispatch: attention policies carry the token embedding."""
+    return "embed" in params
+
+
+def _encode(params, obs, aux):
+    """Set encoder: (..., P) probe values -> (..., d_model) pooled features.
+
+    Permutation-invariant and exactly invariant to masked slots: tokens are
+    zeroed pre-embed, padded keys are masked out of every attend, and the
+    pool averages over live tokens only.
+    """
+    # the kernel-selection convention (repro.core.backend) is resolved for
+    # its env-var/deprecation handling, but the encoder attend is
+    # bidirectional and the Pallas flash kernel is causal-only, so every
+    # backend lowers to the dense gqa_attend
+    backend_mod.resolve_backend(None, None, what="attention policy")
+    lead = obs.shape[:-1]
+    P = obs.shape[-1]
+    obs = obs.astype(jnp.float32)
+    if aux is not None:
+        mask = jnp.broadcast_to(jnp.asarray(aux["mask"], obs.dtype),
+                                obs.shape)
+        xy = jnp.broadcast_to(jnp.asarray(aux["xy"], obs.dtype),
+                              obs.shape + (2,))
+    else:
+        mask = jnp.ones_like(obs)
+        xy = jnp.zeros(obs.shape + (2,), obs.dtype)
+    tokens = jnp.concatenate([xy, obs[..., None]], axis=-1)
+    tokens = tokens * mask[..., None]                 # garbage-proof padding
+    B = 1
+    for s in lead:
+        B *= s
+    h = (tokens.reshape(B, P, 3) @ params["embed"]["w"]
+         + params["embed"]["b"])
+    kmask = mask.reshape(B, 1, P) > 0                 # key-padding mask
+    for blk in params["blocks"]:
+        x = _layernorm(h, blk["ln1"])
+        q = jnp.einsum("bpd,dhk->bphk", x, blk["wq"])
+        k = jnp.einsum("bpd,dhk->bphk", x, blk["wk"])
+        v = jnp.einsum("bpd,dhk->bphk", x, blk["wv"])
+        att = gqa_attend(q, k, v, kmask)
+        h = h + att.reshape(B, P, -1) @ blk["wo"]
+        x = _layernorm(h, blk["ln2"])
+        h = h + jnp.tanh(x @ blk["mlp"][0]["w"] + blk["mlp"][0]["b"]
+                         ) @ blk["mlp"][1]["w"] + blk["mlp"][1]["b"]
+    h = _layernorm(h, params["ln_f"])
+    m = mask.reshape(B, P, 1)
+    pooled = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled.reshape(lead + (h.shape[-1],))
+
+
+def _features(params, obs, aux):
+    """Policy input features: raw (masked) probes for the MLP, pooled set
+    encoding for the attention policy.  ``aux=None`` on the MLP path keeps
+    the historical traced program unchanged (the branch is Python-level)."""
+    if is_attention(params):
+        return _encode(params, obs, aux)
+    if aux is not None:
+        # satellite fix: zero masked slots explicitly so the MLP cannot
+        # read garbage from padded probe entries
+        obs = obs * jnp.asarray(aux["mask"], obs.dtype)
+    return obs
+
+
+def policy_dist(params, obs, aux=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """-> (mean (..., act_dim), log_std (act_dim,)); mean squashed to [-1,1]."""
-    mean = jnp.tanh(_mlp_apply(params["actor"], obs))
+    x = _features(params, obs, aux)
+    mean = jnp.tanh(_mlp_apply(params["actor"], x))
     return mean, params["log_std"]
 
 
-def value(params, obs) -> jnp.ndarray:
-    return _mlp_apply(params["critic"], obs)[..., 0]
+def value(params, obs, aux=None) -> jnp.ndarray:
+    return _mlp_apply(params["critic"], _features(params, obs, aux))[..., 0]
 
 
-def sample_action(params, obs, key):
+def sample_action(params, obs, key, aux=None):
     """-> (action, log_prob)."""
-    mean, log_std = policy_dist(params, obs)
+    mean, log_std = policy_dist(params, obs, aux)
     std = jnp.exp(log_std)
     eps = jax.random.normal(key, mean.shape)
     act = mean + std * eps
@@ -72,8 +223,8 @@ def _gauss_logp(act, mean, log_std):
     return jnp.sum(lp, axis=-1)
 
 
-def log_prob(params, obs, act):
-    mean, log_std = policy_dist(params, obs)
+def log_prob(params, obs, act, aux=None):
+    mean, log_std = policy_dist(params, obs, aux)
     return _gauss_logp(act, mean, log_std)
 
 

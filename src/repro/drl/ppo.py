@@ -27,11 +27,17 @@ class PPOConfig:
 
 
 class Batch(NamedTuple):
+    """The trailing probe-aux fields default to None (absent) so 5-field
+    constructions — and pytrees serialized before the attention policy —
+    keep their structure; when present they are per-sample rows that shuffle
+    and slice with the rest of the batch."""
     obs: jnp.ndarray        # (N, obs_dim)
     act: jnp.ndarray        # (N, act_dim)
     logp_old: jnp.ndarray   # (N,)
     adv: jnp.ndarray        # (N,)
     ret: jnp.ndarray        # (N,)
+    probe_xy: jnp.ndarray = None    # (N, obs_dim, 2)
+    probe_mask: jnp.ndarray = None  # (N, obs_dim)
 
 
 def make_optimizer(cfg: PPOConfig):
@@ -39,7 +45,9 @@ def make_optimizer(cfg: PPOConfig):
 
 
 def ppo_loss(cfg: PPOConfig, params, batch: Batch):
-    logp = networks.log_prob(params, batch.obs, batch.act)
+    aux = (None if batch.probe_mask is None
+           else {"xy": batch.probe_xy, "mask": batch.probe_mask})
+    logp = networks.log_prob(params, batch.obs, batch.act, aux)
     ratio = jnp.exp(logp - batch.logp_old)                  # r_t(theta)
     adv = batch.adv
     if cfg.normalize_adv:
@@ -47,7 +55,7 @@ def ppo_loss(cfg: PPOConfig, params, batch: Batch):
     unclipped = ratio * adv
     clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
     policy_loss = -jnp.mean(jnp.minimum(unclipped, clipped))  # eq. (10)
-    v = networks.value(params, batch.obs)
+    v = networks.value(params, batch.obs, aux)
     value_loss = 0.5 * jnp.mean((v - batch.ret) ** 2)
     ent = networks.entropy(params)
     loss = (policy_loss + cfg.value_coef * value_loss

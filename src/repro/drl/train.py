@@ -51,6 +51,10 @@ class TrainConfig:
     # scenario names (repro.cfd.scenarios) assigned round-robin over the env
     # batch; None = the single case described by ``env`` (historical default)
     scenarios: Optional[Tuple[str, ...]] = None
+    # policy architecture: "mlp" (the paper's 2x512 tanh MLP, historical
+    # default) | "attention" (permutation-invariant set encoder over
+    # (coord, value) probe tokens — serves mixed/variable sensor sets)
+    policy: str = "mlp"
     # hybrid placement: None (single-host vmap, historical default),
     # "auto" (measure this host and optimize via core.autotune), a
     # core.plan.ParallelPlan / (n_envs, n_ranks) pair, or a ResolvedPlan.
@@ -137,7 +141,24 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
     else:
         st0, obs0 = env.reset()       # warms up + calibrates CD0
         st_b, obs_b = broadcast_env_state(st0, obs0, n_envs)
-    pcfg = networks.PolicyConfig(obs_dim=int(obs_b.shape[-1]))
+
+    # the policy's obs_dim is DERIVED from the resolved batch, never assumed:
+    # the PolicyConfig default (149) silently drifts from mixed-scenario
+    # padding otherwise, surfacing as an opaque shape error inside jit
+    obs_dim = int(obs_b.shape[-1])
+    if cfg.scenarios and ts is None:
+        from repro.cfd import scenarios as scn_mod
+        expect = scn_mod.common_obs_dim(cfg.scenarios)
+        if expect != obs_dim:
+            raise ValueError(
+                f"observation width mismatch: scenarios "
+                f"{tuple(cfg.scenarios)} pad to common_obs_dim={expect} but "
+                f"the reset batch produced obs_dim={obs_dim}; the env reset "
+                f"and the policy must agree on one padded width")
+    jv = st_b.jet_vel if ts is None else jnp.asarray(st_b.jet_vel)
+    act_dim = int(jv.shape[-1]) if jv.ndim > 1 else 1
+    pcfg = networks.PolicyConfig(obs_dim=obs_dim, act_dim=act_dim,
+                                 policy=cfg.policy)
 
     engine = RolloutEngine.for_env(
         env, EngineConfig(n_envs=n_envs,
@@ -153,7 +174,9 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         steps_per_action=cfg.env.steps_per_action, scenarios=cfg.scenarios,
         plan={"n_envs": resolved.n_envs, "n_ranks": resolved.n_ranks,
               "backend": resolved.backend,
-              "n_processes": jax.process_count()} if resolved else None)
+              "n_processes": jax.process_count()} if resolved else None,
+        policy={"policy": cfg.policy, "obs_dim": pcfg.obs_dim,
+                "act_dim": pcfg.act_dim})
     if engine.sink is not None:
         # durable datasets record which run (and which code) produced them
         engine.sink.annotate(**run_meta)

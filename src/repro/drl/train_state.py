@@ -41,9 +41,11 @@ TRAIN_STATE_SCHEMA = "repro.train_state/v1"
 HISTORY_FIELDS = ("reward", "cd", "cl", "wall")
 
 # metadata fields that must match bit-for-bit between checkpoint and config;
-# "plan" is deliberately absent (cross-plan resume re-shards the env batch)
+# "plan" is deliberately absent (cross-plan resume re-shards the env batch).
+# "policy" (architecture fingerprint) is strict but graced for checkpoints
+# written before it existed — see check_resume_compatible.
 RESUME_STRICT_FIELDS = ("n_envs", "obs_dim", "grid", "horizon",
-                        "steps_per_action", "scenarios")
+                        "steps_per_action", "scenarios", "policy")
 
 
 class TrainState(NamedTuple):
@@ -85,7 +87,11 @@ def to_tree(ts: TrainState) -> Dict[str, Any]:
                 "flow": dict(st.flow._asdict()),
                 "jet_vel": st.jet_vel,
                 "t": st.t,
-                "scn": dict(st.scn._asdict()),
+                # None-valued trailing fields (pre-pinball scenarios) are
+                # dropped: the manifest stores arrays only, and the
+                # NamedTuple defaults restore them as None on load
+                "scn": {k: v for k, v in st.scn._asdict().items()
+                        if v is not None},
             }
         else:
             # engine-level loops (toy envs, tests) carry arbitrary pytrees
@@ -238,11 +244,14 @@ def code_fingerprint() -> Dict[str, Any]:
 def run_metadata(*, n_envs: int, obs_dim: int, seed: int, grid,
                  horizon: int, steps_per_action: int,
                  scenarios: Optional[Tuple[str, ...]],
-                 plan: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+                 plan: Optional[Dict[str, Any]],
+                 policy: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """The run fingerprint stored beside every checkpoint: everything that
     must match for a bitwise resume (strict fields) plus the plan actually
     executed and the code fingerprint (informational — resume and offline
-    replay may change both)."""
+    replay may change both).  ``policy`` is the architecture fingerprint
+    ({"policy", "obs_dim", "act_dim"}): params saved by an MLP run cannot
+    restore into an attention run, so it resumes strictly."""
     return {
         "n_envs": int(n_envs),
         "obs_dim": int(obs_dim),
@@ -254,6 +263,7 @@ def run_metadata(*, n_envs: int, obs_dim: int, seed: int, grid,
         "scenarios": list(scenarios) if scenarios else None,
         "plan": plan or {"n_envs": int(n_envs), "n_ranks": 1,
                          "backend": "single-host"},
+        "policy": policy or {"policy": "mlp"},
         "code": code_fingerprint(),
     }
 
@@ -264,7 +274,16 @@ def check_resume_compatible(meta: Dict[str, Any], current: Dict[str, Any]
     a checkpoint's metadata and the current run's fingerprint; returns
     human-readable notes for allowed differences (plan / seed)."""
     errs = []
+    notes_grace = []
     for f in RESUME_STRICT_FIELDS:
+        if f == "policy" and f not in meta:
+            # checkpoints predating the policy fingerprint: those runs could
+            # only have been MLP, so restoring is safe iff the current run is
+            # too — which the params-tree structure check catches anyway
+            notes_grace.append(
+                "checkpoint predates the policy fingerprint; assuming the "
+                "historical MLP architecture")
+            continue
         if meta.get(f) != current.get(f):
             errs.append(f"{f}: checkpoint={meta.get(f)!r} "
                         f"current={current.get(f)!r}")
@@ -273,7 +292,7 @@ def check_resume_compatible(meta: Dict[str, Any], current: Dict[str, Any]
             "checkpoint is incompatible with the current TrainConfig "
             "(these change the physics or batch layout, so resuming would "
             "not continue the same run):\n  " + "\n  ".join(errs))
-    notes = []
+    notes = list(notes_grace)
     if meta.get("plan") != current.get("plan"):
         notes.append(f"cross-plan resume: checkpoint ran {meta.get('plan')}, "
                      f"resuming onto {current.get('plan')} (env batch "

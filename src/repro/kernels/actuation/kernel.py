@@ -64,6 +64,11 @@ def fused_step(cfg: GridConfig, ga, u, v, red, black, jet_vel, re, act_mode,
     operands so the whole dt is a single launch."""
     f32 = jnp.float32
     scalar = lambda x: jnp.reshape(jnp.asarray(x, f32), (1, 1))
+    # the megakernel serves the scalar-actuation path only (step_interval
+    # falls back to the reference backend for per-body vector jets), so the
+    # per-body rotation targets / ownership masks never ride as kernel refs
+    ga = ga._replace(rotb_u=None, rotb_v=None, own_u=None, own_v=None)
+    geom = [g for g in ga if g is not None]
     kern = functools.partial(_fused_dt_kernel, cfg=cfg)
     out_shape = [
         jax.ShapeDtypeStruct(u.shape, u.dtype),
@@ -74,7 +79,7 @@ def fused_step(cfg: GridConfig, ga, u, v, red, black, jet_vel, re, act_mode,
         jax.ShapeDtypeStruct((1, 1), f32),
     ]
     outs = pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)(
-        u, v, red, black, *ga,
+        u, v, red, black, *geom,
         scalar(jet_vel), scalar(re), scalar(act_mode))
     u2, v2, red2, black2, cd, cl = outs
     return u2, v2, red2, black2, cd[0, 0], cl[0, 0]

@@ -1,4 +1,12 @@
 import os
+import sys
+from pathlib import Path
+
+# src layout without an editable install: bare ``python -m pytest`` must
+# still find the ``repro`` package, with or without PYTHONPATH=src.
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 # Tests must see 1 CPU device (the 512-device override is dryrun-only).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,199 @@
+"""Permutation-invariant attention policy + probe-mask threading.
+
+Covers the PR-9 bug cluster: policies must consume the probe mask (padded
+slots in a mixed batch carry NO information and must not leak garbage into
+actions), the attention encoder must be a genuine set function over the
+live probe tokens, and the policy architecture must resume strictly
+(MLP params cannot silently restore into an attention run).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.drl import networks
+from repro.drl import train_state as ts_mod
+from repro.drl.ppo import PPOConfig
+from repro.drl.train import TrainConfig, train
+
+GRID = GridConfig(res=3, dt=0.02, poisson_iters=12)
+
+
+def _aux(key, P, live):
+    xy = jax.random.uniform(key, (P, 2), minval=-1.0, maxval=1.0)
+    mask = jnp.concatenate([jnp.ones(live), jnp.zeros(P - live)])
+    return {"xy": xy, "mask": mask}
+
+
+def _params(policy, obs_dim=16, act_dim=3):
+    cfg = networks.PolicyConfig(obs_dim=obs_dim, act_dim=act_dim,
+                                policy=policy, d_model=32, heads=4,
+                                kv_heads=2, layers=2)
+    return networks.init_actor_critic(cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# masked-slot invariance (the garbage-leak bug)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", networks.POLICIES)
+def test_masked_slots_cannot_leak(policy):
+    """Filling PADDED observation slots with garbage must not change the
+    policy distribution, the value, or sampled actions — for both
+    architectures (pre-fix, the MLP read padded slots as real signal)."""
+    P, live = 16, 10
+    params = _params(policy)
+    aux = _aux(jax.random.PRNGKey(1), P, live)
+    obs = jax.random.normal(jax.random.PRNGKey(2), (P,))
+    obs = obs * aux["mask"]                       # honest padded zeros
+    garbage = obs + (1.0 - aux["mask"]) * 1e3     # poison the dead slots
+
+    mu0, std0 = networks.policy_dist(params, obs, aux)
+    mu1, std1 = networks.policy_dist(params, garbage, aux)
+    np.testing.assert_array_equal(np.asarray(mu0), np.asarray(mu1))
+    np.testing.assert_array_equal(np.asarray(std0), np.asarray(std1))
+    v0 = networks.value(params, obs, aux)
+    v1 = networks.value(params, garbage, aux)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    a0, lp0 = networks.sample_action(params, obs, jax.random.PRNGKey(3),
+                                     aux=aux)
+    a1, lp1 = networks.sample_action(params, garbage, jax.random.PRNGKey(3),
+                                     aux=aux)
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(lp0), np.asarray(lp1))
+
+
+def test_mlp_without_aux_is_the_historical_program():
+    """aux=None keeps the MLP feature path byte-for-byte: no mask multiply
+    enters the trace, so pre-PR params/behavior are untouched."""
+    params = _params("mlp")
+    obs = jax.random.normal(jax.random.PRNGKey(2), (16,))
+    mu_none, _ = networks.policy_dist(params, obs, None)
+    live_aux = {"xy": jnp.zeros((16, 2)), "mask": jnp.ones(16)}
+    mu_live, _ = networks.policy_dist(params, obs, live_aux)
+    # all-live mask multiplies by exactly 1.0 -> IEEE-identical
+    np.testing.assert_array_equal(np.asarray(mu_none), np.asarray(mu_live))
+
+
+# ---------------------------------------------------------------------------
+# set-function structure of the attention encoder
+# ---------------------------------------------------------------------------
+
+def test_attention_is_permutation_invariant():
+    """Shuffling the live probe tokens (coords + values together) must not
+    change the policy output: the encoder pools over an unordered set."""
+    P, live = 16, 10
+    params = _params("attention")
+    aux = _aux(jax.random.PRNGKey(1), P, live)
+    obs = jax.random.normal(jax.random.PRNGKey(2), (P,)) * aux["mask"]
+
+    perm = np.concatenate([np.random.RandomState(0).permutation(live),
+                           np.arange(live, P)])
+    aux_p = {"xy": aux["xy"][perm], "mask": aux["mask"][perm]}
+    obs_p = obs[perm]
+
+    mu0, _ = networks.policy_dist(params, obs, aux)
+    mu1, _ = networks.policy_dist(params, obs_p, aux_p)
+    np.testing.assert_allclose(np.asarray(mu0), np.asarray(mu1),
+                               rtol=0, atol=1e-5)
+    v0 = networks.value(params, obs, aux)
+    v1 = networks.value(params, obs_p, aux_p)
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1),
+                               rtol=0, atol=1e-5)
+
+
+def test_attention_handles_batched_leading_dims():
+    """(N, T, P) observations with broadcast aux — the engine's
+    postprocess shape — evaluate without reshaping at the call site."""
+    N, T, P = 2, 3, 12
+    params = _params("attention", obs_dim=P)
+    aux1 = _aux(jax.random.PRNGKey(1), P, 8)
+    obs = jax.random.normal(jax.random.PRNGKey(2), (N, T, P))
+    aux = {"xy": jnp.broadcast_to(aux1["xy"], (N, T, P, 2)),
+           "mask": jnp.broadcast_to(aux1["mask"], (N, T, P))}
+    v = networks.value(params, obs, aux)
+    assert v.shape == (N, T)
+    assert np.isfinite(np.asarray(v)).all()
+    mu, std = networks.policy_dist(params, obs, aux)
+    assert mu.shape == (N, T, 3)
+    grads = jax.grad(lambda p: jnp.sum(networks.value(p, obs, aux)))(params)
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree.leaves(grads))
+
+
+def test_policy_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        networks.init_actor_critic(
+            networks.PolicyConfig(obs_dim=8, policy="transformer"),
+            jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="d_model"):
+        networks.init_actor_critic(
+            networks.PolicyConfig(obs_dim=8, policy="attention", d_model=30,
+                                  heads=4), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: attention PPO on the pinball + architecture fingerprint
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    return TrainConfig(
+        env=EnvConfig(grid=GRID, steps_per_action=4, actions_per_episode=4,
+                      warmup_time=0.2),
+        ppo=PPOConfig(lr=3e-4, epochs=2, minibatches=2),
+        n_envs=2, episodes=2, seed=0, **kw)
+
+
+def test_attention_ppo_smoke_with_resume(tmp_path):
+    """Attention policy trains on the pinball (finite losses/rewards) and
+    the full TrainState round-trips through a checkpoint resume."""
+    d = str(tmp_path / "ckpt")
+    cfg = _tiny_cfg(scenarios=("pinball_re100",), policy="attention",
+                    ckpt_dir=d, ckpt_every=1)
+    hist, params = train(cfg, log_fn=None)
+    assert np.isfinite(np.asarray(hist["reward"])).all()
+    assert networks.is_attention(params)
+
+    cfg2 = dataclasses.replace(cfg, episodes=3, resume="auto")
+    hist2, params2 = train(cfg2, log_fn=None)
+    assert len(hist2["reward"]) == 3
+    np.testing.assert_array_equal(np.asarray(hist2["reward"][:2]),
+                                  np.asarray(hist["reward"]))
+
+
+def test_policy_fingerprint_resume_strict():
+    meta = {f: 1 for f in ts_mod.RESUME_STRICT_FIELDS}
+    meta["policy"] = {"policy": "mlp", "obs_dim": 59, "act_dim": 3}
+    cur = dict(meta)
+    cur["policy"] = {"policy": "attention", "obs_dim": 59, "act_dim": 3}
+    with pytest.raises(Exception, match="policy"):
+        ts_mod.check_resume_compatible(meta, cur)
+
+
+def test_policy_fingerprint_legacy_grace():
+    """Checkpoints written before the fingerprint existed resume with a
+    note instead of an error (those runs could only have been MLP)."""
+    meta = {f: 1 for f in ts_mod.RESUME_STRICT_FIELDS if f != "policy"}
+    cur = dict(meta)
+    cur["policy"] = {"policy": "mlp"}
+    notes = ts_mod.check_resume_compatible(meta, cur)
+    assert any("policy fingerprint" in n for n in notes)
+
+
+def test_obs_dim_mismatch_is_actionable(monkeypatch):
+    """When the reset batch and the scenario registry disagree on the padded
+    observation width, train() names BOTH values instead of dying with an
+    opaque shape error inside jit (the obs-dim bug)."""
+    orig = CylinderEnv.reset_batch
+
+    def padded(self, scenarios, n_envs, **kw):
+        st, obs = orig(self, scenarios, n_envs, **kw)
+        return st, jnp.pad(obs, ((0, 0), (0, 3)))
+
+    monkeypatch.setattr(CylinderEnv, "reset_batch", padded)
+    with pytest.raises(ValueError, match=r"common_obs_dim=\d+.*obs_dim=\d+"):
+        train(_tiny_cfg(scenarios=("cyl_re100_sparse8",)), log_fn=None)

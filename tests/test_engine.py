@@ -131,6 +131,9 @@ def test_file_sink_roundtrip(tmp_path, codec):
     assert nb > 0 and sink.bytes_written == nb and sink.episodes == 1
     back = sink.read(0)
     for a, b in zip(traj, back):
+        if a is None or b is None:    # aux probe fields: absent both sides
+            assert a is None and b is None
+            continue
         np.testing.assert_allclose(np.asarray(a), b, rtol=1e-6, atol=1e-7)
     with pytest.raises(KeyError):
         sink.read(99)

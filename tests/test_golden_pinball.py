@@ -1,0 +1,97 @@
+"""Golden physics regression for the fluidic pinball (3-cylinder geometry).
+
+Same contract as ``test_golden_physics.py``: the checked-in reference
+(``tests/golden/pinball_re100_res8.npz``, from ``tools/gen_golden.py
+--geometry pinball``) stores the saturated uncontrolled flow state plus
+Strouhal / mean C_D / C_L amplitude of the TOTAL (all-body) forces over a
+fixed window; the test restarts from that state and re-measures.  The
+pinball develops slowly — it passes through an asymmetric deflected state
+(mean C_L ~ -0.25 near t=100) before symmetric shedding saturates around
+t~400 — so the fixture is the expensive part and regeneration takes ~44k
+solver steps.
+
+The full re-measure (2000 steps) is marked ``slow``; a short smoke variant
+pins the mean drag over 200 steps so every CI run still exercises the
+multi-body penalization path against the committed reference.
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cfd import solver
+from repro.cfd.grid import GridConfig
+from repro.cfd.validation import measure_shedding, run_uncontrolled
+
+GOLDEN = Path(__file__).parent / "golden" / "pinball_re100_res8.npz"
+
+# Relative tolerances, mutation-calibrated on the re-measure window (the
+# re-measurement itself is bit-exact on the generating platform):
+#   upwind_blend 0.2->0.25:  CD +1.2%, amp -11.8%      -> TOL_CD / TOL_AMP
+#   upwind_blend 0.2->0.3:   St -1.7%, CD +2.3%        -> TOL_ST / TOL_CD
+#   effective Re off by 10%: CD -1.8%, amp +12.7%      -> TOL_CD / TOL_AMP
+# (penal_eta x2 moves nothing above 0.6% — penalization stiffness is not
+# a physics knob at this resolution)
+TOL_ST = 0.015
+TOL_CD = 0.01
+TOL_AMP = 0.06
+
+
+def _restart():
+    ref = np.load(GOLDEN)
+    cfg = GridConfig(res=int(ref["res"]), dt=float(ref["dt"]),
+                     poisson_iters=int(ref["poisson_iters"]))
+    state = solver.FlowState(u=ref["u"], v=ref["v"], p=ref["p"])
+    return ref, cfg, state
+
+
+@pytest.fixture(scope="module")
+def remeasured():
+    ref, cfg, state = _restart()
+    _, cds, cls = run_uncontrolled(cfg, state, int(ref["meas_steps"]),
+                                   geometry=str(ref["geometry"]))
+    return ref, measure_shedding(cds, cls, cfg.dt), cds, cls
+
+
+@pytest.mark.slow
+def test_pinball_strouhal_number(remeasured):
+    ref, stats, _, _ = remeasured
+    assert stats["strouhal"] == pytest.approx(float(ref["strouhal"]),
+                                              rel=TOL_ST)
+
+
+@pytest.mark.slow
+def test_pinball_mean_drag_coefficient(remeasured):
+    ref, stats, _, _ = remeasured
+    assert stats["cd_mean"] == pytest.approx(float(ref["cd_mean"]),
+                                             rel=TOL_CD)
+
+
+@pytest.mark.slow
+def test_pinball_lift_oscillation_amplitude(remeasured):
+    ref, stats, _, _ = remeasured
+    assert stats["cl_amp"] == pytest.approx(float(ref["cl_amp"]),
+                                            rel=TOL_AMP)
+
+
+@pytest.mark.slow
+def test_pinball_shedding_is_developed(remeasured):
+    """The stored state must hold genuine saturated symmetric shedding, not
+    the transient deflected state the pinball passes through first."""
+    _, stats, cds, cls = remeasured
+    assert stats["n_periods"] >= 3
+    assert np.isfinite(cds).all() and np.isfinite(cls).all()
+    assert abs(float(cls.mean())) < 0.1       # symmetric regime, not deflected
+    assert 15.0 < stats["cd_mean"] < 25.0     # 3 confined bodies, total drag
+    assert 0.25 < stats["strouhal"] < 0.45
+
+
+def test_pinball_golden_smoke():
+    """CI-speed variant: 200 restarted steps must stay finite and hold the
+    stored mean drag within TOL_CD — catches a broken multi-body
+    penalization path without paying the full re-measure window."""
+    ref, cfg, state = _restart()
+    _, cds, cls = run_uncontrolled(cfg, state, 200, geometry="pinball")
+    assert np.isfinite(cds).all() and np.isfinite(cls).all()
+    assert cds.mean() == pytest.approx(float(ref["cd_mean"]), rel=TOL_CD)
+    assert np.abs(cls).max() < 1.0            # no penalization blow-up

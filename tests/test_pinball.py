@@ -1,0 +1,232 @@
+"""Multi-body geometries: fluidic pinball scenarios, per-body actuation,
+and mixed cylinder+pinball batches through one vmapped program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd import scenarios as S
+from repro.cfd import solver
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import (GEOMETRIES, GridConfig, build_geometry,
+                            geometry_index, geometry_names, max_bodies)
+
+GRID = GridConfig(res=5, dt=0.015, poisson_iters=20)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return CylinderEnv(EnvConfig(grid=GRID, steps_per_action=4,
+                                 actions_per_episode=3, warmup_time=1.0))
+
+
+@pytest.fixture(scope="module")
+def pinball_env():
+    cfg = EnvConfig.for_scenario("pinball_re100", grid=GRID,
+                                 steps_per_action=4, actions_per_episode=3,
+                                 warmup_time=1.0)
+    return CylinderEnv(cfg)
+
+
+# ---------------------------------------------------------------------------
+# geometry registry + per-body fields
+# ---------------------------------------------------------------------------
+
+def test_geometry_registry():
+    assert set(geometry_names()) >= {"cylinder", "pinball", "tandem"}
+    assert len(GEOMETRIES["pinball"]) == 3
+    assert len(GEOMETRIES["tandem"]) == 2
+    assert max_bodies() >= 3
+    assert geometry_index("cylinder") != geometry_index("pinball")
+
+
+def test_pinball_geometry_fields():
+    geom = build_geometry(GRID, "pinball")
+    assert geom.n_bodies == 3
+    assert geom.rotb_u.shape[0] == 3
+    # the legacy aggregate rotary target is exactly the per-body sum
+    np.testing.assert_array_equal(geom.rot_u, geom.rotb_u.sum(0))
+    # ownership partitions every solid-adjacent cell to exactly one body
+    own = np.asarray(geom.own_u)
+    assert own.min() >= 0 and own.max() <= 1
+    np.testing.assert_array_equal(own.sum(0)[own.sum(0) > 0],
+                                  np.ones(int((own.sum(0) > 0).sum())))
+
+
+def test_cylinder_geometry_unchanged():
+    """The 1-body path must produce byte-identical arrays to the pre-PR
+    builder (chi via maximum.reduce over one body == that body's chi)."""
+    geom = build_geometry(GRID)
+    assert geom.name == "cylinder" and geom.n_bodies == 1
+    np.testing.assert_array_equal(geom.rot_u, geom.rotb_u[0])
+    assert np.asarray(geom.jmask_u).max() > 0     # jets exist on the cylinder
+
+
+def test_pinball_has_no_jets():
+    geom = build_geometry(GRID, "pinball")
+    assert float(np.asarray(geom.jmask_u).max()) == 0.0
+    assert float(np.asarray(geom.jmask_v).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_pinball_scenarios_registered():
+    s = S.get_scenario("pinball_re100")
+    assert s.geometry == "pinball" and s.actuation == "rotary"
+    assert s.n_bodies == 3 and s.act_dim == 3
+    assert s.obs_dim == 59
+    assert S.get_scenario("pinball_re130").re == 130.0
+    t = S.get_scenario("tandem_re100")
+    assert t.geometry == "tandem" and t.act_dim == 2 and t.obs_dim == 40
+
+
+def test_jets_require_cylinder():
+    with pytest.raises(ValueError, match="jets"):
+        S.Scenario(name="x", actuation="jets", geometry="pinball",
+                   probes="pinball")
+    with pytest.raises(ValueError, match="geometry"):
+        S.Scenario(name="x", geometry="hexagon")
+
+
+def test_batch_params_action_padding():
+    p = S.batch_params(["cyl_re100", "pinball_re100"], GRID)
+    assert p.act_mask.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(p.act_mask),
+                                  [[1, 0, 0], [1, 1, 1]])
+    np.testing.assert_array_equal(np.asarray(p.geom_id),
+                                  [geometry_index("cylinder"),
+                                   geometry_index("pinball")])
+    with pytest.raises(ValueError, match="act_dim"):
+        S.batch_params(["pinball_re100"], GRID, act_dim=2)
+
+
+# ---------------------------------------------------------------------------
+# solver: per-body (vector) actuation
+# ---------------------------------------------------------------------------
+
+def test_vector_action_matches_scalar_on_cylinder():
+    """A length-1 action vector through the per-body branch must reproduce
+    the scalar rotary path to summation-order accuracy."""
+    cfg = GRID
+    geom = build_geometry(cfg)
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(cfg, geom)
+    m = jnp.float32(1.0)
+    st_s, out_s = jax.jit(lambda s: solver.step(
+        cfg, ga, s, jnp.float32(0.7), act_mode=m))(st)
+    st_v, out_v = jax.jit(lambda s: solver.step(
+        cfg, ga, s, jnp.array([0.7], jnp.float32), act_mode=m))(st)
+    np.testing.assert_allclose(np.asarray(st_s.u), np.asarray(st_v.u),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(float(out_s.cd), float(np.sum(out_v.cd)),
+                               rtol=1e-5)
+
+
+def test_per_body_actuation_is_independent():
+    """Spinning different pinball cylinders produces different flows."""
+    cfg = GRID
+    geom = build_geometry(cfg, "pinball")
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(cfg, geom)
+    m = jnp.float32(1.0)
+    step = jax.jit(lambda s, a: solver.step(cfg, ga, s, a, act_mode=m))
+    a_front = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+    a_back = jnp.array([0.0, 1.0, 0.0], jnp.float32)
+    st_f, out_f = step(st, a_front)
+    st_b, out_b = step(st, a_back)
+    assert out_f.cd.shape == (3,)            # per-body forces
+    assert float(jnp.abs(st_f.u - st_b.u).max()) > 1e-6
+    assert not np.allclose(np.asarray(out_f.cd), np.asarray(out_b.cd))
+
+
+def test_fused_backend_falls_back_for_vector_actions():
+    cfg = GRID
+    geom = build_geometry(cfg, "pinball")
+    ga = solver.geom_to_arrays(geom)
+    st = solver.init_state(cfg, geom)
+    with pytest.warns(RuntimeWarning, match="per-body"):
+        solver.step_interval(cfg, ga, st, jnp.array([1.0, 0.0, 0.0],
+                                                    jnp.float32),
+                             n_steps=2, act_mode=jnp.float32(1.0),
+                             backend="fused")
+
+
+# ---------------------------------------------------------------------------
+# env: pinball-native and mixed-geometry batches
+# ---------------------------------------------------------------------------
+
+def test_pinball_env_native(pinball_env):
+    st0, obs0 = pinball_env.reset()
+    assert obs0.shape == (59,)
+    assert st0.jet_vel.shape == (3,)
+    st, out = jax.jit(pinball_env.env_step)(
+        st0, jnp.array([0.5, -0.5, 0.0], jnp.float32))
+    assert np.isfinite(float(out.reward))
+    assert np.isfinite(float(out.cd)) and float(out.cd) > 0
+
+
+def test_mixed_geometry_batch_runs_one_program(env):
+    """Cylinder + pinball envs reset and step as ONE vmapped program."""
+    st_b, obs_b = env.reset_batch(["cyl_re100", "pinball_re100"], 2)
+    assert st_b.jet_vel.shape == (2, 3)       # padded to the widest act_dim
+    assert obs_b.shape == (2, 149)            # padded to the widest layout
+    vstep = jax.jit(jax.vmap(env.env_step))
+    acts = jnp.array([[0.4, 99.0, -99.0],     # garbage in masked slots
+                      [0.4, 0.2, -0.2]], jnp.float32)
+    st_b, out = vstep(st_b, acts)
+    assert np.isfinite(np.asarray(out.reward)).all()
+    # the cylinder env's masked action slots must be inert
+    st_b2, _ = env.reset_batch(["cyl_re100", "pinball_re100"], 2)
+    acts2 = jnp.array([[0.4, 0.0, 0.0], [0.4, 0.2, -0.2]], jnp.float32)
+    _, out2 = vstep(st_b2, acts2)
+    np.testing.assert_array_equal(np.asarray(out.cd[0]),
+                                  np.asarray(out2.cd[0]))
+
+
+def test_mixed_batch_matches_standalone_pinball(env, pinball_env):
+    """The pinball env inside a mixed batch must integrate the same physics
+    as the standalone pinball env: same warmup, same steps, same rewards to
+    summation-order accuracy (the mixed path gathers its geometry from the
+    stacked bank and sums per-body forces, so bitwise equality is NOT the
+    contract — allclose is)."""
+    st_s, obs_s = pinball_env.reset()
+    st_m, obs_m = env.reset_batch(["cyl_re100", "pinball_re100"], 2)
+
+    np.testing.assert_allclose(np.asarray(obs_m[1, :59]), np.asarray(obs_s),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(float(st_m.scn.cd0[1]), float(st_s.scn.cd0),
+                               rtol=1e-5)
+
+    vstep = jax.jit(jax.vmap(env.env_step))
+    sstep = jax.jit(pinball_env.env_step)
+    act = jnp.array([0.6, -0.3, 0.1], jnp.float32)
+    acts_b = jnp.stack([jnp.array([0.2, 0.0, 0.0], jnp.float32), act])
+    for _ in range(3):
+        st_s, out_s = sstep(st_s, act)
+        st_m, out_m = vstep(st_m, acts_b)
+        np.testing.assert_allclose(float(out_m.cd[1]), float(out_s.cd),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(float(out_m.reward[1]),
+                                   float(out_s.reward), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_homogeneous_cylinder_batch_keeps_scalar_actions(env):
+    """A cylinder-only batch must keep the historical scalar jet_vel (the
+    bitwise-stability contract: no vector program unless a multi-body
+    scenario is present)."""
+    st_b, _ = env.reset_batch(["cyl_re100", "cyl_re200"], 2)
+    assert st_b.jet_vel.shape == (2,)
+    assert st_b.scn.geom_id is not None       # ids ride along regardless
+
+
+def test_obs_aux_exposes_probe_layout(env):
+    st_b, obs_b = env.reset_batch(["cyl_re100", "pinball_re100"], 2)
+    aux = env.obs_aux(st_b)
+    assert aux["xy"].shape == (2, 149, 2)
+    assert aux["mask"].shape == (2, 149)
+    np.testing.assert_array_equal(np.asarray(aux["mask"].sum(1)),
+                                  [149.0, 59.0])
+    assert float(jnp.abs(aux["xy"]).max()) <= 1.0

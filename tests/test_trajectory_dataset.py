@@ -66,6 +66,9 @@ def test_dataset_roundtrip(tmp_path):
         back = reader.read(ep)
         assert isinstance(back, Trajectory)
         for a, b in zip(traj, back):
+            if a is None or b is None:    # aux probe fields absent both ways
+                assert a is None and b is None
+                continue
             # the codec stores fp32 — bitwise for already-fp32 trajectories
             np.testing.assert_array_equal(np.asarray(a, np.float32), b)
     assert [t.obs.shape for t in reader] == [(N, T, 3)] * 3

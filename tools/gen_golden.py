@@ -10,7 +10,8 @@ pinning the solver's physics.
 Update procedure (after an INTENTIONAL physics change — see README):
 
     PYTHONPATH=src python tools/gen_golden.py
-    git add tests/golden/cyl_re100_res8.npz
+    PYTHONPATH=src python tools/gen_golden.py --geometry pinball
+    git add tests/golden/*.npz
     # quote old -> new St / C_D / amplitude in the commit message
 """
 import argparse
@@ -19,11 +20,21 @@ from pathlib import Path
 import numpy as np
 
 from repro.cfd import solver
-from repro.cfd.grid import GridConfig, build_geometry
+from repro.cfd.grid import GridConfig, build_geometry, geometry_names
 from repro.cfd.validation import measure_shedding, run_uncontrolled
 
-DEFAULT_OUT = Path(__file__).resolve().parent.parent / "tests" / "golden" \
-    / "cyl_re100_res8.npz"
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
+
+# development time (t.u.) to a saturated limit cycle.  The cylinder locks
+# in by t~60; the pinball first drifts through the asymmetric deflected
+# state (mean C_L ~ -0.25 around t=100) before symmetric shedding saturates
+# near t~400 — measured, not guessed (amp/upcrossings flat from t=380 on)
+DEVELOP_DEFAULTS = {"cylinder": 60.0, "pinball": 440.0, "tandem": 440.0}
+
+
+def default_out(geometry: str, res: int) -> Path:
+    stem = "cyl" if geometry == "cylinder" else geometry
+    return GOLDEN_DIR / f"{stem}_re100_res{res}.npz"
 
 
 def main() -> None:
@@ -31,38 +42,49 @@ def main() -> None:
     ap.add_argument("--res", type=int, default=8)
     ap.add_argument("--dt", type=float, default=0.01)
     ap.add_argument("--poisson-iters", type=int, default=60)
-    ap.add_argument("--develop", type=float, default=60.0,
-                    help="t.u. of uncontrolled flow before the window")
+    ap.add_argument("--geometry", default="cylinder",
+                    choices=list(geometry_names()),
+                    help="obstacle set to pin (grid.GEOMETRIES); the "
+                         "fixture stores total forces over all bodies")
+    ap.add_argument("--develop", type=float, default=None,
+                    help="t.u. of uncontrolled flow before the window "
+                         "(default: per-geometry saturation time, "
+                         f"{DEVELOP_DEFAULTS})")
     ap.add_argument("--measure", type=float, default=10.0,
                     help="t.u. of the measurement window (stored in the npz)")
-    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--out", type=Path, default=None)
     args = ap.parse_args()
+    out = args.out or default_out(args.geometry, args.res)
+    develop = args.develop if args.develop is not None \
+        else DEVELOP_DEFAULTS[args.geometry]
 
     cfg = GridConfig(res=args.res, dt=args.dt,
                      poisson_iters=args.poisson_iters)
-    geom = build_geometry(cfg)
+    geom = build_geometry(cfg, args.geometry)
     state = solver.init_state(cfg, geom)
 
-    n_dev = int(round(args.develop / cfg.dt))
-    print(f"developing shedding: {n_dev} steps ...")
-    state, cds, cls = run_uncontrolled(cfg, state, n_dev)
+    n_dev = int(round(develop / cfg.dt))
+    print(f"developing shedding ({args.geometry}): {n_dev} steps ...")
+    state, cds, cls = run_uncontrolled(cfg, state, n_dev,
+                                       geometry=args.geometry)
     print(f"  tail CD={cds[-500:].mean():.4f}  "
           f"CL range=({cls[-500:].min():+.3f}, {cls[-500:].max():+.3f})")
 
     n_meas = int(round(args.measure / cfg.dt))
-    _, cds, cls = run_uncontrolled(cfg, state, n_meas)
+    _, cds, cls = run_uncontrolled(cfg, state, n_meas,
+                                   geometry=args.geometry)
     stats = measure_shedding(cds, cls, cfg.dt)
     print(f"  St={stats['strouhal']:.4f}  CD={stats['cd_mean']:.4f}  "
           f"CL_amp={stats['cl_amp']:.4f}  ({stats['n_periods']:.0f} periods)")
 
-    args.out.parent.mkdir(parents=True, exist_ok=True)
+    out.parent.mkdir(parents=True, exist_ok=True)
     np.savez_compressed(
-        args.out,
+        out,
         u=np.asarray(state.u), v=np.asarray(state.v), p=np.asarray(state.p),
         res=args.res, dt=args.dt, poisson_iters=args.poisson_iters,
-        meas_steps=n_meas, **stats)
-    print(f"golden reference -> {args.out} "
-          f"({args.out.stat().st_size / 1024:.0f} KiB)")
+        geometry=args.geometry, meas_steps=n_meas, **stats)
+    print(f"golden reference -> {out} "
+          f"({out.stat().st_size / 1024:.0f} KiB)")
 
 
 if __name__ == "__main__":

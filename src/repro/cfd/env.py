@@ -28,6 +28,7 @@ from repro.cfd import scenarios as scn_mod
 from repro.cfd import solver
 from repro.cfd.grid import GridConfig, build_geometry
 from repro.cfd.scenarios import Scenario, ScenarioParams
+from repro.testing import faults
 
 
 @dataclass(frozen=True)
@@ -53,6 +54,9 @@ class EnvConfig:
     probe_layout: str = "ring149"
     actuation: str = "jets"
     geometry: str = "cylinder"    # immersed-body set (repro.cfd.grid)
+    guard: bool = True            # divergence sentinel + per-env quarantine
+    guard_vel_limit: float = 50.0   # |u|,|v| ceiling (U_m is O(1))
+    guard_div_limit: float = 1e3    # max |div(u,v)| ceiling post-projection
 
     @property
     def obs_dim(self) -> int:
@@ -84,11 +88,17 @@ class EnvConfig:
 
 
 class EnvState(NamedTuple):
+    """The trailing ``reset_flow`` field defaults to None (absent): jax.tree
+    treats None as an empty subtree, so 4-field states — and every program
+    traced before the divergence sentinel existed — keep their structure.
+    When present it carries the scenario's cached warmup flow so a diverged
+    env can be quarantined (re-initialized) inside the vmapped program."""
     flow: solver.FlowState
     jet_vel: jnp.ndarray          # smoothed actuation amplitude — scalar, or
     #                               (A,) per-body surface speeds (multi-body)
     t: jnp.ndarray                # actuation counter
     scn: ScenarioParams           # traced per-env scenario parameters
+    reset_flow: solver.FlowState = None   # warmup flow for quarantine resets
 
 
 class EnvOutput(NamedTuple):
@@ -96,6 +106,7 @@ class EnvOutput(NamedTuple):
     reward: jnp.ndarray
     cd: jnp.ndarray               # mean C_D over the actuation period
     cl: jnp.ndarray
+    valid: jnp.ndarray = None     # 1.0 healthy / 0.0 quarantined (sentinel)
 
 
 class CylinderEnv:
@@ -220,8 +231,10 @@ class CylinderEnv:
                                          cd0=self.cfg.cd0)
         jet0 = (jnp.float32(0.0) if scn.act_dim == 1
                 else jnp.zeros(scn.act_dim, jnp.float32))
-        st = EnvState(flow=solver.FlowState(*flow), jet_vel=jet0,
-                      t=jnp.int32(0), scn=params)
+        flow0 = solver.FlowState(*flow)
+        st = EnvState(flow=flow0, jet_vel=jet0,
+                      t=jnp.int32(0), scn=params,
+                      reset_flow=flow0 if self.cfg.guard else None)
         return st, self._observe(st)
 
     def reset_batch(self, scenarios: Sequence, n_envs: Optional[int] = None,
@@ -264,9 +277,11 @@ class CylinderEnv:
         a_dim = (scn_mod.common_act_dim(scns) if act_dim is None else act_dim)
         jet0 = (jnp.zeros(len(scns), jnp.float32) if a_dim == 1
                 else jnp.zeros((len(scns), a_dim), jnp.float32))
-        st_b = EnvState(flow=solver.FlowState(*flow_b),
+        flow0_b = solver.FlowState(*flow_b)
+        st_b = EnvState(flow=flow0_b,
                         jet_vel=jet0,
-                        t=jnp.zeros(len(scns), jnp.int32), scn=params_b)
+                        t=jnp.zeros(len(scns), jnp.int32), scn=params_b,
+                        reset_flow=flow0_b if cfg.guard else None)
         obs_b = jax.vmap(self._observe)(st_b)
         return st_b, obs_b
 
@@ -329,11 +344,20 @@ class CylinderEnv:
         jet = st.jet_vel + cfg.beta * (a - st.jet_vel)        # eq. (11)
         jet = jnp.clip(jet, -cfg.action_max, cfg.action_max)
 
+        flow_in = st.flow
+        fz = faults.active("nan_env")
+        if fz is not None:       # trace-time gate: absent in production traces
+            idx = jax.lax.axis_index("env")
+            hit = ((idx == int(fz.get("env", 0)))
+                   & (st.t == int(fz.get("step", 0))))
+            poison = jnp.where(hit, jnp.float32(jnp.nan), jnp.float32(0.0))
+            flow_in = flow_in._replace(u=flow_in.u + poison)
+
         # the whole actuation interval runs as one unit: backend="fused"
         # carries the fields (and packed pressure planes) across every dt
         # with no per-dt round-trips; other backends scan solver.step
         flow, outs = solver.step_interval(cfg.grid, self._env_geom(st.scn),
-                                          st.flow, jet,
+                                          flow_in, jet,
                                           cfg.steps_per_action,
                                           re=st.scn.re,
                                           act_mode=st.scn.act_mode,
@@ -353,6 +377,36 @@ class CylinderEnv:
             cl = jnp.mean(outs.cl)
             cl_pen = jnp.abs(cl)
         reward = st.scn.cd0 - cd - cfg.reward_omega * cl_pen   # eq. (12)
-        st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1, scn=st.scn)
-        return st2, EnvOutput(obs=self._observe(st2), reward=reward,
-                              cd=cd, cl=cl)
+        if st.reset_flow is None:     # sentinel off: the pre-guard program
+            st2 = EnvState(flow=flow, jet_vel=jet, t=st.t + 1, scn=st.scn)
+            return st2, EnvOutput(obs=self._observe(st2), reward=reward,
+                                  cd=cd, cl=cl)
+
+        # -- divergence sentinel: quarantine a blown-up env in-place --------
+        # ``jnp.where(True, a, b)`` passes ``a`` through exactly, so an
+        # all-healthy batch stays bitwise-identical to the unguarded program.
+        ok = self._healthy(flow, reward)
+        sel = lambda h, q: jnp.where(ok, h, q)                  # noqa: E731
+        st2 = EnvState(flow=jax.tree.map(sel, flow, st.reset_flow),
+                       jet_vel=sel(jet, jnp.zeros_like(jet)),
+                       t=st.t + 1, scn=st.scn, reset_flow=st.reset_flow)
+        zero = jnp.float32(0.0)
+        return st2, EnvOutput(obs=self._observe(st2),
+                              reward=sel(reward, zero),
+                              cd=sel(cd, zero), cl=sel(cl, zero),
+                              valid=ok.astype(jnp.float32))
+
+    def _healthy(self, flow: solver.FlowState, reward) -> jnp.ndarray:
+        """Traced per-env health check: finite fields + physical ceilings.
+
+        NaN/Inf fail the ``<`` comparisons, so a single fused reduction per
+        field covers both finiteness and magnitude.  The ceilings are far
+        above any physical value (U_m is O(1)): they flag a diverging solve,
+        not an unusual flow."""
+        cfg = self.cfg
+        vmax = jnp.maximum(jnp.max(jnp.abs(flow.u)), jnp.max(jnp.abs(flow.v)))
+        divmax = jnp.max(jnp.abs(solver.divergence(flow.u, flow.v, cfg.grid)))
+        return ((vmax < cfg.guard_vel_limit)
+                & (divmax < cfg.guard_div_limit)
+                & jnp.isfinite(jnp.max(jnp.abs(flow.p)))
+                & jnp.isfinite(reward))

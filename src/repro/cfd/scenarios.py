@@ -189,10 +189,26 @@ def scenario_params(scn: Scenario, grid: GridConfig, *,
                          f"action width {a}")
     act_mask = np.concatenate([np.ones(a, np.float32),
                                np.zeros(act_dim - a, np.float32)])
-    # no cd0 from either the scenario or the caller -> NaN, so a reward
-    # computed against an uncalibrated baseline fails loudly instead of
-    # silently reading cd0 = 0 (CylinderEnv.reset_batch always calibrates)
-    cd0 = scn.cd0 if scn.cd0 is not None else (np.nan if cd0 is None else cd0)
+    # no cd0 from either the scenario or the caller is a config error, not
+    # a quiet NaN: every downstream reward would be NaN and — under the
+    # divergence sentinel — every step quarantined.  Callers that truly
+    # want the poisoned baseline (the sentinel's own tests) say so with the
+    # explicit cd0="nan" escape hatch.  (CylinderEnv.reset/reset_batch
+    # always pass the calibrated warmup value, so env users never hit this.)
+    if scn.cd0 is not None:
+        cd0 = scn.cd0
+    elif cd0 is None:
+        raise ValueError(
+            f"scenario {scn.name!r} has no cd0 (uncontrolled-drag baseline) "
+            f"and no caller override: rewards would be NaN forever.  Pass "
+            f"cd0=<calibrated value> (CylinderEnv warmup calibrates it), "
+            f"pin one on the Scenario, or pass cd0=\"nan\" explicitly if an "
+            f"uncalibrated baseline is intended")
+    if isinstance(cd0, str):
+        if cd0.lower() != "nan":
+            raise ValueError(f"cd0 must be a float or the literal \"nan\", "
+                             f"got {cd0!r}")
+        cd0 = np.nan
     return ScenarioParams(re=jnp.float32(scn.re),
                           act_mode=jnp.float32(scn.act_mode),
                           cd0=jnp.float32(cd0),

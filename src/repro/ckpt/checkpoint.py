@@ -38,6 +38,7 @@ import msgpack
 import numpy as np
 
 from repro.ckpt.io import atomic_write_text, byte_view, read_exact
+from repro.testing import faults
 
 try:
     import zstandard as zstd
@@ -122,6 +123,10 @@ def save(path: str, tree: Any, *, step: int = 0, compress: bool = True,
             f.write(len(buf).to_bytes(8, "little"))
             f.write(buf)
             n += 8 + len(buf)
+    # fault-injection point (repro.testing.faults, "ckpt_crash"): dying
+    # HERE leaves a complete .tmp but no destination — the torn-write shape
+    # latest_checkpoint's deep validation must skip over
+    faults.maybe_crash_ckpt(step if step is not None else -1, str(path))
     os.replace(tmp, path)
     return n
 

@@ -16,10 +16,40 @@ The durability contract both consumers rely on:
 from __future__ import annotations
 
 import os
+import time
 from pathlib import Path
-from typing import Type
+from typing import Callable, Optional, Type
 
 import numpy as np
+
+
+def retry_io(fn: Callable[[], object], *, path, what: str = "write",
+             attempts: int = 4, backoff: float = 0.05,
+             retry_on=(OSError,),
+             on_retry: Optional[Callable[[int, Exception], None]] = None,
+             sleep: Callable[[float], None] = time.sleep):
+    """Run ``fn`` with bounded retry + exponential backoff on transient I/O.
+
+    Shields the sinks and the trajectory dataset against one-off disk-full /
+    NFS hiccups without papering over persistent failures: after ``attempts``
+    tries the last error is re-raised wrapped in an actionable ``OSError``
+    naming the path and the attempt count.  ``on_retry(attempt, exc)`` is
+    invoked before each re-try so callers can count recoveries."""
+    last: Optional[Exception] = None
+    for attempt in range(1, attempts + 1):
+        try:
+            return fn()
+        except retry_on as e:          # noqa: PERF203 — bounded, cold path
+            last = e
+            if attempt == attempts:
+                break
+            if on_retry is not None:
+                on_retry(attempt, e)
+            sleep(backoff * (2 ** (attempt - 1)))
+    raise OSError(
+        f"{what} to {path} failed after {attempts} attempts "
+        f"(last error: {last}); check disk space / filesystem health "
+        f"before resuming") from last
 
 
 def atomic_write_bytes(path, blob: bytes) -> int:

@@ -33,10 +33,11 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.ckpt.io import atomic_write_text, read_exact
+from repro.ckpt.io import atomic_write_text, read_exact, retry_io
 from repro.core.interface import pack_arrays, unpack_arrays
 from repro.drl.engine import SinkReadError, TrajectorySink
 from repro.drl.rollout import Trajectory
+from repro.testing import faults
 
 try:
     import zstandard as zstd
@@ -107,8 +108,14 @@ class DatasetSink(TrajectorySink):
     # -- manifest ------------------------------------------------------------
 
     def _flush_manifest(self) -> None:
-        atomic_write_text(self.root / MANIFEST_NAME,
-                          json.dumps(self._man, indent=1, sort_keys=True))
+        def on_retry(attempt_no, exc):
+            self.retries += 1
+
+        retry_io(lambda: atomic_write_text(
+                     self.root / MANIFEST_NAME,
+                     json.dumps(self._man, indent=1, sort_keys=True)),
+                 path=self.root / MANIFEST_NAME, what="dataset manifest",
+                 on_retry=on_retry)
 
     def annotate(self, **meta) -> None:
         """Record run-level metadata (``train_state.run_metadata`` + seed)
@@ -139,14 +146,26 @@ class DatasetSink(TrajectorySink):
         name = self._current_shard()
         offset = self._man["shards"].get(name, 0)
         path = self.root / name
-        # r+b at the committed offset (NOT append mode): overwrites any
-        # un-indexed tail a previous SIGKILL left behind
-        with open(path, "r+b" if path.exists() else "wb") as f:
-            f.seek(offset)
-            f.write(_LEN.pack(len(blob)))
-            f.write(blob)
-            f.flush()
-            os.fsync(f.fileno())
+
+        def append():
+            faults.maybe_fail_io(str(path))
+            # r+b at the committed offset (NOT append mode): overwrites any
+            # un-indexed tail a previous SIGKILL left behind — which also
+            # makes a retried attempt idempotent (it re-seeks and rewrites
+            # the same committed offset)
+            with open(path, "r+b" if path.exists() else "wb") as f:
+                f.seek(offset)
+                f.write(_LEN.pack(len(blob)))
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+
+        def on_retry(attempt_no, exc):
+            self.retries += 1
+
+        retry_io(append, path=path,
+                 what=f"dataset shard append (episode {episode})",
+                 on_retry=on_retry)
         n = _LEN.size + len(blob)
         self._man["episodes"][str(episode)] = {
             "shard": name, "offset": offset, "length": len(blob),

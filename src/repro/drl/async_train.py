@@ -33,7 +33,8 @@ from repro.drl.ppo import PPOConfig, make_optimizer
 def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
                 st0_b, obs0_b, *, n_envs: int, horizon: int, episodes: int,
                 seed: int = 0, sink=None, ckpt_dir: Optional[str] = None,
-                ckpt_every: int = 10, ckpt_keep: int = 3, resume=None):
+                ckpt_every: int = 10, ckpt_keep: int = 3, resume=None,
+                watchdog=True, _rollbacks: int = 0):
     """Stale-gradient PPO: updates always consume the PREVIOUS episode's
     trajectories (collected under the then-current policy).
 
@@ -42,7 +43,16 @@ def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
     episodes (without breaking the collect/update overlap — the one
     in-flight update is not part of the snapshot, see
     ``RolloutEngine.run_async``), and ``resume`` restarts from a checkpoint
-    path / directory / "auto".  ``episodes`` is the TOTAL target."""
+    path / directory / "auto".  ``episodes`` is the TOTAL target.
+
+    ``watchdog`` mirrors ``TrainConfig.watchdog``: the overlapped loop
+    discards update metrics, so the async watchdog screens the per-episode
+    return (plus injected faults) and rolls back to the last checkpoint —
+    or restarts fresh without ``ckpt_dir`` — bounded by
+    ``WatchdogConfig.max_rollbacks``."""
+    from repro.drl.health import DivergenceError
+    from repro.drl.train import resolve_watchdog
+    wd = resolve_watchdog(watchdog)
     engine = RolloutEngine(
         env_step_fn,
         EngineConfig(n_envs=n_envs, horizon=horizon,
@@ -81,8 +91,16 @@ def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
     ckpter = (ckpt_mod.AsyncCheckpointer(ckpt_dir, keep=ckpt_keep)
               if ckpt_dir else None)
 
-    def on_episode(traj, _):
-        rewards.append(float(jnp.mean(jnp.sum(traj.reward, axis=1))))
+    def on_episode(traj, metrics):
+        r = float(jnp.mean(jnp.sum(traj.reward, axis=1)))
+        rewards.append(r)
+        if wd is not None:
+            ep = len(rewards) - 1
+            reason = wd.observe(None, episode=ep)
+            if reason is None and not np.isfinite(r):
+                reason = f"non-finite episode return ({r})"
+            if reason is not None:
+                raise DivergenceError(ep, reason)
 
     def on_state(carry):
         done = engine.episode         # episodes collected so far
@@ -94,15 +112,33 @@ def train_async(env_step_fn, pcfg: networks.PolicyConfig, ppo_cfg: PPOConfig,
                     metadata=ts_mod.state_metadata(
                         snap, {"n_envs": n_envs, "horizon": horizon}))
 
+    divergence = None
     try:
         params, _, _ = engine.run_async(
             params, opt_state, ppo_cfg, optimizer, st0_b, obs0_b, key,
             remaining, step=step, on_episode=on_episode,
             on_state=on_state if ckpter is not None else None,
             state_every=ckpt_every)
+    except DivergenceError as e:
+        divergence = e
     finally:
         if ckpter is not None:
             ckpter.close()
+
+    if divergence is not None:
+        max_rb = wd.cfg.max_rollbacks if wd else 0
+        if _rollbacks >= max_rb:
+            raise RuntimeError(
+                f"async training diverged and {_rollbacks} rollback(s) did "
+                f"not clear it ({divergence}); a deterministic divergence "
+                f"replays identically — adjust the PPO config or raise "
+                f"WatchdogConfig.max_rollbacks") from divergence
+        return train_async(
+            env_step_fn, pcfg, ppo_cfg, st0_b, obs0_b, n_envs=n_envs,
+            horizon=horizon, episodes=episodes, seed=seed, sink=sink,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, ckpt_keep=ckpt_keep,
+            resume="auto" if ckpt_dir else None, watchdog=watchdog,
+            _rollbacks=_rollbacks + 1)
     return params, np.asarray(rewards)
 
 

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.ckpt.io import atomic_write_bytes
+from repro.ckpt.io import atomic_write_bytes, retry_io
+from repro.testing import faults
 from repro.core import backend as backend_mod
 from repro.core.interface import pack_arrays, unpack_arrays
 from repro.drl import networks, rollout
@@ -86,6 +87,7 @@ class TrajectorySink:
         self.episodes = 0
         self.bytes_written = 0
         self.time_spent = 0.0
+        self.retries = 0      # transient write errors recovered by retry
 
     def write(self, episode: int, traj: Trajectory) -> int:
         t0 = time.perf_counter()
@@ -182,7 +184,18 @@ class FileSink(TrajectorySink):
         arrays = {f: np.asarray(a) for f, a in zip(Trajectory._fields, traj)
                   if a is not None}
         blob = pack_arrays(arrays, cctx=self._cctx)
-        return atomic_write_bytes(self._path(episode), blob)
+        path = self._path(episode)
+
+        def attempt():
+            faults.maybe_fail_io(str(path))
+            return atomic_write_bytes(path, blob)
+
+        def on_retry(attempt_no, exc):
+            self.retries += 1
+
+        return retry_io(attempt, path=path,
+                        what=f"trajectory spill (episode {episode})",
+                        on_retry=on_retry)
 
     def _available(self) -> str:
         pat = "traj_*.bin" if self.process is None \
@@ -548,11 +561,16 @@ class RolloutEngine:
             values = networks.value(params, traj.obs, aux_t)     # (N, T)
             last_v = networks.value(params, traj.last_obs, aux_n)  # (N,)
             adv, ret = gae_batch(traj.reward, values, last_v,
-                                 gamma=cfg.gamma, lam=cfg.lam)
+                                 gamma=cfg.gamma, lam=cfg.lam,
+                                 valid=traj.valid)
             flat = lambda x: x.reshape((-1,) + x.shape[2:])
             batch = Batch(obs=flat(traj.obs), act=flat(traj.act),
                           logp_old=flat(traj.logp), adv=flat(adv),
                           ret=flat(ret))
+            if traj.valid is not None:
+                # sentinel mask rides per-sample so PPO's shuffled
+                # minibatches keep each row's validity with it
+                batch = batch._replace(valid=flat(traj.valid))
             if traj.probe_mask is not None:
                 # PPO minibatching permutes rows, so each sample carries its
                 # own layout row (broadcast across the episode, then flat)

@@ -6,24 +6,44 @@ import jax.numpy as jnp
 
 
 def gae(rewards, values, last_value, *, gamma: float = 0.99,
-        lam: float = 0.95):
+        lam: float = 0.95, valid=None):
     """rewards: (T,), values: (T,), last_value: () -> (advantages, returns).
 
     Episodes here are fixed-length (the paper's 100 actuation periods), so no
     done-masking is needed; bootstrap with V(s_T).
+
+    ``valid`` (optional, (T,) of 1.0/0.0 from the divergence sentinel) masks
+    quarantined transitions: an invalid step's advantage is zeroed AND the
+    recursion is cut through it, so a quarantine reset acts like an episode
+    boundary — advantages never propagate across the discontinuity.  An
+    all-ones mask multiplies by 1.0 (exact), keeping healthy batches
+    bitwise-identical to the unmasked path.
     """
     v_next = jnp.concatenate([values[1:], last_value[None]])
     deltas = rewards + gamma * v_next - values
 
-    def step(carry, delta):
-        adv = delta + gamma * lam * carry
+    if valid is None:
+        def step(carry, delta):
+            adv = delta + gamma * lam * carry
+            return adv, adv
+
+        _, advs = jax.lax.scan(step, jnp.float32(0.0), deltas, reverse=True)
+        return advs, advs + values
+
+    def step_masked(carry, dm):
+        delta, m = dm
+        adv = m * (delta + gamma * lam * carry)
         return adv, adv
 
-    _, advs = jax.lax.scan(step, jnp.float32(0.0), deltas, reverse=True)
+    _, advs = jax.lax.scan(step_masked, jnp.float32(0.0),
+                           (deltas, valid), reverse=True)
     return advs, advs + values
 
 
-def gae_batch(rewards, values, last_values, **kw):
+def gae_batch(rewards, values, last_values, *, valid=None, **kw):
     """(N_env, T) batched version."""
-    return jax.vmap(lambda r, v, lv: gae(r, v, lv, **kw))(
-        rewards, values, last_values)
+    if valid is None:
+        return jax.vmap(lambda r, v, lv: gae(r, v, lv, **kw))(
+            rewards, values, last_values)
+    return jax.vmap(lambda r, v, lv, m: gae(r, v, lv, valid=m, **kw))(
+        rewards, values, last_values, valid)

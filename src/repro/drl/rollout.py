@@ -24,6 +24,7 @@ class Trajectory(NamedTuple):
     last_obs: jnp.ndarray  # (obs_dim,)
     probe_xy: jnp.ndarray = None    # (obs_dim, 2) normalized probe coords
     probe_mask: jnp.ndarray = None  # (obs_dim,) 1 = live probe slot
+    valid: jnp.ndarray = None       # (T,) 1 = healthy step (sentinel mask)
 
 
 def rollout_episode(env_step_fn, params, st0, obs0, key, length: int,
@@ -42,13 +43,16 @@ def rollout_episode(env_step_fn, params, st0, obs0, key, length: int,
         # vector (multi-body) envs take the whole action vector
         a = act[0] if act.shape[0] == 1 else act
         st, out = env_step_fn(st, a)
-        return (st, out.obs), (obs, act, logp, out.reward, out.cd, out.cl)
+        # toy/test envs predating the sentinel carry no ``valid`` at all;
+        # None threads through lax.scan as an empty subtree either way
+        return (st, out.obs), (obs, act, logp, out.reward, out.cd, out.cl,
+                               getattr(out, "valid", None))
 
     keys = jax.random.split(key, length)
-    (st, last_obs), (obs, act, logp, rew, cd, cl) = jax.lax.scan(
+    (st, last_obs), (obs, act, logp, rew, cd, cl, valid) = jax.lax.scan(
         step, (st0, obs0), keys)
     traj = Trajectory(obs=obs, act=act, logp=logp, reward=rew,
-                      cd=cd, cl=cl, last_obs=last_obs)
+                      cd=cd, cl=cl, last_obs=last_obs, valid=valid)
     if aux0 is not None:
         traj = traj._replace(probe_xy=aux0["xy"], probe_mask=aux0["mask"])
     return st, traj
@@ -58,7 +62,10 @@ def rollout_batch(env_step_fn, params, st0_b, obs0_b, key, length: int,
                   n_envs: int, *, obs_aux_fn=None):
     """vmapped over the environment axis (the paper's N_envs parallelism)."""
     keys = jax.random.split(key, n_envs)
+    # axis_name lets the fault injector address a single env via
+    # ``jax.lax.axis_index("env")``; with no collectives in the program it
+    # is otherwise inert
     return jax.vmap(
         lambda st, obs, k: rollout_episode(env_step_fn, params, st, obs, k,
-                                           length, obs_aux_fn=obs_aux_fn)
-        )(st0_b, obs0_b, keys)
+                                           length, obs_aux_fn=obs_aux_fn),
+        axis_name="env")(st0_b, obs0_b, keys)

@@ -21,6 +21,7 @@ re-derived from ``cfg.seed`` mid-run.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -36,9 +37,18 @@ from repro.drl import train_state as ts_mod
 from repro.drl.engine import (EngineConfig, RolloutEngine, SinkSpec,
                               TrajectorySink, broadcast_env_state,
                               place_env_batch)
+from repro.drl.health import DivergenceError, Watchdog, WatchdogConfig
 from repro.drl.ppo import PPOConfig, make_optimizer
 from repro.drl.train_state import HISTORY_FIELDS, TrainState
 from repro.launch import distributed as dist_mod
+
+
+def resolve_watchdog(spec) -> Optional[Watchdog]:
+    """TrainConfig.watchdog -> Watchdog | None (shared with train_async)."""
+    if not spec:
+        return None
+    return Watchdog(spec if isinstance(spec, WatchdogConfig)
+                    else WatchdogConfig())
 
 
 @dataclass
@@ -89,16 +99,28 @@ class TrainConfig:
     # engine path so runs are bitwise-comparable across fleet sizes).
     # Requires a plan; only process 0 logs and writes checkpoints.
     fleet: Optional[bool] = None
+    # training-health watchdog (drl/health.py): True = default thresholds,
+    # a WatchdogConfig for custom ones, False/None = off.  On a trip the
+    # run rolls back to the last healthy checkpoint (fresh restart when
+    # ckpt_dir is unset) and replays, bounded by max_rollbacks.
+    watchdog: Any = True
 
 
 def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
           interface=None, sink: Optional[TrajectorySink] = None,
           on_episode: Optional[Callable] = None,
+          health: Optional[Dict[str, Any]] = None,
+          _rollbacks: int = 0, _sink_retries0: int = 0,
           ) -> Tuple[Dict[str, np.ndarray], Any]:
     """Returns (history dict of per-episode arrays, trained params).
 
     ``on_episode(traj, metrics)`` is an extra per-episode hook (fleet
-    runners use it for heartbeats); it fires after the built-in logging."""
+    runners use it for heartbeats); it fires after the built-in logging.
+    ``health`` (optional dict, filled in place) receives the self-healing
+    counters on return: quarantines, grad_skips, rollbacks, sink_retries —
+    the same numbers stored under ``"health"`` in checkpoint metadata.
+    ``_rollbacks``/``_sink_retries0`` are internal: the watchdog-rollback
+    retry depth and the retries counted by pre-rollback engine sinks."""
     resolved = mesh = None
     backend = None
     n_envs = cfg.n_envs
@@ -213,10 +235,30 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
 
     hist = {f: [float(x) for x in np.asarray(ts.history.get(f, ()))]
             for f in HISTORY_FIELDS}
+    # checkpoints written before the health counters existed (or truncated
+    # by a mid-episode crash) restore with short columns: zero-pad to the
+    # reward column's length — healthy episodes logged zeros anyway
+    for f in HISTORY_FIELDS:
+        if len(hist[f]) < len(hist["reward"]):
+            hist[f] += [0.0] * (len(hist["reward"]) - len(hist[f]))
     ep0 = int(ts.episode)
     engine.episode = ep0              # sink episode ids continue, not restart
+    watchdog = resolve_watchdog(cfg.watchdog)
+    if health is None:
+        health = {}
+
+    def fill_health() -> Dict[str, Any]:
+        health.update(
+            quarantines=int(round(sum(hist["quarantines"]))),
+            grad_skips=int(round(sum(hist["grad_skips"]))),
+            rollbacks=int(_rollbacks),
+            sink_retries=_sink_retries0 + (int(engine.sink.retries)
+                                           if engine.sink else 0))
+        return dict(health)
+
     remaining = cfg.episodes - ep0
     if remaining <= 0:
+        fill_health()
         if log_fn:
             log_fn(f"checkpoint already has {ep0} episodes >= target "
                    f"{cfg.episodes}; nothing to train")
@@ -246,12 +288,32 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
         now = time.time()
         hist["wall"].append(now - t_ep[0])
         t_ep[0] = now
+        # self-healing counters: quarantined env-steps from the sentinel
+        # mask, rejected updates from the learner guard
+        quar = (0.0 if traj.valid is None
+                else float(jnp.sum(1.0 - traj.valid)))
+        skips = 0.0 if metrics is None else float(metrics.get("grad_skips",
+                                                              0.0))
+        hist["quarantines"].append(quar)
+        hist["grad_skips"].append(skips)
+        if log_fn and (quar or skips):
+            log_fn(f"ep {ep:4d}  health: {quar:.0f} env-step(s) "
+                   f"quarantined, {skips:.0f} update(s) skipped")
         if log_fn and (ep % max(1, cfg.episodes // 20) == 0
                        or ep == cfg.episodes - 1):
             log_fn(f"ep {ep:4d}  return {r:+8.3f}  CD(tail) {cd:.3f}  "
                    f"|CL| {cl:.3f}  {hist['wall'][-1]:.1f}s")
         if ep_hook is not None:
             ep_hook(traj, metrics)
+        if watchdog is not None:
+            mf = (None if metrics is None
+                  else {k: float(v) for k, v in metrics.items()})
+            reason = watchdog.observe(mf, episode=ep)
+            if reason is not None:
+                # raised BEFORE on_state fires for this episode, so the
+                # anomalous state is never checkpointed — the latest
+                # checkpoint on disk is by construction a healthy one
+                raise DivergenceError(ep, reason)
 
     def on_state(carry):
         if ckpter is None:
@@ -267,8 +329,10 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                           history={f: np.asarray(hist[f])
                                    for f in HISTORY_FIELDS})
         ckpter.save(done, ts_mod.to_tree(snap),
-                    metadata=ts_mod.state_metadata(snap, run_meta))
+                    metadata=ts_mod.state_metadata(
+                        snap, {**run_meta, "health": fill_health()}))
 
+    divergence: Optional[DivergenceError] = None
     try:
         params, _, _ = engine.run_sync(ts.params, ts.opt_state, cfg.ppo,
                                        optimizer, ts.env_state, ts.obs,
@@ -276,6 +340,8 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                                        on_batch=on_batch,
                                        on_episode=on_episode,
                                        on_state=on_state)
+    except DivergenceError as e:
+        divergence = e
     finally:
         if ckpter is not None:
             ckpter.close()            # drain the in-flight write
@@ -284,4 +350,35 @@ def train(cfg: TrainConfig, *, log_fn: Optional[Callable] = print,
                        f"{ckpter.bytes_written / 1e6:.2f} MB -> "
                        f"{cfg.ckpt_dir} ({ckpter.time_blocked:.2f}s "
                        f"caller-visible)")
+
+    if divergence is not None:
+        # roll back to the last healthy checkpoint (the anomalous episode
+        # was never saved) and replay; without a ckpt_dir the retry is a
+        # fresh restart.  Deterministic divergences replay identically and
+        # exhaust the retry budget — the error below says so.
+        max_rb = watchdog.cfg.max_rollbacks if watchdog else 0
+        if _rollbacks >= max_rb:
+            raise RuntimeError(
+                f"training diverged and {_rollbacks} rollback(s) to the "
+                f"last healthy checkpoint did not clear it ({divergence}); "
+                f"a deterministic divergence replays identically — lower "
+                f"the learning rate / tighten PPO clipping, or raise "
+                f"WatchdogConfig.max_rollbacks if the trigger is transient"
+            ) from divergence
+        if log_fn:
+            log_fn(f"watchdog: {divergence}; rolling back "
+                   f"(retry {_rollbacks + 1}/{max_rb})")
+        retry_cfg = dataclasses.replace(
+            cfg, resume="auto" if cfg.ckpt_dir else None)
+        # a cfg-built sink dies with this engine, so its retry count must be
+        # carried forward; an explicit ``sink=`` object survives the
+        # recursion and keeps its own count (no double-counting)
+        prior = (0 if sink is not None
+                 else _sink_retries0 + (int(engine.sink.retries)
+                                        if engine.sink else 0))
+        return train(retry_cfg, log_fn=log_fn, interface=interface,
+                     sink=sink, on_episode=ep_hook, health=health,
+                     _rollbacks=_rollbacks + 1, _sink_retries0=prior)
+
+    fill_health()
     return {k: np.asarray(v) for k, v in hist.items()}, params

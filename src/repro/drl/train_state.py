@@ -38,7 +38,10 @@ from repro.cfd.solver import FlowState
 from repro.ckpt import checkpoint as ckpt
 
 TRAIN_STATE_SCHEMA = "repro.train_state/v1"
-HISTORY_FIELDS = ("reward", "cd", "cl", "wall")
+# quarantines/grad_skips are the self-healing health counters; checkpoints
+# written before they existed restore with zero-filled columns (healthy runs
+# logged zeros anyway), see train()'s history padding
+HISTORY_FIELDS = ("reward", "cd", "cl", "wall", "quarantines", "grad_skips")
 
 # metadata fields that must match bit-for-bit between checkpoint and config;
 # "plan" is deliberately absent (cross-plan resume re-shards the env batch).
@@ -93,6 +96,9 @@ def to_tree(ts: TrainState) -> Dict[str, Any]:
                 "scn": {k: v for k, v in st.scn._asdict().items()
                         if v is not None},
             }
+            if st.reset_flow is not None:   # sentinel quarantine flow
+                tree["env_state"]["reset_flow"] = dict(
+                    st.reset_flow._asdict())
         else:
             # engine-level loops (toy envs, tests) carry arbitrary pytrees
             tree["env_state"] = st
@@ -129,11 +135,14 @@ def from_tree(tree: Dict[str, Any], *, typed_key: bool = False) -> TrainState:
     env_state = None
     if "env_state" in tree:
         st = tree["env_state"]
-        if isinstance(st, dict) and set(st) == {"flow", "jet_vel", "t",
-                                                "scn"}:
-            env_state = EnvState(flow=FlowState(**st["flow"]),
-                                 jet_vel=st["jet_vel"], t=st["t"],
-                                 scn=ScenarioParams(**st["scn"]))
+        base = {"flow", "jet_vel", "t", "scn"}
+        if isinstance(st, dict) and base <= set(st) <= base | {"reset_flow"}:
+            env_state = EnvState(
+                flow=FlowState(**st["flow"]),
+                jet_vel=st["jet_vel"], t=st["t"],
+                scn=ScenarioParams(**st["scn"]),
+                reset_flow=(FlowState(**st["reset_flow"])
+                            if "reset_flow" in st else None))
         else:
             env_state = st
     key = tree["key"]

@@ -196,6 +196,9 @@ def read_heartbeats(root: str) -> Dict[int, Dict]:
     for path in sorted(Path(root).glob("hb_*.json")):
         try:
             rec = json.loads(path.read_text())
+            # supervisor-side observation of the write (its own clock) —
+            # the skew-tolerant half of the staleness check below
+            rec["_mtime"] = path.stat().st_mtime
             out[int(rec["process"])] = rec
         except (OSError, ValueError, KeyError):
             continue          # mid-replace or garbage: treat as absent
@@ -206,11 +209,25 @@ def stale_processes(root: str, num_processes: int, timeout: float,
                     now: Optional[float] = None) -> List[int]:
     """Process ids whose heartbeat is older than ``timeout`` seconds (a
     runner that never heartbeated at all only counts once the fleet has
-    been up longer than the timeout — compile time is not a hang)."""
+    been up longer than the timeout — compile time is not a hang).
+
+    Clock-skew tolerant: a beat's age is measured BOTH by the wall time the
+    runner stamped into the payload and by the file mtime the supervisor's
+    filesystem observed, and the beat is stale only when the *smaller* of
+    the two exceeds the timeout.  A runner whose clock lags (payload looks
+    ancient) is saved by a fresh mtime; a supervisor whose clock lags
+    (mtime looks ancient, e.g. across NFS) is saved by a fresh payload — a
+    truly hung runner ages on both."""
     now = time.time() if now is None else now
     beats = read_heartbeats(root)
+
+    def age(rec) -> float:
+        payload_age = now - rec["time"]
+        mtime_age = now - rec.get("_mtime", rec["time"])
+        return min(payload_age, mtime_age)
+
     return [p for p in range(num_processes)
-            if p in beats and now - beats[p]["time"] > timeout]
+            if p in beats and age(beats[p]) > timeout]
 
 
 class HeartbeatReporter:

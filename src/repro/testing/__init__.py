@@ -1,0 +1,3 @@
+"""Testing utilities: deterministic fault injection for the self-healing
+training path (see :mod:`repro.testing.faults`)."""
+from repro.testing import faults  # noqa: F401

@@ -1,0 +1,129 @@
+"""Deterministic fault injection for the self-healing training stack.
+
+Every recovery path in the trainer (per-env quarantine, non-finite-gradient
+skip, watchdog rollback, sink retry, checkpoint-crash recovery) is exercised
+in CI through this module rather than trusted on faith.  Faults are
+configured either programmatically (:func:`configure`) or through the
+``REPRO_FAULTS`` environment variable holding a JSON object, e.g.::
+
+    REPRO_FAULTS='{"nan_env": {"env": 1, "step": 4}, "grad_nan": {"step": 6}}'
+
+Supported fault kinds:
+
+``nan_env``
+    Poison the velocity field of env ``env`` at env-step ``step`` with NaN
+    before the solver interval.  Read at trace time by ``env_step``; the
+    match itself is traced, so a single jitted program covers both the
+    firing and non-firing steps.  ``step`` is the within-episode actuation
+    counter (``EnvState.t``), which restarts at 0 every episode — the fault
+    therefore fires once per episode (expected quarantines = episodes run
+    with the fault armed).
+``grad_nan``
+    Corrupt the gradients of the PPO minibatch whose update-step counter
+    equals ``step``.  Read at trace time by ``ppo_update``.  The PPO step
+    counter is monotonic across the whole run (it indexes Adam bias
+    correction), so this fires exactly once.
+``watchdog``
+    Force the training watchdog to trip at episode ``episode`` (host-side,
+    consumed once).
+``sink_oserror``
+    Make the next ``times`` (default 1) sink writes raise ``OSError``
+    (host-side, decremented per raise).
+``ckpt_crash``
+    Crash (``OSError``) the checkpoint write for step ``step`` just before
+    its atomic rename, leaving a stale ``*.tmp`` behind — exactly the
+    torn-write shape ``latest_checkpoint`` must recover from.  Host-side,
+    consumed once.
+
+Trace-time faults (``nan_env``, ``grad_nan``) must be configured *before*
+the jitted training program is built — they are baked into the trace.
+Host-side faults can be (re)configured at any point.  :func:`reset` clears
+everything; the test suite calls it between tests.
+
+This module is stdlib-only on purpose: importing it must never pull in JAX.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+ENV_FAULTS = "REPRO_FAULTS"
+
+_spec: Dict[str, Dict[str, Any]] = {}
+_loaded_env = False
+
+
+def configure(spec: Optional[Dict[str, Dict[str, Any]]]) -> None:
+    """Install a fault spec programmatically (replaces any active spec)."""
+    global _spec, _loaded_env
+    _spec = {k: dict(v) for k, v in (spec or {}).items()}
+    _loaded_env = True   # explicit config wins over the environment
+
+
+def reset() -> None:
+    """Clear all faults and re-arm environment-variable loading."""
+    global _spec, _loaded_env
+    _spec = {}
+    _loaded_env = False
+
+
+def _load() -> Dict[str, Dict[str, Any]]:
+    global _spec, _loaded_env
+    if not _loaded_env:
+        _loaded_env = True
+        raw = os.environ.get(ENV_FAULTS)
+        if raw:
+            try:
+                parsed = json.loads(raw)
+            except ValueError as e:
+                raise ValueError(
+                    f"{ENV_FAULTS} is not valid JSON: {raw!r} ({e})") from e
+            if not isinstance(parsed, dict):
+                raise ValueError(
+                    f"{ENV_FAULTS} must be a JSON object mapping fault kind "
+                    f"to parameters, got: {raw!r}")
+            _spec = {k: dict(v) for k, v in parsed.items()}
+    return _spec
+
+
+def active(kind: str) -> Optional[Dict[str, Any]]:
+    """Return the parameters for ``kind`` if armed, else None.
+
+    Used at trace time by the jitted paths; also usable host-side for a
+    non-consuming peek.
+    """
+    return _load().get(kind)
+
+
+def consume(kind: str, **match: Any) -> bool:
+    """Host-side check-and-consume for one-shot faults.
+
+    Returns True when ``kind`` is armed and every keyword matches the spec
+    (missing spec keys match anything); the fault is then disarmed.  A
+    ``times`` counter in the spec allows multiple firings.
+    """
+    spec = _load().get(kind)
+    if spec is None:
+        return False
+    for k, v in match.items():
+        if k in spec and spec[k] != v:
+            return False
+    times = int(spec.get("times", 1)) - 1
+    if times <= 0:
+        _spec.pop(kind, None)
+    else:
+        spec["times"] = times
+    return True
+
+
+def maybe_fail_io(path: str) -> None:
+    """Raise OSError if a ``sink_oserror`` fault is armed (consumes one)."""
+    if consume("sink_oserror"):
+        raise OSError(f"injected sink_oserror for {path}")
+
+
+def maybe_crash_ckpt(step: int, path: str) -> None:
+    """Raise OSError if a ``ckpt_crash`` fault matches this checkpoint step."""
+    if consume("ckpt_crash", step=int(step)):
+        raise OSError(f"injected ckpt_crash at step {step} for {path}")

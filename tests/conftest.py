@@ -22,5 +22,8 @@ def _reset_warning_caches():
     """Warn-once caches are process-global; without this reset, any test
     asserting a once-per-shape warning depends on execution order."""
     from repro.core import backend as backend_mod
+    from repro.testing import faults
     backend_mod.reset_warning_caches()
+    faults.reset()
     yield
+    faults.reset()      # a test that armed faults must not leak them

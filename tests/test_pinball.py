@@ -91,7 +91,8 @@ def test_jets_require_cylinder():
 
 
 def test_batch_params_action_padding():
-    p = S.batch_params(["cyl_re100", "pinball_re100"], GRID)
+    p = S.batch_params(["cyl_re100", "pinball_re100"], GRID,
+                       cd0s=["nan", "nan"])
     assert p.act_mask.shape == (2, 3)
     np.testing.assert_array_equal(np.asarray(p.act_mask),
                                   [[1, 0, 0], [1, 1, 1]])

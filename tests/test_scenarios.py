@@ -70,15 +70,25 @@ def test_env_config_for_scenario():
 
 
 def test_batch_params_padding():
-    params = S.batch_params(["cyl_re100_sparse8", "cyl_re100"], GRID)
+    params = S.batch_params(["cyl_re100_sparse8", "cyl_re100"], GRID,
+                            cd0s=["nan", "nan"])
     assert params.probe_ij.shape == (2, 149, 2)
     np.testing.assert_array_equal(np.asarray(params.probe_mask).sum(1),
                                   [8.0, 149.0])
-    # no calibration supplied and none pinned by the scenario -> NaN, so a
-    # reward against an uncalibrated baseline fails loudly, not as cd0=0
+    # the explicit cd0="nan" escape hatch: an intentionally uncalibrated
+    # baseline stays NaN (so rewards against it fail loudly, not as cd0=0)
     assert np.isnan(np.asarray(params.cd0)).all()
     with pytest.raises(ValueError, match="obs_dim"):
         S.batch_params(["cyl_re100"], GRID, obs_dim=10)
+
+
+def test_missing_cd0_raises_actionable_error():
+    # no cd0 pinned on the scenario and no caller override: an actionable
+    # error naming the scenario, instead of the old silent-NaN footgun
+    with pytest.raises(ValueError, match="cyl_re100.*no cd0"):
+        S.batch_params(["cyl_re100_sparse8", "cyl_re100"], GRID)
+    with pytest.raises(ValueError, match='cd0 must be a float'):
+        S.scenario_params(S.get_scenario("cyl_re100"), GRID, cd0="whoops")
 
 
 # ---------------------------------------------------------------------------

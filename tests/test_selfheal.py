@@ -1,0 +1,500 @@
+"""Self-healing training: every recovery path exercised, not trusted.
+
+Layers, cheapest first:
+  * faults module + retry_io + watchdog + heartbeat skew: pure host-side
+    unit tests, no JAX programs.
+  * GAE mask / dual-path PPO loss / grad skip: the bitwise contract at the
+    function level — an all-healthy mask must reproduce the unguarded
+    program bit for bit, a poisoned gradient must reject the whole update.
+  * sentinel quarantine on a real env batch: a NaN-poisoned env is reset
+    from the warmup flow inside the vmapped program, its transition masked.
+  * train()-level: guard-on vs guard-off bitwise identity (the acceptance
+    gate), watchdog trip -> checkpoint rollback -> completed run, bounded
+    retries -> actionable error.
+  * durability: sink OSError retry + exhaustion, checkpoint-crash fallback,
+    legacy checkpoints without health columns.
+"""
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cfd.env import CylinderEnv, EnvConfig
+from repro.cfd.grid import GridConfig
+from repro.ckpt import checkpoint as ck
+from repro.ckpt.io import retry_io
+from repro.drl import networks, train_state as ts_mod
+from repro.drl.engine import EngineConfig, FileSink, RolloutEngine
+from repro.drl.gae import gae, gae_batch
+from repro.drl.health import Watchdog, WatchdogConfig
+from repro.drl.ppo import (Batch, PPOConfig, make_optimizer, ppo_loss,
+                           ppo_update)
+from repro.drl.rollout import Trajectory
+from repro.drl.train import TrainConfig, train
+from repro.launch import distributed as dist_mod
+from repro.testing import faults
+
+GRID = GridConfig(res=5, dt=0.015, poisson_iters=20)
+
+
+def _tiny_cfg(episodes, ckpt_dir=None, **kw):
+    env_kw = {k: kw.pop(k) for k in ("guard",) if k in kw}
+    return TrainConfig(
+        env=EnvConfig(grid=GridConfig(res=6, dt=0.012, poisson_iters=30),
+                      steps_per_action=3, actions_per_episode=3,
+                      warmup_time=1.0, **env_kw),
+        ppo=PPOConfig(epochs=2, minibatches=2),
+        n_envs=2, episodes=episodes, seed=0, ckpt_dir=ckpt_dir,
+        ckpt_every=1, **kw)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness
+# ---------------------------------------------------------------------------
+
+def test_faults_configure_and_consume():
+    faults.configure({"watchdog": {"episode": 3}})
+    assert faults.active("watchdog") == {"episode": 3}
+    assert faults.active("nan_env") is None
+    assert not faults.consume("watchdog", episode=2)   # mismatch: not eaten
+    assert faults.active("watchdog") is not None
+    assert faults.consume("watchdog", episode=3)
+    assert faults.active("watchdog") is None           # one-shot: consumed
+    assert not faults.consume("watchdog", episode=3)
+
+
+def test_faults_times_counter():
+    faults.configure({"sink_oserror": {"times": 2}})
+    assert faults.consume("sink_oserror")
+    assert faults.consume("sink_oserror")
+    assert not faults.consume("sink_oserror")
+
+
+def test_faults_missing_keys_match_anything():
+    faults.configure({"watchdog": {}})
+    assert faults.consume("watchdog", episode=42)
+
+
+def test_faults_env_var(monkeypatch):
+    monkeypatch.setenv(faults.ENV_FAULTS,
+                       json.dumps({"grad_nan": {"step": 7}}))
+    faults.reset()                       # re-arm environment loading
+    assert faults.active("grad_nan") == {"step": 7}
+    monkeypatch.setenv(faults.ENV_FAULTS, "not json")
+    faults.reset()
+    with pytest.raises(ValueError, match="not valid JSON"):
+        faults.active("grad_nan")
+    monkeypatch.setenv(faults.ENV_FAULTS, "[1, 2]")
+    faults.reset()
+    with pytest.raises(ValueError, match="JSON object"):
+        faults.active("grad_nan")
+
+
+def test_retry_io_recovers_then_exhausts(tmp_path):
+    calls, sleeps, retries = [], [], []
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("disk hiccup")
+        return "ok"
+    out = retry_io(flaky, path=tmp_path / "f", sleep=sleeps.append,
+                   on_retry=lambda n, e: retries.append(n))
+    assert out == "ok" and len(calls) == 3
+    assert sleeps == [0.05, 0.1]         # exponential backoff
+    assert retries == [1, 2]
+    with pytest.raises(OSError, match="after 4 attempts"):
+        retry_io(lambda: (_ for _ in ()).throw(OSError("dead")),
+                 path=tmp_path / "g", sleep=lambda s: None)
+
+
+# ---------------------------------------------------------------------------
+# watchdog (host-side anomaly screen)
+# ---------------------------------------------------------------------------
+
+def _metrics(**kw):
+    base = {"policy_loss": 0.1, "value_loss": 1.0, "grad_norm": 0.5,
+            "approx_kl": 0.01}
+    base.update(kw)
+    return base
+
+
+def test_watchdog_nonfinite_and_kl_trip():
+    wd = Watchdog()
+    assert wd.observe(_metrics(), episode=0) is None
+    assert "non-finite" in wd.observe(_metrics(value_loss=float("nan")),
+                                      episode=1)
+    assert "approx_kl" in wd.observe(_metrics(approx_kl=99.0), episode=2)
+
+
+def test_watchdog_spike_needs_full_window():
+    wd = Watchdog(WatchdogConfig(window=3, spike_factor=10.0))
+    # window not full: a huge value is NOT a spike yet (no baseline)
+    assert wd.observe(_metrics(value_loss=500.0), episode=0) is None
+    for ep in (1, 2):
+        assert wd.observe(_metrics(), episode=ep) is None
+    reason = wd.observe(_metrics(value_loss=1e5), episode=3)
+    assert reason is not None and "spiked" in reason
+    # the anomalous episode was NOT folded into the baseline: a healthy
+    # episode right after still passes against the old median
+    assert wd.observe(_metrics(), episode=4) is None
+
+
+def test_watchdog_injected_fault():
+    faults.configure({"watchdog": {"episode": 1}})
+    wd = Watchdog()
+    assert wd.observe(_metrics(), episode=0) is None
+    assert wd.observe(_metrics(), episode=1) == "injected watchdog fault"
+    assert wd.observe(_metrics(), episode=1) is None   # consumed
+
+
+# ---------------------------------------------------------------------------
+# GAE mask + dual-path PPO loss: the bitwise contract at function level
+# ---------------------------------------------------------------------------
+
+def test_gae_mask_zeroes_and_cuts_recursion():
+    r = jnp.array([1.0, 2.0, 3.0, 4.0])
+    v = jnp.zeros(4)
+    adv_m, _ = gae(r, v, jnp.float32(0.0), gamma=0.9, lam=0.9,
+                   valid=jnp.array([1.0, 0.0, 1.0, 1.0]))
+    assert float(adv_m[1]) == 0.0                      # quarantined: zeroed
+    # the recursion is cut at the quarantine: step 0 sees NOTHING from the
+    # future (its advantage is its own delta, as if the episode ended there)
+    assert float(adv_m[0]) == pytest.approx(1.0)
+    # downstream of the cut the recursion is intact
+    adv_u, _ = gae(r, v, jnp.float32(0.0), gamma=0.9, lam=0.9)
+    np.testing.assert_array_equal(np.asarray(adv_m[2:]),
+                                  np.asarray(adv_u[2:]))
+
+
+def test_gae_all_ones_mask_bitwise():
+    key = jax.random.PRNGKey(0)
+    r = jax.random.normal(key, (3, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (3, 8))
+    lv = jax.random.normal(jax.random.fold_in(key, 2), (3,))
+    a0, ret0 = gae_batch(r, v, lv, gamma=0.99, lam=0.95)
+    a1, ret1 = gae_batch(r, v, lv, gamma=0.99, lam=0.95,
+                         valid=jnp.ones((3, 8)))
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(ret0), np.asarray(ret1))
+
+
+def _toy_batch(n=8, valid=None):
+    k = jax.random.PRNGKey(3)
+    ks = jax.random.split(k, 5)
+    return Batch(obs=jax.random.normal(ks[0], (n, 3)),
+                 act=jax.random.normal(ks[1], (n, 1)),
+                 logp_old=jax.random.normal(ks[2], (n,)),
+                 adv=jax.random.normal(ks[3], (n,)),
+                 ret=jax.random.normal(ks[4], (n,)),
+                 valid=valid)
+
+
+PCFG = networks.PolicyConfig(obs_dim=3, act_dim=1, hidden=16)
+
+
+def test_ppo_loss_all_valid_bitwise():
+    """An all-ones validity mask must reproduce the unmasked loss AND its
+    gradient bit for bit — the dual-path where(all_ok) select, not the
+    masked reductions, is what guarantees this (sum(x*m)/n fuses differently
+    from mean(x) inside the full loss graph)."""
+    params = networks.init_actor_critic(PCFG, jax.random.PRNGKey(0))
+    cfg = PPOConfig()
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b: ppo_loss(cfg, p, b)[0]))
+    l0, g0 = grad_fn(params, _toy_batch())
+    l1, g1 = grad_fn(params, _toy_batch(valid=jnp.ones(8)))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    _leaves_equal(g0, g1)
+    # and a genuinely masked batch differs (the mask is live, not ignored)
+    l2, _ = grad_fn(params, _toy_batch(
+        valid=jnp.array([1., 1., 0., 1., 1., 1., 0., 1.])))
+    assert float(l2) != float(l0)
+
+
+def test_grad_skip_rejects_poisoned_update():
+    """With epochs=1/minibatches=1 the single update IS the poisoned one:
+    the guard must leave params and optimizer moments bitwise untouched,
+    count the skip, and report grad_norm=0 (a handled fault, not a live
+    anomaly for the watchdog)."""
+    cfg = PPOConfig(epochs=1, minibatches=1)
+    params = networks.init_actor_critic(PCFG, jax.random.PRNGKey(0))
+    optimizer = make_optimizer(cfg)
+    opt_state = optimizer.init(params)
+    key = jax.random.PRNGKey(7)
+
+    faults.configure({"grad_nan": {"step": 0}})
+    p1, o1, step1, m1 = ppo_update(cfg, optimizer, params, opt_state,
+                                   _toy_batch(), key, jnp.int32(0))
+    _leaves_equal(p1, params)
+    _leaves_equal(o1, opt_state)
+    assert int(step1) == 1               # step indexes the schedule anyway
+    assert float(m1["grad_skips"]) == 1.0
+    assert float(m1["grad_norm"]) == 0.0
+
+    faults.reset()
+    p2, o2, _, m2 = ppo_update(cfg, optimizer, params, opt_state,
+                               _toy_batch(), key, jnp.int32(0))
+    assert float(m2["grad_skips"]) == 0.0
+    assert float(m2["grad_norm"]) > 0.0
+    # the clean update actually moved the params
+    moved = any(float(jnp.abs(a - b).max()) > 0
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert moved
+
+
+# ---------------------------------------------------------------------------
+# divergence sentinel on a real env batch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def guarded_batch():
+    env = CylinderEnv(EnvConfig(grid=GRID, steps_per_action=3,
+                                actions_per_episode=3, warmup_time=1.0))
+    st_b, obs_b = env.reset_batch(["cyl_re100"], n_envs=2)
+    return env, st_b, obs_b
+
+
+def test_sentinel_quarantines_poisoned_env(guarded_batch):
+    env, st_b, _ = guarded_batch
+    faults.configure({"nan_env": {"env": 1, "step": 1}})
+    vstep = jax.jit(jax.vmap(env.env_step, axis_name="env"))
+    acts = jnp.zeros(2, jnp.float32)
+
+    st_b, out = vstep(st_b, acts)                     # t=0: healthy
+    np.testing.assert_array_equal(np.asarray(out.valid), [1.0, 1.0])
+
+    st_b, out = vstep(st_b, acts)                     # t=1: env 1 poisoned
+    np.testing.assert_array_equal(np.asarray(out.valid), [1.0, 0.0])
+    assert float(out.reward[1]) == 0.0 and float(out.cd[1]) == 0.0
+    # the quarantined env was re-initialized from the cached warmup flow —
+    # bitwise, so its next episode-from-reset is the standard one
+    for got, ref in zip(jax.tree.leaves(st_b.flow),
+                        jax.tree.leaves(st_b.reset_flow)):
+        np.testing.assert_array_equal(np.asarray(got)[1], np.asarray(ref)[1])
+    assert float(st_b.jet_vel[1]) == 0.0
+    assert all(np.isfinite(np.asarray(a)).all()
+               for a in jax.tree.leaves(st_b.flow))
+
+    st_b, out = vstep(st_b, acts)                     # t=2: healed
+    np.testing.assert_array_equal(np.asarray(out.valid), [1.0, 1.0])
+    assert np.isfinite(np.asarray(out.reward)).all()
+
+
+def test_guard_off_keeps_legacy_program(guarded_batch):
+    env = CylinderEnv(EnvConfig(grid=GRID, steps_per_action=3,
+                                actions_per_episode=3, warmup_time=1.0,
+                                guard=False))
+    st_b, _ = env.reset_batch(["cyl_re100"], n_envs=2)
+    assert st_b.reset_flow is None
+    _, out = jax.jit(jax.vmap(env.env_step, axis_name="env"))(
+        st_b, jnp.zeros(2, jnp.float32))
+    assert out.valid is None
+
+
+def test_rollout_threads_valid_mask(guarded_batch):
+    env, st_b, obs_b = guarded_batch
+    faults.configure({"nan_env": {"env": 0, "step": 1}})
+    engine = RolloutEngine.for_env(env, EngineConfig(n_envs=2, horizon=3))
+    params = networks.init_actor_critic(
+        networks.PolicyConfig(obs_dim=int(obs_b.shape[-1])),
+        jax.random.PRNGKey(0))
+    batch, traj = engine.collect(params, st_b, obs_b, jax.random.PRNGKey(1))
+    assert traj.valid.shape == (2, 3)
+    assert float(traj.valid.sum()) == 5.0             # exactly one masked
+    assert float(traj.valid[0, 1]) == 0.0
+    assert batch.valid.shape == (6,)
+    assert float(batch.valid.sum()) == 5.0
+    # the poisoned transition never leaks NaN into the learner's batch
+    assert np.isfinite(np.asarray(batch.adv)).all()
+    assert np.isfinite(np.asarray(batch.ret)).all()
+
+
+# ---------------------------------------------------------------------------
+# train() level: bitwise identity + watchdog rollback
+# ---------------------------------------------------------------------------
+
+def test_guarded_training_bitwise_identical_when_healthy():
+    """The PR's acceptance gate: with no faults firing, guard=True training
+    produces bitwise-identical params to guard=False (the pre-sentinel
+    program)."""
+    _, params_on = train(_tiny_cfg(2), log_fn=None)
+    _, params_off = train(_tiny_cfg(2, guard=False), log_fn=None)
+    _leaves_equal(params_on, params_off)
+
+
+def test_watchdog_trip_rolls_back_and_completes(tmp_path):
+    d = str(tmp_path / "rb")
+    faults.configure({"watchdog": {"episode": 1}})
+    logs, health = [], {}
+    hist, params = train(_tiny_cfg(2, d), log_fn=logs.append, health=health)
+    assert any("rolling back" in l for l in logs), logs
+    assert any("resume:" in l for l in logs), logs    # replay from the ckpt
+    assert len(hist["reward"]) == 2
+    assert health["rollbacks"] == 1
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(params))
+    # the replayed run's checkpoint metadata carries the health counters
+    meta = ck.read_manifest(ck.latest_checkpoint(d))["metadata"]
+    assert meta["health"]["rollbacks"] == 1
+
+
+def test_watchdog_exhausts_rollbacks_actionable():
+    # a fault that trips EVERY attempt: deterministic divergence -> the
+    # bounded retries exhaust and the error says what to do about it
+    faults.configure({"watchdog": {"times": 99}})
+    with pytest.raises(RuntimeError, match="diverged.*rollback"):
+        train(_tiny_cfg(1, watchdog=WatchdogConfig(max_rollbacks=1)),
+              log_fn=None)
+
+
+def test_async_train_rolls_back(tmp_path):
+    from repro.drl.async_train import train_async
+
+    def toy_step(st, a):
+        new = st * 0.8 + jnp.array([0.5, 0.0, 0.0]) * a
+
+        class Out:
+            obs, reward = new, -jnp.sum(new[:1] ** 2)
+            cd = cl = jnp.float32(0)
+        return new, Out()
+
+    st0 = jnp.ones((4, 3)) * 2.0
+    d = str(tmp_path / "async")
+    faults.configure({"watchdog": {"episode": 2}})
+    pcfg = networks.PolicyConfig(obs_dim=3, act_dim=1, hidden=16)
+    ppo = PPOConfig(lr=1e-3, epochs=2, minibatches=2)
+    params, rs = train_async(toy_step, pcfg, ppo, st0, st0, n_envs=4,
+                             horizon=8, episodes=4, seed=0, ckpt_dir=d,
+                             ckpt_every=1)
+    assert len(rs) == 4
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# durability: sink retries, checkpoint crashes, legacy checkpoints
+# ---------------------------------------------------------------------------
+
+def _toy_traj(T=3):
+    z = jnp.zeros((2, T))
+    return Trajectory(obs=jnp.zeros((2, T, 3)), act=jnp.zeros((2, T, 1)),
+                      logp=z, reward=z, cd=z, cl=z,
+                      last_obs=jnp.zeros((2, 3)))
+
+
+def test_sink_retry_recovers_and_counts(tmp_path):
+    sink = FileSink(str(tmp_path / "spill"))
+    faults.configure({"sink_oserror": {"times": 2}})
+    sink.write(0, _toy_traj())
+    assert sink.retries == 2
+    out = sink.read(0)                   # the retried write landed intact
+    assert out.obs.shape == (2, 3, 3)
+
+
+def test_sink_retry_exhaustion_is_actionable(tmp_path):
+    sink = FileSink(str(tmp_path / "spill"))
+    faults.configure({"sink_oserror": {"times": 99}})
+    with pytest.raises(OSError, match="after 4 attempts"):
+        sink.write(0, _toy_traj())
+    assert not list((tmp_path / "spill").glob("traj_*"))
+
+
+def test_dataset_sink_retry(tmp_path):
+    from repro.data.trajectory_dataset import DatasetSink, TrajectoryReader
+    sink = DatasetSink(str(tmp_path / "ds"))
+    faults.configure({"sink_oserror": {"times": 1}})
+    sink.write(0, _toy_traj())
+    sink.close()
+    assert sink.retries >= 1
+    out = TrajectoryReader(str(tmp_path / "ds")).read(0)
+    assert out.obs.shape == (2, 3, 3)
+
+
+def test_ckpt_crash_falls_back_to_previous(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    p1 = ck.save_step(d, 1, tree)
+    faults.configure({"ckpt_crash": {"step": 2}})
+    with pytest.raises(OSError, match="injected ckpt_crash"):
+        ck.save_step(d, 2, tree)
+    # the torn write left a .tmp but no destination: resume falls back
+    assert not Path(ck.step_path(d, 2)).exists()
+    assert ck.latest_checkpoint(d) == p1
+    # the fault is consumed: the very next save of step 2 lands
+    p2 = ck.save_step(d, 2, tree)
+    assert ck.latest_checkpoint(d) == p2
+
+
+def test_legacy_checkpoint_without_health_columns(tmp_path):
+    """Checkpoints written before the health counters existed restore with
+    zero-padded quarantine/skip columns instead of a KeyError."""
+    d = str(tmp_path / "legacy")
+    train(_tiny_cfg(1, d), log_fn=None)
+    path = ck.latest_checkpoint(d)
+    arrays, manifest = ck.restore(path)
+    tree = ts_mod._nest(arrays)
+    del tree["history"]["quarantines"], tree["history"]["grad_skips"]
+    ck.save(path, tree, step=manifest["step"],
+            metadata=manifest["metadata"])
+    hist, _ = train(_tiny_cfg(2, d, resume=True), log_fn=None)
+    assert len(hist["reward"]) == 2
+    np.testing.assert_array_equal(hist["quarantines"], [0.0, 0.0])
+    np.testing.assert_array_equal(hist["grad_skips"], [0.0, 0.0])
+
+
+def test_train_state_reset_flow_roundtrip(guarded_batch):
+    _, st_b, obs_b = guarded_batch
+    ts = ts_mod.TrainState(
+        params={"w": jnp.ones(3)}, opt_state={"m": jnp.zeros(3)},
+        key=jax.random.PRNGKey(0), step=jnp.int32(5), episode=jnp.int32(2),
+        env_state=st_b, obs=obs_b,
+        history={f: np.zeros(2) for f in ts_mod.HISTORY_FIELDS})
+    back = ts_mod.from_tree(ts_mod.to_tree(ts))
+    assert back.env_state.reset_flow is not None
+    _leaves_equal(back.env_state.reset_flow, st_b.reset_flow)
+    # and a guard-off state (no reset_flow) round-trips to None, keeping
+    # pre-sentinel checkpoints loadable
+    st_off = st_b._replace(reset_flow=None)
+    back2 = ts_mod.from_tree(ts_mod.to_tree(ts._replace(env_state=st_off)))
+    assert back2.env_state.reset_flow is None
+
+
+# ---------------------------------------------------------------------------
+# heartbeat clock-skew hardening
+# ---------------------------------------------------------------------------
+
+def _stamp(root, process, payload_time):
+    path = dist_mod.heartbeat_path(str(root), process)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"process": process, "episode": 1,
+                                "pid": 1, "time": payload_time}))
+    return path
+
+
+def test_heartbeat_skew_tolerance(tmp_path):
+    now = time.time()
+    # runner clock lags 1000s behind: payload looks ancient, mtime is fresh
+    p = _stamp(tmp_path, 0, now - 1000.0)
+    assert dist_mod.stale_processes(str(tmp_path), 1, timeout=60.0,
+                                    now=now) == []
+    # supervisor clock leads (mtime looks ancient), payload is fresh
+    p1 = _stamp(tmp_path, 1, now)
+    os.utime(p1, (now - 1000.0, now - 1000.0))
+    assert dist_mod.stale_processes(str(tmp_path), 2, timeout=60.0,
+                                    now=now) == []
+    # a truly hung runner ages on BOTH clocks -> stale
+    os.utime(p, (now - 1000.0, now - 1000.0))
+    assert dist_mod.stale_processes(str(tmp_path), 2, timeout=60.0,
+                                    now=now) == [0]

@@ -1,0 +1,108 @@
+"""CI chaos smoke: train end-to-end under a deterministic fault schedule.
+
+Arms every injector the self-healing stack ships (repro.testing.faults) on
+one short training run and asserts the run COMPLETES with exactly the
+health counters the schedule predicts — no NaN params, no lost episodes:
+
+  nan_env {env 1, step 1}   poisons env 1 each episode (the within-episode
+                            step counter restarts per episode), so the
+                            sentinel must quarantine once per episode
+  grad_nan {step 5}         poisons one PPO minibatch gradient; the learner
+                            guard must reject exactly that update
+  sink_oserror {times 1}    the first trajectory spill fails once; the
+                            bounded retry must absorb it
+  watchdog {episode 1}      forces one watchdog trip; training must roll
+                            back to the last healthy checkpoint and replay
+
+Exits non-zero with a diff when any counter deviates from the schedule.
+
+    PYTHONPATH=src python tools/chaos_smoke.py
+"""
+import os
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+sys.path.insert(0, SRC)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax                                                  # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.cfd.env import EnvConfig                         # noqa: E402
+from repro.cfd.grid import GridConfig                       # noqa: E402
+from repro.ckpt import checkpoint as ck                     # noqa: E402
+from repro.drl.engine import SinkSpec                       # noqa: E402
+from repro.drl.ppo import PPOConfig                         # noqa: E402
+from repro.drl.train import TrainConfig, train              # noqa: E402
+from repro.testing import faults                            # noqa: E402
+
+EPISODES = 3
+# with epochs=2 x minibatches=2 the PPO step counter advances 4 per
+# episode: step 5 lands in episode 1, so the skip survives the watchdog
+# rollback replay of that same episode
+SCHEDULE = {
+    "nan_env": {"env": 1, "step": 1},
+    "grad_nan": {"step": 5},
+    "sink_oserror": {"times": 1},
+    "watchdog": {"episode": 1},
+}
+EXPECTED = {
+    "quarantines": EPISODES,    # nan_env fires once per episode
+    "grad_skips": 1,
+    "rollbacks": 1,
+    "sink_retries": 1,
+}
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="chaos_smoke_")
+    faults.configure(SCHEDULE)
+    cfg = TrainConfig(
+        env=EnvConfig(grid=GridConfig(res=6, dt=0.012, poisson_iters=30),
+                      steps_per_action=3, actions_per_episode=3,
+                      warmup_time=1.0),
+        ppo=PPOConfig(epochs=2, minibatches=2),
+        n_envs=2, episodes=EPISODES, seed=0,
+        ckpt_dir=os.path.join(tmp, "ckpt"), ckpt_every=1,
+        sink=SinkSpec(kind="binary", root=os.path.join(tmp, "spill")))
+
+    health = {}
+    hist, params = train(cfg, log_fn=print, health=health)
+
+    errors = []
+    if len(hist["reward"]) != EPISODES:
+        errors.append(f"training lost episodes: {len(hist['reward'])} "
+                      f"of {EPISODES} in the history")
+    for k in ("reward", "cd", "cl"):
+        if not np.isfinite(hist[k]).all():
+            errors.append(f"non-finite history column {k!r}: {hist[k]}")
+    bad = [k for k, v in health.items()
+           if k in EXPECTED and v != EXPECTED[k]]
+    for k in bad:
+        errors.append(f"health counter {k!r}: got {health[k]}, "
+                      f"schedule predicts {EXPECTED[k]}")
+    if any(not np.isfinite(np.asarray(x)).all()
+           for x in jax.tree.leaves(params)):
+        errors.append("trained params contain non-finite values")
+
+    # the counters must also land in the checkpoint metadata (the numbers
+    # an operator sees post-mortem, without the training process)
+    meta = ck.read_manifest(ck.latest_checkpoint(cfg.ckpt_dir))["metadata"]
+    if meta.get("health") != health:
+        errors.append(f"checkpoint metadata health {meta.get('health')} "
+                      f"!= returned health {health}")
+
+    if errors:
+        print("CHAOS_SMOKE_FAILED")
+        for e in errors:
+            print("  -", e)
+        return 1
+    print(f"health counters match the fault schedule: {health}")
+    print("CHAOS_SMOKE_OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

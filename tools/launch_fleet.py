@@ -19,7 +19,10 @@ the latest durable checkpoint on the smaller fleet, same plan, same bits.
 
 Machine-readable lines on stdout (tests/bench parse these):
     FLEET_SHRINK gen=<g> procs=<old>-><new> reason=<exit|stale>
-    FLEET_STATS {json}          (--mode bench, from process 0)
+    FLEET_STATS {json}          (from process 0: bench throughput in
+                                 --mode bench; train health counters —
+                                 quarantines / grad_skips / rollbacks /
+                                 sink_retries — in --mode train)
     FLEET_TIMING process=<p> rollout_s=<s> gather_s=<s>
                                 (--mode bench with REPRO_FLEET_TIMING=1:
                                  per-process rollout/gather wall split)
@@ -143,8 +146,16 @@ def run_runner(args) -> None:
     if args.mode == "bench":
         run_runner_bench(args, cfg, info, on_episode)
         return
+    health = {}
     hist, _ = train(cfg, log_fn=print if info.is_coordinator else None,
-                    on_episode=on_episode)
+                    on_episode=on_episode, health=health)
+    if info.is_coordinator:
+        print("FLEET_STATS " + json.dumps({
+            "mode": "train",
+            "processes": info.num_processes,
+            "episodes": len(hist["reward"]),
+            "health": health,
+        }), flush=True)
     print(f"RUNNER_DONE process={info.process_id} "
           f"episodes={len(hist['reward'])}", flush=True)
 
